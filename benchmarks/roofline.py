@@ -1,0 +1,141 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh, from experiments/dryrun/*.json:
+
+  compute    = FLOPs_chip / 197e12        (TPU v5e bf16 peak per chip)
+  memory     = bytes_chip / 819e9         (HBM bandwidth per chip)
+  collective = wire_bytes_chip / 50e9     (per-link ICI)
+
+FLOPs/bytes are the depth-extrapolated per-chip values (the dry-run
+lowers unrolled depth-1/2 variants because HLO cost analysis counts a
+lax.scan body once — dryrun.build_cell docstring).  MODEL_FLOPS uses
+6·N·D (dense) / 6·N_active·D (MoE) per training step, 2·N·D per
+prefill token set, 2·N per decoded token.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# active params (N or N_active) per arch, from the configs
+_ACTIVE_PARAMS = {}
+
+
+def active_params(arch: str) -> float:
+    if arch not in _ACTIVE_PARAMS:
+        from repro.configs import get_config
+        from repro.models.registry import get_model
+        import jax
+
+        cfg = get_config(arch)
+        api = get_model(cfg)
+        boxed = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        import jax.tree_util as jtu
+        from repro.nn.module import is_param, unbox
+
+        total = 0
+        active = 0
+        flat = jtu.tree_flatten_with_path(unbox(boxed))[0]
+        for path, leaf in flat:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            n = 1
+            for s in leaf.shape:
+                n *= s
+            total += n
+            if cfg.moe is not None and "/moe/w" in name:
+                # routed experts: only top_k of E are active per token
+                n = n * cfg.moe.top_k // cfg.moe.effective_experts
+            active += n
+        _ACTIVE_PARAMS[arch] = (total, active)
+    return _ACTIVE_PARAMS[arch]
+
+
+def model_flops(rec: dict) -> float:
+    """Global useful FLOPs for the step this record lowered."""
+    from repro.configs import SHAPES_BY_NAME
+
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    total, active = active_params(rec["arch"])
+    tokens = shape.global_batch * shape.seq_len
+    if rec["kind"] == "train":
+        return 6.0 * active * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def load_records(out_dir="experiments/dryrun", mesh="16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok") and r.get("mesh") == mesh and not r.get("opts", {}).get("tag"):
+            recs.append(r)
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    cost = rec.get("cost_per_chip") or {}
+    if "error" in cost or not cost:
+        cost = rec.get("cost_raw", {})
+    chips = rec["chips"]
+    t_comp = cost.get("flops", 0.0) / PEAK_FLOPS
+    t_mem = cost.get("bytes accessed", 0.0) / HBM_BW
+    t_coll = cost.get("collective_bytes", 0.0) / LINK_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec)
+    hlo_global = cost.get("flops", 0.0) * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    bound = max(t_comp, t_mem, t_coll)
+    mfu = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "attention": rec.get("attention_kind", "dotprod"),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": ratio, "roofline_mfu": mfu,
+        "temp_gb": (rec.get("memory", {}).get("temp_bytes") or 0) / 1e9,
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | attn | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline MFU | temp GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['attention']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_mfu']:.2%} "
+            f"| {r['temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def run() -> list:
+    recs = load_records()
+    rows = [roofline_row(r) for r in recs]
+    csv = []
+    for r in rows:
+        csv.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                    f"dom={r['dominant']};mfu={r['roofline_mfu']:.3f};"
+                    f"useful={r['useful_ratio']:.2f}"))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write(markdown_table(rows) + "\n")
+    return csv
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

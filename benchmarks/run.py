@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table (+ roofline reader).
+
+Prints ``name,us_per_call,derived`` CSV; ``python -m benchmarks.run``.
+Select subsets with ``--only table1`` etc.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,roofline")
+    args = ap.parse_args(argv)
+    wanted = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (roofline, table1_tasks, table2_fhe_params,
+                            table3_plaintext, table4_encrypted)
+
+    suites = [
+        ("table1", table1_tasks.run),
+        ("table2", table2_fhe_params.run),
+        ("table3", table3_plaintext.run),
+        ("table4", table4_encrypted.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if wanted and name not in wanted:
+            continue
+        try:
+            for row in fn():
+                print(",".join(map(str, row)), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

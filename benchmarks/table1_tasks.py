@@ -1,0 +1,198 @@
+"""Paper Table 1: task-quality parity, Inhibitor vs dot-product attention.
+
+Trains small single-block transformers (the paper's protocol: simple
+set-ups, no hyper-parameter tuning) on the paper's task suite — the exact
+adding problem plus offline surrogates for MNIST/IMDB (repro.data.synthetic
+documents the correspondence) — with the attention mechanism as the only
+varied factor.
+
+Paper claim: per-task scores differ insignificantly between mechanisms.
+We report both mechanisms' metrics and the gap.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionConfig, apply_attention, init_attention
+from repro.data import adding_problem, digits, sentiment
+from repro.nn import KeyGen, unbox
+from repro.nn.embedding import init_embedding, apply_embedding
+from repro.nn.linear import apply_dense, init_dense
+from repro.nn.mlp import apply_mlp, init_mlp
+from repro.nn.norm import apply_layernorm, init_layernorm
+from repro.optim import AdamWConfig, adamw_update, init_adamw
+
+D_MODEL = 64
+STEPS = 150
+BATCH = 32
+
+
+def _attn_cfg(kind: str) -> AttentionConfig:
+    return AttentionConfig(kind=kind, num_heads=4, num_kv_heads=4,
+                           head_dim=D_MODEL // 4, use_rope=False,
+                           causal=False, score_shift=0.5)
+
+
+def _init_block(key, kind):
+    kg = KeyGen(key)
+    return {
+        "ln1": init_layernorm(D_MODEL),
+        "attn": init_attention(kg("attn"), _attn_cfg(kind), D_MODEL),
+        "ln2": init_layernorm(D_MODEL),
+        "ffn": init_mlp(kg("ffn"), D_MODEL, 2 * D_MODEL, use_bias=True),
+    }
+
+
+def _apply_block(p, kind, x):
+    h, _ = apply_attention(p["attn"], _attn_cfg(kind),
+                           apply_layernorm(p["ln1"], x))
+    x = x + h
+    x = x + apply_mlp(p["ffn"], apply_layernorm(p["ln2"], x),
+                      activation="relu")
+    return x
+
+
+def _train(init_fn, loss_fn, data_fn, steps=STEPS, lr=3e-3, seed=0):
+    params = unbox(init_fn(jax.random.PRNGKey(seed)))
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = init_adamw(params, opt_cfg)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+        return params, opt, loss
+
+    for s in range(steps):
+        batch = data_fn(seed * 10_000 + s)
+        params, opt, loss = step_fn(params, opt, batch)
+    return params
+
+
+# ---- adding problem (regression; paper metric: MSE) ----
+
+def bench_adding(kind: str, length=50, seed=0):
+    def init_fn(key):
+        kg = KeyGen(key)
+        return {
+            "embed": init_dense(kg("e"), (2,), (D_MODEL,), (None,),
+                                ("embed",), use_bias=True),
+            "block": _init_block(kg("b"), kind),
+            "head": init_dense(kg("h"), (D_MODEL,), (1,), ("embed",),
+                               (None,), use_bias=True),
+        }
+
+    def forward(p, x):
+        h = apply_dense(p["embed"], x, 1)
+        h = _apply_block(p["block"], kind, h)
+        return apply_dense(p["head"], jnp.mean(h, axis=1), 1)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean(jnp.square(forward(p, x) - y))
+
+    def data_fn(s):
+        x, y = adding_problem(BATCH, length, s)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    x, y = adding_problem(512, length, 123_456 + seed)
+    pred = forward(params, jnp.asarray(x))
+    return float(jnp.mean(jnp.square(pred - jnp.asarray(y))))
+
+
+# ---- digits (10-class; paper metric: accuracy) ----
+
+def bench_digits(kind: str, res=16, seed=0):
+    def init_fn(key):
+        kg = KeyGen(key)
+        return {
+            "embed": init_dense(kg("e"), (res,), (D_MODEL,), (None,),
+                                ("embed",), use_bias=True),
+            "block": _init_block(kg("b"), kind),
+            "head": init_dense(kg("h"), (D_MODEL,), (10,), ("embed",),
+                               (None,), use_bias=True),
+        }
+
+    def forward(p, x):
+        h = apply_dense(p["embed"], x, 1)          # rows as tokens
+        h = _apply_block(p["block"], kind, h)
+        return apply_dense(p["head"], jnp.mean(h, axis=1), 1)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        logits = forward(p, x)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]),
+                                                    y])
+
+    def data_fn(s):
+        x, y = digits(BATCH, s, res=res)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    x, y = digits(1024, 777_777 + seed, res=res)
+    pred = jnp.argmax(forward(params, jnp.asarray(x)), axis=-1)
+    return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
+
+
+# ---- sentiment (binary; paper metric: accuracy) ----
+
+def bench_sentiment(kind: str, length=64, vocab=512, seed=0):
+    def init_fn(key):
+        kg = KeyGen(key)
+        return {
+            "embed": init_embedding(kg("e"), vocab, D_MODEL),
+            "block": _init_block(kg("b"), kind),
+            "head": init_dense(kg("h"), (D_MODEL,), (2,), ("embed",),
+                               (None,), use_bias=True),
+        }
+
+    def forward(p, toks):
+        h = apply_embedding(p["embed"], toks)
+        h = _apply_block(p["block"], kind, h)
+        return apply_dense(p["head"], jnp.mean(h, axis=1), 1)
+
+    def loss_fn(p, batch):
+        toks, y = batch
+        logits = forward(p, toks)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]),
+                                                    y])
+
+    def data_fn(s):
+        t, y = sentiment(BATCH, s, length=length, vocab=vocab)
+        return jnp.asarray(t), jnp.asarray(y)
+
+    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    t, y = sentiment(1024, 555_555 + seed, length=length, vocab=vocab)
+    pred = jnp.argmax(forward(params, jnp.asarray(t)), axis=-1)
+    return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
+
+
+def run() -> list:
+    """Returns CSV rows (name, us_per_call, derived)."""
+    rows = []
+    for task, fn, metric in (("adding", bench_adding, "mse"),
+                             ("digits", bench_digits, "acc"),
+                             ("sentiment", bench_sentiment, "acc")):
+        scores = {}
+        for kind in ("dotprod", "inhibitor"):
+            t0 = time.perf_counter()
+            scores[kind] = fn(kind)
+            dt = (time.perf_counter() - t0) * 1e6 / STEPS
+            rows.append((f"table1/{task}/{kind}", round(dt, 1),
+                         f"{metric}={scores[kind]:.4f}"))
+        gap = scores["inhibitor"] - scores["dotprod"]
+        rows.append((f"table1/{task}/gap", 0.0,
+                     f"inhibitor-dotprod={gap:+.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

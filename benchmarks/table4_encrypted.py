@@ -1,0 +1,44 @@
+"""Paper Table 4: estimated encrypted execution time vs sequence length.
+
+Exact PBS/add/lit-mul inventories from the TFHE circuit simulator ×
+the calibrated cost model (fhe.cost).  Paper claim: 3–6× inhibitor
+speedup under encryption, growing circuits with T.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fhe import (circuit_seconds, dotprod_attention_circuit,
+                       inhibitor_attention_circuit)
+
+PAPER = {  # published Table 4 (seconds)
+    2: (0.749, 2.68), 4: (8.56, 22.4), 8: (23.8, 107), 16: (127, 828),
+}
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for T in (2, 4, 8, 16):
+        d = 2
+        q = rng.integers(-7, 8, (T, d))
+        k = rng.integers(-7, 8, (T, d))
+        v = rng.integers(-7, 8, (T, d))
+        _, s_inh = inhibitor_attention_circuit(q, k, v, gamma_shift=1,
+                                               alpha_q=1)
+        _, s_dot = dotprod_attention_circuit(q, k, v, scale_shift=2)
+        t_i, t_d = circuit_seconds(s_inh), circuit_seconds(s_dot)
+        pi, pd = PAPER[T]
+        rows.append((f"table4/T{T}/inhibitor", round(t_i * 1e6, 0),
+                     f"est={t_i:.2f}s;paper={pi}s"))
+        rows.append((f"table4/T{T}/dotprod", round(t_d * 1e6, 0),
+                     f"est={t_d:.2f}s;paper={pd}s"))
+        rows.append((f"table4/T{T}/speedup", 0.0,
+                     f"est={t_d / t_i:.2f}x;paper={pd / pi:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,13 @@
+"""Serving example: continuous batching with ragged prompts.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 12
+
+Shows the slot-pool engine admitting more requests than slots, recycling
+slots as requests finish at different times, and reports throughput.
+Pass --ckpt-dir to serve weights trained by train_inhibitor_lm.py.
+"""
+
+from repro.launch import serve as serve_cli
+
+if __name__ == "__main__":
+    raise SystemExit(serve_cli.main())

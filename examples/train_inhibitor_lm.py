@@ -1,0 +1,37 @@
+"""End-to-end training driver: a ~100M-parameter-class Inhibitor LM.
+
+Trains smollm-135m@inhibitor (or --reduced for CPU smoke) for a few
+hundred steps on the deterministic synthetic LM stream with checkpointing,
+fault supervision and auto-resume — the full production loop at laptop
+scale.
+
+  PYTHONPATH=src python examples/train_inhibitor_lm.py --steps 300
+  PYTHONPATH=src python examples/train_inhibitor_lm.py --full  # 135M params
+
+Interrupt it and re-run: it resumes from the last committed checkpoint
+bit-exactly (tests/test_train_loop.py asserts this).
+"""
+
+import argparse
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="train the real 135M config (needs ~8GB + hours)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_inhibitor_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", "smollm-135m", "--attention", "inhibitor",
+            "--steps", str(args.steps), "--batch", "16", "--seq", "256",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100"]
+    if args.full:
+        argv.append("--full")
+    return train_cli.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""repro: Inhibitor-Transformer training/inference framework (JAX).
+
+Reproduction + scale-out of "The Inhibitor: ReLU and Addition-Based
+Attention for Efficient Transformers under Fully Homomorphic Encryption on
+the Torus" (Brannvall & Stoian). See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Checkpointing: atomic sharded store + async manager."""
+
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    committed_steps,
+    latest_step,
+    restore,
+    retain,
+    save,
+)

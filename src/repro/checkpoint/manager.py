@@ -1,0 +1,89 @@
+"""Async checkpoint manager: overlap saves with training, retention,
+auto-resume — the fault-tolerance substrate (DESIGN.md §6).
+
+The train loop calls ``maybe_save(step, tree_fn)`` every step; the manager
+decides cadence, snapshots device arrays to host (blocking only for the
+device->host copy), and runs the file write on a background thread so the
+next step launches immediately.  ``wait()`` drains in-flight writes
+(called before exit and before restore-after-failure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    root: str
+    every_steps: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- save path ----
+    def _write(self, step: int, host_tree, extra):
+        try:
+            store.save(self.cfg.root, step, host_tree, extra=extra)
+            store.retain(self.cfg.root, self.cfg.keep)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host memory first — the device buffers may be donated
+        # by the next step
+        host_tree = jax.tree.map(np.asarray, tree)
+        if self.cfg.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree, extra)
+
+    def maybe_save(self, step: int, tree: Any, *,
+                   extra: Optional[dict] = None) -> bool:
+        if step % self.cfg.every_steps:
+            return False
+        self.save(step, tree, extra=extra)
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---- restore path ----
+    def latest_step(self) -> Optional[int]:
+        return store.latest_step(self.cfg.root)
+
+    def restore(self, tree_like: Any, *, shardings: Any = None):
+        self.wait()
+        return store.restore(self.cfg.root, tree_like, shardings=shardings)
+
+    def restore_or_init(self, init_fn: Callable[[], Any], *,
+                        shardings: Any = None):
+        """Auto-resume: restore the latest committed checkpoint if one
+        exists, else initialize fresh. Returns (tree, start_step)."""
+        if self.latest_step() is None:
+            return init_fn(), 0
+        tree_like = jax.eval_shape(init_fn)
+        tree, step = self.restore(tree_like, shardings=shardings)
+        return tree, step

@@ -1,0 +1,150 @@
+"""Sharded npz checkpoint store: atomic, crash-consistent, resumable.
+
+Layout (one checkpoint = one directory):
+
+    <root>/step_000100/
+        meta.json            # step, tree structure, shard inventory
+        shard_00000.npz      # flattened leaves, chunked by byte budget
+        ...
+        COMMITTED            # written LAST -> presence = checkpoint valid
+
+Crash consistency: writers stage into ``step_N.tmp`` and rename after the
+COMMITTED marker is in place; readers ignore directories without the
+marker, so a host failure mid-save can never corrupt the restore point
+(the previous checkpoint remains the newest committed one).
+
+On multi-host runs each host writes only the leaves (or leaf-shards) it
+owns; here the single-process writer stores full arrays. Restore is
+sharding-aware: pass ``shardings`` to place leaves directly onto devices.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_MARKER = "COMMITTED"
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _leaf_paths(tree) -> list:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(root: str, step: int, tree: Any, *, extra: Optional[dict] = None):
+    """Write a committed checkpoint for ``tree`` at ``step``."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _leaf_paths(tree)
+    manifest = []
+    shard, shard_bytes, shard_idx = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_idx
+        if shard:
+            np.savez(os.path.join(tmp, f"shard_{shard_idx:05d}.npz"), **shard)
+            shard, shard_bytes = {}, 0
+            shard_idx += 1
+
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        key = f"leaf_{i:06d}"
+        manifest.append({"name": name, "key": key,
+                         "shard": shard_idx, "dtype": str(arr.dtype),
+                         "shape": list(arr.shape)})
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= _SHARD_BYTES:
+            flush()
+    flush()
+
+    meta = {"step": step, "leaves": manifest, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, _MARKER), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def committed_steps(root: str) -> list:
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, _MARKER)):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = committed_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(root: str, tree_like: Any, *, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of ``tree_like``. Returns (tree, step).
+
+    ``shardings``: optional tree of jax.sharding.Sharding matching
+    ``tree_like`` — leaves are device_put directly onto their shards.
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+
+    by_shard = {}
+    for entry in meta["leaves"]:
+        by_shard.setdefault(entry["shard"], []).append(entry)
+    values = {}
+    for shard_idx, entries in by_shard.items():
+        with np.load(os.path.join(d, f"shard_{shard_idx:05d}.npz")) as z:
+            for e in entries:
+                values[e["name"]] = z[e["key"]]
+
+    names = [name for name, _ in _leaf_paths(tree_like)]
+    missing = [n for n in names if n not in values]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+    ordered = [values[n] for n in names]
+
+    flat_shardings = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(ordered))
+    placed = []
+    for arr, sh in zip(ordered, flat_shardings):
+        placed.append(jax.device_put(arr, sh) if sh is not None else
+                      jax.numpy.asarray(arr))
+    treedef = jax.tree.structure(tree_like)
+    return jax.tree.unflatten(treedef, placed), step
+
+
+def retain(root: str, keep: int):
+    """Delete all but the newest ``keep`` committed checkpoints."""
+    steps = committed_steps(root)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each assigned architecture lives in its own module with the exact published
+config; ``get_config(name)`` resolves ids (with or without the attention
+override suffix ``@inhibitor`` / ``@inhibitor_unsigned`` / ``@dotprod``).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, EncDecConfig, FrontendConfig,
+    ShapeConfig, SHAPES, SHAPES_BY_NAME)
+
+_MODULES = {
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_16e",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "paper-tiny": "repro.configs.paper_tiny",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "paper-tiny")
+
+# archs whose attention is replaceable by the paper's mechanism
+INHIBITOR_APPLICABLE = tuple(a for a in ARCH_IDS if a != "rwkv6-7b")
+
+# sub-quadratic archs eligible for the long_500k shape (DESIGN.md §5)
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "hymba-1.5b")
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve an arch id, optionally suffixed ``@<attention_kind>``."""
+    import importlib
+
+    kind = None
+    if "@" in name:
+        name, kind = name.split("@", 1)
+    if name not in _MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    cfg = importlib.import_module(_MODULES[name]).CONFIG
+    if kind is not None:
+        if name == "rwkv6-7b" and kind != "dotprod":
+            raise ValueError(
+                "rwkv6-7b is attention-free; the inhibitor mechanism is "
+                "inapplicable (DESIGN.md §Arch-applicability)")
+        cfg = cfg.with_attention_kind(kind)
+    return cfg

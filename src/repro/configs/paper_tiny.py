@@ -1,0 +1,31 @@
+"""The paper's own experimental scale: small single-layer Inhibitor
+Transformers (Table 1 tasks / Tables 2–4 scaling circuits).
+
+This config is the *paper-faithful* model: inhibitor attention (signed,
+shifted score α=0.5, γ=√d), classic ReLU FFN (eq. 4), LayerNorm — the
+architecture used for the adding/MNIST/IMDB/IAMW benchmark comparisons.
+"""
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionConfig
+
+CONFIG = ModelConfig(
+    name="paper-tiny",
+    family="dense",
+    num_layers=1,
+    d_model=128,
+    d_ff=256,
+    vocab_size=256,
+    attention=AttentionConfig(
+        kind="inhibitor", num_heads=4, num_kv_heads=4, head_dim=32,
+        score_shift=0.5, use_rope=False, causal=True),
+    norm="layernorm",
+    norm_eps=1e-5,
+    mlp="mlp_relu",
+    mlp_bias=True,
+    tie_embeddings=False,
+    max_seq_len=512,
+    remat="none",
+    compute_dtype="float32",
+    source="paper (Brännvall & Stoian 2024)",
+)

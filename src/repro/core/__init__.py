@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — inhibitor attention — and its baseline."""
+
+from repro.core.attention import (  # noqa: F401
+    AttentionConfig,
+    KVCache,
+    apply_attention,
+    init_attention,
+    init_kv_cache,
+)
+from repro.core.dotprod import dot_product_attention  # noqa: F401
+from repro.core.inhibitor import (  # noqa: F401
+    inhibit_fused,
+    inhibit_naive,
+    inhibit_signed_fused,
+    inhibit_signed_naive,
+    inhibitor_attention,
+    inhibitor_attention_chunked,
+    manhattan_scores,
+)

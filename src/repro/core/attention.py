@@ -1,0 +1,241 @@
+"""Unified multi-head attention layer with swappable score mechanism.
+
+``AttentionConfig.kind`` selects the mechanism:
+
+  * ``"dotprod"``            — conventional Softmax attention (paper eq. 3)
+  * ``"inhibitor"``          — signed inhibitor (paper eq. 7 / fused eq. 10)
+  * ``"inhibitor_unsigned"`` — unsigned inhibitor (paper eq. 6 / fused eq. 9)
+
+The projection layout (fused QKV per-head, GQA, optional QKV bias, RoPE) is
+shared across mechanisms so the paper's technique is a one-line config swap
+on every architecture in :mod:`repro.configs`.
+
+Decode support: a :class:`KVCache` carries (k, v, length); ``apply`` with
+``cache`` set appends the new keys/values and attends over the valid prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dotprod as dp
+from repro.core import inhibitor as inh
+from repro.nn.linear import apply_dense, init_dense
+from repro.nn.module import KeyGen
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    kind: str = "dotprod"           # dotprod | inhibitor | inhibitor_unsigned
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    qkv_bias: bool = False
+    out_bias: bool = False
+    use_rope: bool = True
+    rope_base: float = 10000.0
+    rope_pct: float = 1.0           # fraction of head_dim rotated (stablelm)
+    score_shift: float = 0.5        # inhibitor α (paper: 0.5)
+    score_scale: Optional[float] = None  # default √head_dim (paper γ)
+    normalize: bool = True          # key-count normalization (DESIGN.md §2)
+    sliding_window: Optional[int] = None
+    causal: bool = True
+    use_kernel: bool = False        # dispatch to Pallas flash path
+    kv_chunk: int = 256             # chunk size for the streaming form
+    chunked_threshold: int = 4096   # n_k above which the streaming form is
+                                    # used when the kernel path is off
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (b, max_len, h_kv, d)
+    v: jax.Array        # (b, max_len, h_kv, d)
+    length: jax.Array   # () int32 shared cursor, or (b,) per-slot cursors
+                        # (ragged continuous batching — serve.engine)
+
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16, *, per_slot: bool = False) -> KVCache:
+    shape = (batch, max_len, num_kv_heads, head_dim)
+    length = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), length)
+
+
+def init_attention(key, cfg: AttentionConfig, embed_dim: int, *,
+                   dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    h, hk, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": init_dense(kg("wq"), (embed_dim,), (h, d), ("embed",),
+                         ("heads", "head_dim"), use_bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wk": init_dense(kg("wk"), (embed_dim,), (hk, d), ("embed",),
+                         ("kv_heads", "head_dim"), use_bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wv": init_dense(kg("wv"), (embed_dim,), (hk, d), ("embed",),
+                         ("kv_heads", "head_dim"), use_bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wo": init_dense(kg("wo"), (h, d), (embed_dim,),
+                         ("heads", "head_dim"), ("embed",),
+                         use_bias=cfg.out_bias, dtype=dtype),
+    }
+
+
+def _mechanism(cfg: AttentionConfig, q, k, v, mask):
+    if cfg.kind == "dotprod":
+        return dp.dot_product_attention(q, k, v, mask=mask,
+                                        score_scale=cfg.score_scale)
+    signed = cfg.kind == "inhibitor"
+    if cfg.kind not in ("inhibitor", "inhibitor_unsigned"):
+        raise ValueError(f"unknown attention kind {cfg.kind!r}")
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+        return kops.flash_inhibitor(
+            q, k, v, mask=mask, score_scale=cfg.score_scale,
+            score_shift=cfg.score_shift, signed=signed,
+            normalize=cfg.normalize)
+    if k.shape[1] > cfg.chunked_threshold:
+        return inh.inhibitor_attention_chunked(
+            q, k, v, mask=mask, score_scale=cfg.score_scale,
+            score_shift=cfg.score_shift, signed=signed,
+            normalize=cfg.normalize, kv_chunk=cfg.kv_chunk)
+    return inh.inhibitor_attention(
+        q, k, v, mask=mask, score_scale=cfg.score_scale,
+        score_shift=cfg.score_shift, signed=signed, normalize=cfg.normalize)
+
+
+def _build_mask(cfg: AttentionConfig, n_q: int, n_k: int, q_offset,
+                kv_valid_len=None) -> Optional[jax.Array]:
+    """Boolean (b|1, 1, n_q, n_k) mask combining causality, sliding window
+    and KV-cache validity. ``q_offset`` / ``kv_valid_len`` may be scalars
+    (shared cursor) or (b,) vectors (ragged continuous batching)."""
+    masks = []
+    qoff = jnp.asarray(q_offset)
+    if qoff.ndim == 0:
+        qoff = qoff[None]
+    qi = qoff[:, None, None] + jnp.arange(n_q)[None, :, None]  # (b|1, nq, 1)
+    kj = jnp.arange(n_k)[None, None, :]                        # (1, 1, nk)
+    if cfg.causal:
+        masks.append(kj <= qi)
+    if cfg.sliding_window is not None:
+        masks.append(kj > qi - cfg.sliding_window)
+    if kv_valid_len is not None:
+        kv = jnp.asarray(kv_valid_len)
+        if kv.ndim == 0:
+            kv = kv[None]
+        masks.append(jnp.broadcast_to(kj < kv[:, None, None],
+                                      (kv.shape[0], n_q, n_k)))
+    if not masks:
+        return None
+    m = masks[0]
+    for extra in masks[1:]:
+        m = m & extra
+    return m[:, None]
+
+
+def apply_attention(
+    params: dict,
+    cfg: AttentionConfig,
+    x: jax.Array,
+    *,
+    x_kv: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    attn_mask: Optional[jax.Array] = None,
+    compute_dtype=None,
+):
+    """Attention over ``x`` (self) or ``x_kv`` (cross). Returns (y, cache').
+
+    x: (b, n_q, embed). positions: (b, n_q) absolute positions for RoPE
+    (defaults to arange, or cache.length + arange when decoding).
+    """
+    from repro.nn.rotary import apply_rope
+
+    cdt = compute_dtype or x.dtype
+    b, n_q, _ = x.shape
+    src = x if x_kv is None else x_kv
+
+    q = apply_dense(params["wq"], x, 1, cdt)          # (b, n_q, h, d)
+    k = apply_dense(params["wk"], src, 1, cdt)        # (b, n_kv, hk, d)
+    v = apply_dense(params["wv"], src, 1, cdt)
+
+    if positions is None:
+        offset = cache.length if cache is not None else 0
+        off = jnp.asarray(offset)
+        if off.ndim == 1:                       # per-slot cursors (b,)
+            positions = off[:, None] + jnp.arange(n_q)[None, :]
+        else:
+            positions = jnp.arange(n_q)[None, :] + off
+        positions = jnp.broadcast_to(positions, (b, n_q))
+
+    if cfg.use_rope and x_kv is None:
+        if cfg.rope_pct >= 1.0:
+            q = apply_rope(q, positions, base=cfg.rope_base)
+            k = apply_rope(k, positions, base=cfg.rope_base)
+        else:
+            rd = int(cfg.head_dim * cfg.rope_pct)
+            rd -= rd % 2
+            q = jnp.concatenate(
+                [apply_rope(q[..., :rd], positions, base=cfg.rope_base),
+                 q[..., rd:]], axis=-1)
+            k = jnp.concatenate(
+                [apply_rope(k[..., :rd], positions, base=cfg.rope_base),
+                 k[..., rd:]], axis=-1)
+
+    new_cache = None
+    kv_valid_len = None
+    if cache is not None:
+        # append new k/v at the cache cursor(s), attend over the buffer
+        if cache.length.ndim == 1:              # ragged: per-slot cursors
+            upd = jax.vmap(
+                lambda buf, new, off: jax.lax.dynamic_update_slice(
+                    buf, new, (off, 0, 0)))
+            k_buf = upd(cache.k, k.astype(cache.k.dtype), cache.length)
+            v_buf = upd(cache.v, v.astype(cache.v.dtype), cache.length)
+        else:
+            k_buf = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+            v_buf = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+        new_cache = KVCache(k_buf, v_buf, cache.length + n_q)
+        k, v = k_buf.astype(cdt), v_buf.astype(cdt)
+        kv_valid_len = cache.length + n_q
+
+    n_k = k.shape[1]
+    q_offset = cache.length if cache is not None else 0
+    scalar_cursor = jnp.asarray(q_offset).ndim == 0
+
+    # Large structural-mask inhibitor attention takes the flash-structured
+    # blocked path: exact, chunk-bounded memory, analytic backward, no
+    # (n_q, n_k) mask arrays (core.blocked).
+    if (cfg.kind in ("inhibitor", "inhibitor_unsigned") and not cfg.use_kernel
+            and attn_mask is None and x_kv is None and scalar_cursor
+            and n_q * n_k >= (1 << 20)):
+        from repro.core.blocked import blocked_inhibitor_attention
+
+        out = blocked_inhibitor_attention(
+            q, k, v, score_scale=cfg.score_scale,
+            score_shift=cfg.score_shift, signed=cfg.kind == "inhibitor",
+            normalize=cfg.normalize, causal=cfg.causal,
+            window=cfg.sliding_window, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, chunk_k=cfg.kv_chunk,
+            chunk_q=min(cfg.kv_chunk, 512))
+        y = apply_dense(params["wo"], out, 2, cdt)
+        return y, new_cache
+
+    mask = attn_mask
+    if mask is None and x_kv is None:
+        mask = _build_mask(cfg, n_q, n_k, q_offset, kv_valid_len)
+    elif mask is None and x_kv is not None and kv_valid_len is not None:
+        kvl = jnp.asarray(kv_valid_len)
+        if kvl.ndim == 1:
+            mask = (jnp.arange(n_k)[None, :] < kvl[:, None])[:, None, None]
+        else:
+            mask = (jnp.arange(n_k)[None, :] < kvl)[None, None, None]
+
+    out = _mechanism(cfg, q, k, v, mask)              # (b, n_q, h, d)
+    y = apply_dense(params["wo"], out, 2, cdt)
+    return y, new_cache

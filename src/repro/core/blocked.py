@@ -1,0 +1,323 @@
+"""Blocked inhibitor attention in pure XLA — flash-structured, exact.
+
+The fused eq. 9/10 forms contract (nq, nk, d) difference cubes.  XLA:TPU
+fuses those into their reduces, but (a) XLA:CPU materializes them (this is
+where the dry-run's memory proof runs), and (b) reverse-mode autodiff keeps
+cube-sized residuals on every backend.  This module is the production
+XLA-level answer, mirroring the Pallas kernel's structure one level up:
+
+  * forward: two-level ``lax.scan`` over query-chunks × key-chunks; each
+    chunk evaluates the masked fused inhibition on a (cq, ck, d) tile.
+    Because inhibition is a plain sum over keys (no Softmax normalizer),
+    chunk accumulation is exact.
+  * backward: an outer ``jax.custom_vjp`` — residuals are just (q, k, v)
+    — with two loop nests of the *analytic* chunk gradients
+    (indicator-based; see core.inhibitor._make_inhibitor_core):
+    dq is accumulated per query-chunk over key-chunks; dk/dv per key-chunk
+    over query-chunks.  No cube or score matrix ever outlives a chunk.
+  * masking (causal / sliding window / kv-valid-length) is computed from
+    chunk indices via iota inside the chunk — no (nq, nk) mask arrays in
+    HBM, which also makes the 500k-token decode shape tractable.
+
+Chunk sizes bound the live tile to ~cq·ck·d floats; defaults keep that in
+the tens of MB per device at production shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK_Q = 512
+DEFAULT_CHUNK_K = 512
+
+
+CUBE_BUDGET_BYTES = 384 * 1024 * 1024
+
+
+def _auto_chunks(b: int, h: int, d: int, chunk_q: int, chunk_k: int):
+    """Shrink (chunk_q, chunk_k) until the per-device difference cube fits
+    CUBE_BUDGET_BYTES, given the active mesh's sharding of batch/heads."""
+    from repro.distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    bl, hl = b, h
+    if mesh is not None:
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp *= mesh.shape[ax]
+        if b % dp == 0:
+            bl = b // dp
+        mp = mesh.shape.get("model", 1)
+        if h % mp == 0 and h >= mp:
+            hl = h // mp
+    while (bl * hl * chunk_q * chunk_k * d * 4 > CUBE_BUDGET_BYTES
+           and (chunk_q > 64 or chunk_k > 64)):
+        if chunk_k >= chunk_q and chunk_k > 64:
+            chunk_k //= 2
+        else:
+            chunk_q //= 2
+    return max(chunk_q, 8), max(chunk_k, 8)
+
+
+def _pad_to(x, mult, axis):
+    pad = -x.shape[axis] % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _chunk_mask(q0, k0, cq, ck, *, causal, window, kv_len, q_offset):
+    """(cq, ck) float mask for the chunk at (query q0, key k0)."""
+    qi = q0 + q_offset + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    m = kj < kv_len
+    if causal:
+        m = m & (kj <= qi)
+    if window is not None:
+        # a sliding window implies causality (matches sliding_window_mask)
+        m = m & (kj > qi - window) & (kj <= qi)
+    return m.astype(jnp.float32)
+
+
+def _chunk_fwd(qc, kc, vc, mf, *, gamma, shift, signed):
+    """Masked fused inhibition for one (cq, ck) tile.
+
+    qc: (b, h, cq, d); kc, vc: (b, hk, ck, d); mf: (cq, ck).
+    Returns (partial H (b, h, cq, d), counts (cq,)).
+    """
+    z = jnp.sum(jnp.abs(qc[..., :, None, :] - kc[..., None, :, :]),
+                axis=-1) * (1.0 / gamma)                 # (b, h, cq, ck)
+    if shift:
+        z = jax.nn.relu(z - shift)
+    col_v = jnp.einsum("qk,bhkd->bhqd", mf, vc)
+    mb = mf[None, None, :, :, None]
+    if signed:
+        vp = jax.nn.relu(vc)
+        vn = vc - vp
+        t_pos = jnp.sum(jnp.abs(vp[..., None, :, :] - z[..., None]) * mb,
+                        axis=-2)
+        t_neg = jnp.sum(jnp.abs(-vn[..., None, :, :] - z[..., None]) * mb,
+                        axis=-2)
+        part = 0.5 * (col_v + t_pos - t_neg)
+    else:
+        row_z = jnp.sum(z * mf[None, None], axis=-1)
+        cross = jnp.sum(jnp.abs(vc[..., None, :, :] - z[..., None]) * mb,
+                        axis=-2)
+        part = 0.5 * (col_v - row_z[..., None] + cross)
+    return part, jnp.sum(mf, axis=-1)
+
+
+def _chunk_bwd(qc, kc, vc, mf, gc, *, gamma, shift, signed):
+    """Analytic chunk gradients. gc: (b, h, cq, d) upstream (already /count).
+
+    Returns (dq_c (b, h, cq, d), dk_c (b, h, ck, d), dv_c (b, h, ck, d)).
+    """
+    raw = jnp.sum(jnp.abs(qc[..., :, None, :] - kc[..., None, :, :]),
+                  axis=-1) * (1.0 / gamma)
+    z = jax.nn.relu(raw - shift) if shift else raw
+    zc = z[..., None]                                    # (b, h, cq, ck, 1)
+    gm = gc[..., :, None, :] * mf[None, None, :, :, None]
+    if signed:
+        vp = jax.nn.relu(vc)
+        vn = vc - vp
+        A = vp[..., None, :, :] > zc
+        B_ = vn[..., None, :, :] + zc < 0
+        ind_v = jnp.where(vc[..., None, :, :] > 0, A, B_)
+        dv = jnp.sum(jnp.where(ind_v, gm, 0.0), axis=-3)
+        s = jnp.sum(jnp.where(B_, gm, 0.0) - jnp.where(A, gm, 0.0), axis=-1)
+    else:
+        A = vc[..., None, :, :] > zc
+        dv = jnp.sum(jnp.where(A, gm, 0.0), axis=-3)
+        s = -jnp.sum(jnp.where(A, gm, 0.0), axis=-1)
+    t = s * (1.0 / gamma)
+    if shift:
+        t = t * (raw > shift)
+    sgn = jnp.sign(qc[..., :, None, :] - kc[..., None, :, :])
+    dq = jnp.sum(t[..., None] * sgn, axis=-2)
+    dk = -jnp.sum(t[..., None] * sgn, axis=-3)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_blocked(gamma: float, shift: float, signed: bool, normalize: bool,
+                  causal: bool, window: Optional[int], cq: int, ck: int,
+                  nq_chunks: int, nk_chunks: int):
+    """custom_vjp'd blocked core over padded (b, h, nq, d) / (b, h, nk, d).
+
+    Tensors keep the natural (batch, heads, seq, dim) layout end-to-end so
+    SPMD sharding (batch->data, heads->model) propagates without relayout;
+    ``q_offset`` / ``kv_len`` are dynamic int32 operands (decode passes the
+    traced cache cursor)."""
+
+    def fwd_math(q, k, v, q_offset, kv_len):
+        mask_kw = dict(causal=causal, window=window, kv_len=kv_len,
+                       q_offset=q_offset)
+        b, h, nq, d = q.shape
+
+        def q_iter(qi, _):
+            qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, 2)
+
+            def k_iter(carry, kj):
+                acc, cnt = carry
+                kc = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, 2)
+                vc = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, 2)
+                mf = _chunk_mask(qi * cq, kj * ck, cq, ck, **mask_kw)
+                part, c = _chunk_fwd(qc, kc, vc, mf, gamma=gamma,
+                                     shift=shift, signed=signed)
+                return (acc + part, cnt + c), None
+
+            acc0 = jnp.zeros((b, h, cq, d), jnp.float32)
+            cnt0 = jnp.zeros((cq,), jnp.float32)
+            (acc, cnt), _ = jax.lax.scan(k_iter, (acc0, cnt0),
+                                         jnp.arange(nk_chunks))
+            if normalize:
+                acc = acc / jnp.maximum(cnt, 1.0)[None, None, :, None]
+            return qi + 1, acc
+
+        _, out = jax.lax.scan(q_iter, 0, None, length=nq_chunks)
+        # out: (nq_chunks, b, h, cq, d) -> (b, h, nq, d)
+        return out.transpose(1, 2, 0, 3, 4).reshape(b, h, nq_chunks * cq, d)
+
+    @jax.custom_vjp
+    def core(q, k, v, q_offset, kv_len):
+        return fwd_math(q, k, v, q_offset, kv_len)
+
+    def core_fwd(q, k, v, q_offset, kv_len):
+        return (fwd_math(q, k, v, q_offset, kv_len),
+                (q, k, v, q_offset, kv_len))
+
+    def core_bwd(res, g):
+        q, k, v, q_offset, kv_len = res
+        mask_kw = dict(causal=causal, window=window, kv_len=kv_len,
+                       q_offset=q_offset)
+        b, h, nq, d = q.shape
+        gf = g.astype(jnp.float32)
+
+        if normalize:
+            # recompute per-query counts (cheap: mask only, no scores)
+            def cnt_q(qi, _):
+                def cnt_k(c, kj):
+                    mf = _chunk_mask(qi * cq, kj * ck, cq, ck, **mask_kw)
+                    return c + jnp.sum(mf, axis=-1), None
+                c, _ = jax.lax.scan(cnt_k, jnp.zeros((cq,), jnp.float32),
+                                    jnp.arange(nk_chunks))
+                return qi + 1, c
+            _, cnts = jax.lax.scan(cnt_q, 0, None, length=nq_chunks)
+            cnts = cnts.reshape(nq_chunks * cq)
+            gf = gf / jnp.maximum(cnts, 1.0)[None, None, :, None]
+
+        # pass 1: dq per query-chunk (loop over key-chunks)
+        def dq_iter(qi, _):
+            qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, 2)
+            gc = jax.lax.dynamic_slice_in_dim(gf, qi * cq, cq, 2)
+
+            def k_iter(acc, kj):
+                kc = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, 2)
+                vc = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, 2)
+                mf = _chunk_mask(qi * cq, kj * ck, cq, ck, **mask_kw)
+                dq_c, _, _ = _chunk_bwd(qc, kc, vc, mf, gc, gamma=gamma,
+                                        shift=shift, signed=signed)
+                return acc + dq_c, None
+
+            acc, _ = jax.lax.scan(k_iter,
+                                  jnp.zeros((b, h, cq, d), jnp.float32),
+                                  jnp.arange(nk_chunks))
+            return qi + 1, acc
+
+        _, dq = jax.lax.scan(dq_iter, 0, None, length=nq_chunks)
+        dq = dq.transpose(1, 2, 0, 3, 4).reshape(b, h, nq, d)
+
+        # pass 2: dk/dv per key-chunk (loop over query-chunks)
+        def dkv_iter(kj, _):
+            kc = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, 2)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, 2)
+
+            def q_iter2(carry, qi):
+                dk_a, dv_a = carry
+                qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, 2)
+                gc = jax.lax.dynamic_slice_in_dim(gf, qi * cq, cq, 2)
+                mf = _chunk_mask(qi * cq, kj * ck, cq, ck, **mask_kw)
+                _, dk_c, dv_c = _chunk_bwd(qc, kc, vc, mf, gc, gamma=gamma,
+                                           shift=shift, signed=signed)
+                return (dk_a + dk_c, dv_a + dv_c), None
+
+            z = jnp.zeros((b, h, ck, d), jnp.float32)
+            (dk_a, dv_a), _ = jax.lax.scan(q_iter2, (z, z),
+                                           jnp.arange(nq_chunks))
+            return kj + 1, (dk_a, dv_a)
+
+        _, (dk, dv) = jax.lax.scan(dkv_iter, 0, None, length=nk_chunks)
+        dk = dk.transpose(1, 2, 0, 3, 4).reshape(b, h, nk_chunks * ck, d)
+        dv = dv.transpose(1, 2, 0, 3, 4).reshape(b, h, nk_chunks * ck, d)
+        f0 = jnp.zeros((), jax.dtypes.float0)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                f0, f0)
+
+    core.defvjp(core_fwd, core_bwd)
+    return core
+
+
+def blocked_inhibitor_attention(
+    q: jax.Array,            # (b, n_q, h, d)
+    k: jax.Array,            # (b, n_k, h_kv, d)
+    v: jax.Array,
+    *,
+    score_scale: Optional[float] = None,
+    score_shift: float = 0.5,
+    signed: bool = True,
+    normalize: bool = True,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_valid_len=None,
+    chunk_q: int = DEFAULT_CHUNK_Q,
+    chunk_k: int = DEFAULT_CHUNK_K,
+) -> jax.Array:
+    """Flash-structured inhibitor attention (exact; structural masks only).
+
+    Equivalent to :func:`repro.core.inhibitor.inhibitor_attention` with a
+    causal/sliding-window/valid-length mask; O(chunk²·d) live memory.
+    Layout stays (batch, heads, seq, dim) throughout — batch shards over
+    ("pod","data") and heads over "model" with zero collectives inside the
+    chunk loops.
+    """
+    from repro.core.inhibitor import _repeat_kv
+    from repro.distributed.sharding import constrain
+
+    b, n_q, h, d = q.shape
+    n_k, h_kv = k.shape[1], k.shape[2]
+    gamma = score_scale if score_scale is not None else float(d) ** 0.5
+    kv_len = kv_valid_len if kv_valid_len is not None else n_k
+
+    k = _repeat_kv(k, h // h_kv)
+    v = _repeat_kv(v, h // h_kv)
+    qt = constrain(q.transpose(0, 2, 1, 3), "batch", "heads")
+    kt = constrain(k.transpose(0, 2, 1, 3), "batch", "heads")
+    vt = constrain(v.transpose(0, 2, 1, 3), "batch", "heads")
+
+    # adapt chunk sizes to the per-device tile: the live (bl, hl, cq, ck, d)
+    # cube should stay within ~CUBE_BUDGET bytes even where the backend
+    # materializes it (XLA:CPU; TPU fuses it into the reduces)
+    chunk_q, chunk_k = _auto_chunks(b, h, d, chunk_q, chunk_k)
+    cq = min(chunk_q, n_q)
+    ck = min(chunk_k, n_k)
+    qt = _pad_to(qt, cq, 2)
+    kt = _pad_to(kt, ck, 2)
+    vt = _pad_to(vt, ck, 2)
+    nq_chunks = qt.shape[2] // cq
+    nk_chunks = kt.shape[2] // ck
+
+    core = _make_blocked(float(gamma), float(score_shift), bool(signed),
+                         bool(normalize), bool(causal),
+                         None if window is None else int(window),
+                         cq, ck, nq_chunks, nk_chunks)
+    out = core(qt, kt, vt, jnp.asarray(q_offset, jnp.int32),
+               jnp.asarray(kv_len, jnp.int32))[:, :, :n_q]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

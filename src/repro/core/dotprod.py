@@ -1,0 +1,96 @@
+"""Conventional scaled-dot-product Softmax attention (paper eq. 3).
+
+The paper's comparison baseline. Multi-head GQA layout identical to
+:mod:`repro.core.inhibitor` so the two mechanisms are drop-in swappable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dotprod_core(scale: float):
+    """custom_vjp'd softmax-attention core with a lean backward.
+
+    Plain autodiff keeps ~6 score-sized fp32 residuals live per layer
+    (logits, masked logits, probs, dprobs, dlogits, softmax internals).
+    Here the only residual is the *compute-dtype* probability matrix; the
+    backward applies the analytic softmax Jacobian
+        dS = P ⊙ (dP − Σ_k dP⊙P)
+    so the live fp32 set is one score-sized tensor at a time.
+    """
+
+    def fwd_math(qt, kt, vt, mask):
+        from repro.distributed.sharding import constrain
+
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qt.astype(jnp.float32),
+                            kt.astype(jnp.float32)) / scale
+        # scores shard heads over TP when divisible, else the query-seq
+        # dim — never replicate the O(s²) tensor (DESIGN.md §6)
+        logits = constrain(logits, "batch", "heads", "seq_sp")
+        if mask is not None:
+            logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vt.astype(jnp.float32))
+        return out, probs
+
+    @jax.custom_vjp
+    def core(qt, kt, vt, mask):
+        return fwd_math(qt, kt, vt, mask)[0]
+
+    def core_fwd(qt, kt, vt, mask):
+        out, probs = fwd_math(qt, kt, vt, mask)
+        # masked probs are exactly 0, so the backward needs no mask — only
+        # its shape (for the float0 cotangent)
+        mshape = None if mask is None else tuple(mask.shape)
+        return out, (qt, kt, vt, probs.astype(qt.dtype), mshape)
+
+    def core_bwd(res, g):
+        from repro.distributed.sharding import constrain
+
+        qt, kt, vt, probs, mshape = res
+        gf = g.astype(jnp.float32)
+        pf = probs.astype(jnp.float32)
+        dv = jnp.einsum("bhqk,bqhd->bkhd", pf, gf)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", gf, vt.astype(jnp.float32))
+        dp = constrain(dp, "batch", "heads", "seq_sp")
+        ds = pf * (dp - jnp.sum(dp * pf, axis=-1, keepdims=True))
+        ds = constrain(ds, "batch", "heads", "seq_sp") / scale
+        dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kt.astype(jnp.float32))
+        dk = jnp.einsum("bhqk,bqhd->bkhd", ds, qt.astype(jnp.float32))
+        dmask = (None if mshape is None
+                 else jnp.zeros(mshape, jax.dtypes.float0))
+        return (dq.astype(qt.dtype), dk.astype(kt.dtype),
+                dv.astype(vt.dtype), dmask)
+
+    core.defvjp(core_fwd, core_bwd)
+    return core
+
+
+def dot_product_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    score_scale: Optional[float] = None,
+) -> jax.Array:
+    """q: (b, n_q, h, d); k, v: (b, n_k, h_kv, d). Returns (b, n_q, h, d)."""
+    from repro.core.inhibitor import _repeat_kv
+
+    b, n_q, h, d = q.shape
+    h_kv = k.shape[2]
+    k = _repeat_kv(k, h // h_kv)
+    v = _repeat_kv(v, h // h_kv)
+    scale = score_scale if score_scale is not None else float(d) ** 0.5
+    if mask is not None:
+        mask = jnp.broadcast_to(mask, (b, h, n_q, k.shape[1]))
+    core = _make_dotprod_core(float(scale))
+    return core(q, k, v, mask).astype(q.dtype)

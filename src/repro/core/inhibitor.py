@@ -1,0 +1,464 @@
+"""The Inhibitor attention mechanism (Brännvall & Stoian, FHE.org 2024).
+
+This module is the paper's primary contribution, implemented in four
+equivalent forms:
+
+  * :func:`manhattan_scores`        — eq. 5 (+ shifted-score variant)
+  * :func:`inhibit_naive`           — eq. 6, broadcast form (oracle)
+  * :func:`inhibit_signed_naive`    — eq. 7, broadcast form (oracle)
+  * :func:`inhibit_fused`           — eq. 9, cdist-decomposed form
+  * :func:`inhibit_signed_fused`    — eq. 10, cdist-decomposed form
+  * :func:`inhibitor_attention`     — full multi-head GQA entry point with
+                                       masking and decode support
+  * :func:`inhibitor_attention_chunked` — blockwise-streaming form (the
+    structure the Pallas kernel implements; exact, no score matrix in HBM)
+
+Notation follows the paper: ``Z[i,j] = (1/γ)·Σ_k |Q[i,k] − K[j,k]|`` with
+γ = √d (``score_scale``), shifted score ``Z' = (Z − α)⁺`` with α ≥ 0
+(``score_shift``); inhibition ``H[i,k] = Σ_j (V[j,k] − Z'[i,j])⁺``.
+
+Masking: conventional attention masks scores with −inf before Softmax.
+Inhibition suppresses an entry when Z is *large*, so masked (disallowed)
+positions are assigned ``Z = +mask_value`` (a large positive constant,
+chosen ≥ max|V| so the ReLU terms vanish identically — exact masking, not
+approximate). For the signed form both ReLU terms vanish under the same
+substitution.
+
+All math is done in float32 regardless of input dtype (the sums of ReLU
+terms are unnormalized and can reach seq_len·|V| magnitude, which overflows
+fp16/bf16 mantissas long before Softmax attention would).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Large-Z mask constant: any Z ≥ max|V| suppresses exactly; we use a value
+# far above any shifted score while staying well inside fp32 range so that
+# (V − Z)⁺ ≡ 0 and (V⁻ + Z)⁻ ≡ 0 for masked pairs.
+MASK_Z: float = 1e9
+
+
+# ---------------------------------------------------------------------------
+# Scores — eq. 5
+# ---------------------------------------------------------------------------
+
+def manhattan_scores(q: jax.Array, k: jax.Array, *,
+                     score_scale: Optional[float] = None,
+                     score_shift: float = 0.0) -> jax.Array:
+    """Eq. 5 (+ shift): ``Z[... i, j] = ((1/γ)·Σ_d |q_i − k_j| − α)⁺``.
+
+    q: (..., n_q, d), k: (..., n_k, d) -> (..., n_q, n_k), float32.
+    """
+    d = q.shape[-1]
+    gamma = score_scale if score_scale is not None else float(d) ** 0.5
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    z = jnp.sum(jnp.abs(qf[..., :, None, :] - kf[..., None, :, :]), axis=-1)
+    z = z / gamma
+    if score_shift:
+        z = jax.nn.relu(z - score_shift)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Inhibition — eq. 6 / 7 (naive broadcast oracles)
+# ---------------------------------------------------------------------------
+
+def inhibit_naive(v: jax.Array, z: jax.Array) -> jax.Array:
+    """Eq. 6: ``H[i,k] = Σ_j (V[j,k] − Z[i,j])⁺``.
+
+    v: (..., n_k, d_v), z: (..., n_q, n_k) -> (..., n_q, d_v), float32.
+    """
+    vf = v.astype(jnp.float32)
+    return jnp.sum(jax.nn.relu(vf[..., None, :, :] - z[..., :, :, None]),
+                   axis=-2)
+
+
+def inhibit_signed_naive(v: jax.Array, z: jax.Array) -> jax.Array:
+    """Eq. 7: ``H[i,k] = Σ_j (V⁺−Z)⁺ + Σ_j (V⁻+Z)⁻`` (signed values)."""
+    vf = v.astype(jnp.float32)
+    vp = jax.nn.relu(vf)
+    vn = vf - vp  # V⁻ = min(V, 0)
+    t1 = jax.nn.relu(vp[..., None, :, :] - z[..., :, :, None])
+    neg = vn[..., None, :, :] + z[..., :, :, None]
+    t2 = jnp.minimum(neg, 0.0)  # x⁻ = min(x, 0)
+    return jnp.sum(t1 + t2, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused forms — eq. 9 / 10 (cdist decomposition; no n_q×n_k×d_v temporary)
+# ---------------------------------------------------------------------------
+
+def _abs_cross(a: jax.Array, b: jax.Array,
+               mask: Optional[jax.Array] = None) -> jax.Array:
+    """Σ over the pairing: |a[..., j, k] − b[..., i, j]| summed over j.
+
+    a: (..., n_k, d_v), b: (..., n_q, n_k) -> (..., n_q, d_v).
+    This is the pairwise-L1 ("cdist") contraction of eq. 9's last term.
+    ``mask`` (..., n_q, n_k) weights each (i, j) pair (True = include) —
+    masking is done by *exclusion from the sum*, never by adding large
+    constants, which would be catastrophically cancellation-prone in the
+    fused decomposition (the three eq. 9 terms individually reach
+    n_k·MASK magnitude and only cancel in exact arithmetic).
+    """
+    cube = jnp.abs(a[..., None, :, :] - b[..., :, :, None])
+    if mask is not None:
+        cube = cube * mask[..., None].astype(cube.dtype)
+    return jnp.sum(cube, axis=-2)
+
+
+def _masked_col_v(vf: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    """Σ_j V[j,k] over attendable j: (..., n_q, d_v) (or (..., 1, d_v))."""
+    if mask is None:
+        return jnp.sum(vf, axis=-2, keepdims=True)
+    return jnp.einsum("...ij,...jk->...ik", mask.astype(vf.dtype), vf)
+
+
+def inhibit_fused(v: jax.Array, z: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 9: H = ½·Σ_j V − ½·Σ_j Z + ½·Σ_j |V − Z|  (≡ eq. 6).
+
+    ``mask`` (..., n_q, n_k): True = attend. Masked pairs are excluded from
+    all three sums (exact; contributes identically zero).
+    """
+    vf = v.astype(jnp.float32)
+    col_v = _masked_col_v(vf, mask)
+    zm = z if mask is None else z * mask.astype(z.dtype)
+    row_z = jnp.sum(zm, axis=-1, keepdims=True)          # (..., n_q, 1)
+    cross = _abs_cross(vf, z, mask)                      # (..., n_q, d_v)
+    return 0.5 * (col_v - row_z + cross)
+
+
+def inhibit_signed_fused(v: jax.Array, z: jax.Array,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 10: H = ½·Σ_j V + ½·Σ_j|V⁺−Z| − ½·Σ_j|V⁻+Z|  (≡ eq. 7)."""
+    vf = v.astype(jnp.float32)
+    vp = jax.nn.relu(vf)
+    vn = vf - vp
+    col_v = _masked_col_v(vf, mask)
+    t_pos = _abs_cross(vp, z, mask)
+    t_neg = _abs_cross(-vn, z, mask)  # |V⁻ + Z| = |(−V⁻) − Z|
+    return 0.5 * (col_v + t_pos - t_neg)
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def mask_scores(z: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    """Apply a boolean mask (True = attend) by setting Z to +MASK_Z."""
+    if mask is None:
+        return z
+    return jnp.where(mask, z, MASK_Z)
+
+
+def causal_mask(n_q: int, n_k: int, *, q_offset=0) -> jax.Array:
+    """(n_q, n_k) boolean causal mask; q_offset shifts query positions
+    (decode: query i sits at absolute position q_offset + i)."""
+    qi = jnp.arange(n_q)[:, None] + q_offset
+    kj = jnp.arange(n_k)[None, :]
+    return kj <= qi
+
+
+def sliding_window_mask(n_q: int, n_k: int, window: int, *, q_offset=0):
+    qi = jnp.arange(n_q)[:, None] + q_offset
+    kj = jnp.arange(n_k)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+# ---------------------------------------------------------------------------
+# Analytic custom VJP for the fused inhibition core
+#
+# Autodiff of the broadcast |q − k| / (V − Z)⁺ expressions saves the
+# (nq, nk, d) *difference cubes* as residuals — hundreds of GB per chip at
+# production shapes (the forward never materializes them thanks to XLA
+# reduce-fusion, but reverse-mode keeps the primal of every abs()).  The
+# derivatives, however, are themselves plain broadcast-compare-reduce
+# contractions over the same operands:
+#
+#   unsigned  A_ijk = 1[V_jk > Z_ij]
+#     dV_jk = Σ_i ĝ_ik m_ij A_ijk           ĝ = g / count (if normalized)
+#     s_ij  = −m_ij Σ_k ĝ_ik A_ijk          (= dL/dZ_ij)
+#   signed    A_ijk = 1[V⁺_jk > Z_ij],  B_ijk = 1[V⁻_jk + Z_ij < 0]
+#     dV_jk = Σ_i ĝ_ik m_ij (V_jk > 0 ? A_ijk : B_ijk)
+#     s_ij  = m_ij Σ_k ĝ_ik (B_ijk − A_ijk)
+#   both      t_ij  = s_ij · 1[raw_ij > α] / γ       (shift-ReLU gate)
+#     dq_id = Σ_j t_ij sign(q_id − k_jd)
+#     dk_jd = −Σ_i t_ij sign(q_id − k_jd)
+#
+# Every contraction is again a fusable broadcast-select-reduce: the bwd
+# recomputes Z in one fused pass and materializes only (nq, nk)- and
+# operand-sized tensors.  This is what makes the inhibitor *trainable* at
+# 4k–32k sequence lengths in pure XLA (measured: 725 GB -> a few GB per
+# chip on the llama4-scout train_4k cell; EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+
+def _raw_scores(q, k, gamma):
+    return jnp.sum(jnp.abs(q[..., :, None, :] - k[..., None, :, :]),
+                   axis=-1) * (1.0 / gamma)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_inhibitor_core(gamma: float, shift: float, signed: bool,
+                         normalize: bool):
+    """custom_vjp'd core: (qt, kt, vt, mask01) -> H, all (b, h, ...)."""
+
+    def fwd_math(qt, kt, vt, mask01):
+        from repro.distributed.sharding import constrain
+
+        raw = _raw_scores(qt, kt, gamma)
+        # scores shard heads over TP when divisible, else the query-seq
+        # dim — never replicate the O(s²) tensor (DESIGN.md §6)
+        raw = constrain(raw, "batch", "heads", "seq_sp")
+        z = jax.nn.relu(raw - shift) if shift else raw
+        m = mask01
+        if signed:
+            out = inhibit_signed_fused(vt, z, m)
+        else:
+            out = inhibit_fused(vt, z, m)
+        if normalize:
+            if m is not None:
+                cnt = jnp.sum(m.astype(jnp.float32), axis=-1, keepdims=True)
+            else:
+                cnt = jnp.full(z.shape[:-1] + (1,), float(kt.shape[-2]),
+                               jnp.float32)
+            out = out / jnp.maximum(cnt, 1.0)
+        return out
+
+    @jax.custom_vjp
+    def core(qt, kt, vt, mask01):
+        return fwd_math(qt, kt, vt, mask01)
+
+    def core_fwd(qt, kt, vt, mask01):
+        return fwd_math(qt, kt, vt, mask01), (qt, kt, vt, mask01)
+
+    def core_bwd(res, g):
+        from repro.distributed.sharding import constrain
+
+        qt, kt, vt, mask01 = res
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        gf = g.astype(jnp.float32)
+
+        raw = _raw_scores(qf, kf, gamma)                 # fused recompute
+        raw = constrain(raw, "batch", "heads", "seq_sp")
+        z = jax.nn.relu(raw - shift) if shift else raw
+        if mask01 is not None:
+            m = mask01.astype(jnp.float32)
+        else:
+            m = None
+        if normalize:
+            if m is not None:
+                cnt = jnp.sum(m, axis=-1, keepdims=True)
+            else:
+                cnt = jnp.full(z.shape[:-1] + (1,), float(kf.shape[-2]),
+                               jnp.float32)
+            gf = gf / jnp.maximum(cnt, 1.0)
+
+        # Each (nq, nk, d)-cube expression below must feed exactly ONE
+        # reduce: two consumers would defeat XLA's reduce-fusion (CSE merges
+        # the producers, the cube materializes — hundreds of GB).  Operands
+        # are cloned through optimization_barrier per consumer so every
+        # reduce owns a private, fully-fusable producer chain; the cube is
+        # recomputed inside each reduce loop instead of stored.
+        def _clone(*xs):
+            return jax.lax.optimization_barrier(xs)
+
+        def _dv_and_s(vf_, zc_, gm_):
+            if signed:
+                vp = jax.nn.relu(vf_)
+                vn = vf_ - vp
+                v1, z1, g1 = _clone(vf_, zc_, gm_)
+                ind_v = jnp.where(
+                    v1[..., None, :, :] > 0,
+                    jax.nn.relu(v1)[..., None, :, :] > z1,
+                    (v1 - jax.nn.relu(v1))[..., None, :, :] + z1 < 0)
+                dv_ = jnp.sum(jnp.where(ind_v, g1, 0.0), axis=-3)
+                v2, z2, g2 = _clone(vf_, zc_, gm_)
+                vp2 = jax.nn.relu(v2)
+                s_ = jnp.sum(
+                    jnp.where((v2 - vp2)[..., None, :, :] + z2 < 0, g2, 0.0)
+                    - jnp.where(vp2[..., None, :, :] > z2, g2, 0.0),
+                    axis=-1)
+            else:
+                v1, z1, g1 = _clone(vf_, zc_, gm_)
+                dv_ = jnp.sum(jnp.where(v1[..., None, :, :] > z1, g1, 0.0),
+                              axis=-3)
+                v2, z2, g2 = _clone(vf_, zc_, gm_)
+                s_ = -jnp.sum(jnp.where(v2[..., None, :, :] > z2, g2, 0.0),
+                              axis=-1)
+            return dv_, s_
+
+        zc = z[..., :, :, None]                          # (.., nq, nk, 1)
+        gc = gf[..., :, None, :]                         # (.., nq, 1, dv)
+        gm = gc if m is None else gc * m[..., None]      # mask inside sums
+        dv, s = _dv_and_s(vf, zc, gm)
+        s = constrain(s, "batch", "heads", "seq_sp")
+        t = s * (1.0 / gamma)
+        if shift:
+            t = t * (raw > shift)
+        q1, k1, t1 = _clone(qf, kf, t)
+        dq = jnp.sum(t1[..., None]
+                     * jnp.sign(q1[..., :, None, :] - k1[..., None, :, :]),
+                     axis=-2)
+        q2, k2, t2 = _clone(qf, kf, t)
+        dk = -jnp.sum(t2[..., None]
+                      * jnp.sign(q2[..., :, None, :] - k2[..., None, :, :]),
+                      axis=-3)
+
+        dmask = (jnp.zeros(mask01.shape, jax.dtypes.float0)
+                 if mask01 is not None else None)
+        return (dq.astype(qt.dtype), dk.astype(kt.dtype),
+                dv.astype(vt.dtype), dmask)
+
+    core.defvjp(core_fwd, core_bwd)
+    return core
+
+
+# ---------------------------------------------------------------------------
+# Full multi-head attention entry point
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(b, s, kv_heads, d) -> (b, s, kv_heads*n_rep, d) for GQA."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def inhibitor_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    score_scale: Optional[float] = None,
+    score_shift: float = 0.5,
+    signed: bool = True,
+    normalize: bool = True,
+) -> jax.Array:
+    """Multi-head inhibitor attention.
+
+    q: (b, n_q, h, d); k, v: (b, n_k, h_kv, d) with h % h_kv == 0 (GQA).
+    mask: broadcastable to (b, h, n_q, n_k), True = attend.
+    Returns (b, n_q, h, d) in q.dtype.
+
+    ``normalize``: divide H by n_k (the count of attendable keys when a mask
+    is given). The paper's H is an unnormalized sum, which makes the output
+    magnitude scale with sequence length; for deep stacked blocks at
+    production lengths we renormalize by the key count — a literal
+    (constant) multiplication, so it remains FHE-compatible and does not
+    change the mechanism (see DESIGN.md §2).
+    """
+    b, n_q, h, d = q.shape
+    n_k = k.shape[1]
+    h_kv = k.shape[2]
+    k = _repeat_kv(k, h // h_kv)
+    v = _repeat_kv(v, h // h_kv)
+
+    # (b, h, n, d) layout for score computation
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    from repro.distributed.sharding import constrain
+
+    gamma = score_scale if score_scale is not None else float(d) ** 0.5
+    if mask is not None:
+        mask = jnp.broadcast_to(mask, (b, h, n_q, n_k))
+        mask = constrain(mask, "batch", "heads", "seq_sp")
+    core = _make_inhibitor_core(float(gamma), float(score_shift),
+                                bool(signed), bool(normalize))
+    out = core(qt, kt, vt, mask)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise streaming form (exact; the Pallas kernel's structure)
+# ---------------------------------------------------------------------------
+
+def inhibitor_attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    score_scale: Optional[float] = None,
+    score_shift: float = 0.5,
+    signed: bool = True,
+    normalize: bool = True,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Inhibitor attention accumulated over key/value chunks.
+
+    Because inhibition is a *plain sum* of ReLU terms over j (no Softmax
+    normalizer), blockwise accumulation is exact and needs no running
+    max/denominator — this is the TPU dividend of the paper's formulation
+    (DESIGN.md §2). Shapes as :func:`inhibitor_attention`.
+    """
+    b, n_q, h, d = q.shape
+    n_k = k.shape[1]
+    h_kv = k.shape[2]
+    k = _repeat_kv(k, h // h_kv)
+    v = _repeat_kv(v, h // h_kv)
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32)  # (b, h, n_q, d)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    n_chunks = -(-n_k // kv_chunk)
+    pad = n_chunks * kv_chunk - n_k
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pad_mask = jnp.arange(n_k + pad) < n_k
+        if mask is None:
+            mask = jnp.broadcast_to(pad_mask[None, None, None, :],
+                                    (b, h, n_q, n_k + pad))
+        else:
+            mask = jnp.broadcast_to(mask, (b, h, n_q, n_k)) if mask.shape != (
+                b, h, n_q, n_k) else mask
+            mask = jnp.pad(mask, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    elif mask is not None:
+        mask = jnp.broadcast_to(mask, (b, h, n_q, n_k))
+
+    kt = kt.reshape(b, h, n_chunks, kv_chunk, d)
+    vt = vt.reshape(b, h, n_chunks, kv_chunk, d)
+    if mask is not None:
+        mask_c = mask.reshape(b, h, n_q, n_chunks, kv_chunk)
+
+    from repro.distributed.sharding import constrain
+
+    def body(carry, idx):
+        acc, cnt = carry
+        kc = kt[:, :, idx]                                 # (b, h, c, d)
+        vc = vt[:, :, idx]
+        z = manhattan_scores(qt, kc, score_scale=score_scale,
+                             score_shift=score_shift)      # (b, h, n_q, c)
+        z = constrain(z, "batch", "heads", "seq_sp")
+        if mask is not None:
+            m = mask_c[:, :, :, idx]
+            cnt = cnt + jnp.sum(m.astype(jnp.float32), axis=-1)
+        else:
+            m = None
+            cnt = cnt + float(kv_chunk)
+        if signed:
+            part = inhibit_signed_fused(vc, z, m)
+        else:
+            part = inhibit_fused(vc, z, m)
+        return (acc + part, cnt), None
+
+    acc0 = jnp.zeros((b, h, n_q, d), jnp.float32)
+    cnt0 = jnp.zeros((b, h, n_q), jnp.float32)
+    (acc, cnt), _ = jax.lax.scan(body, (acc0, cnt0), jnp.arange(n_chunks))
+    if normalize:
+        acc = acc / jnp.maximum(cnt[..., None], 1.0)
+    return acc.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Data: synthetic paper tasks + sharded deterministic pipeline."""
+
+from repro.data.pipeline import PipelineConfig, Prefetcher, lm_batch_at  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    adding_problem,
+    copy_words,
+    digits,
+    lm_tokens,
+    sentiment,
+)

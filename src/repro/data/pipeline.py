@@ -1,0 +1,91 @@
+"""Sharded, deterministic, resumable data pipeline.
+
+Production constraints this implements (DESIGN.md §3):
+
+  * **Determinism / resumability** — batches are a pure function of
+    (seed, step): restoring a checkpoint at step N replays the exact
+    stream with no iterator state to persist.
+  * **Sharding** — each data-parallel host materializes only its slice of
+    the global batch (``host_slice``); the global batch is assembled by
+    ``jax.make_array_from_process_local_data`` on real multi-host runs and
+    by simple concatenation in tests.
+  * **Prefetch** — a background thread keeps ``prefetch`` batches ahead of
+    the training loop (CPU generation overlaps the device step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_index: int = 0
+    prefetch: int = 2
+
+
+def _host_slice(cfg: PipelineConfig):
+    per_host = cfg.global_batch // cfg.num_hosts
+    lo = cfg.host_index * per_host
+    return lo, lo + per_host
+
+
+def lm_batch_at(cfg: PipelineConfig, step: int) -> Dict[str, np.ndarray]:
+    """The (seed, step)-determined LM batch slice for this host."""
+    from repro.data.synthetic import lm_tokens
+
+    lo, hi = _host_slice(cfg)
+    # derive a per-(step) seed; generate the host's rows only by offsetting
+    # the generator seed per host for independence + determinism
+    seed = (cfg.seed * 1_000_003 + step) % (2 ** 31 - 1)
+    tokens, labels = lm_tokens(hi - lo, cfg.seq_len, cfg.vocab_size,
+                               seed * cfg.num_hosts + cfg.host_index)
+    return {"tokens": tokens, "labels": labels}
+
+
+class Prefetcher:
+    """Background-thread prefetch over a (step -> batch) function."""
+
+    def __init__(self, batch_fn: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2):
+        self._fn = batch_fn
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._fn(step)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        # drain so the worker unblocks
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

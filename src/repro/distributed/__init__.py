@@ -1,0 +1,12 @@
+"""Distribution layer: sharding rules, collectives, pipeline, fault tolerance."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    ACT_RULES,
+    PARAM_RULES,
+    batch_spec,
+    constrain,
+    current_mesh,
+    param_sharding,
+    param_spec,
+    use_mesh,
+)

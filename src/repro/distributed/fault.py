@@ -1,0 +1,134 @@
+"""Fault tolerance: restart supervisor, straggler watchdog, elastic rescale.
+
+The unit of recovery is the committed checkpoint (checkpoint.store is
+atomic), so the supervisor's contract is simple:
+
+  run_supervised(build_fn, run_fn):
+      loop:
+          state <- restore latest committed checkpoint (or init)
+          run_fn(state)            # raises on step failure / preemption
+          on success: return
+          on StepFailure: log, rebuild (possibly on fewer hosts), retry
+
+Three production concerns covered here:
+
+  * **Node failure / preemption** — any exception inside the step loop
+    triggers restore-from-last-commit.  Because the data pipeline is a pure
+    function of (seed, step), the replay is exact.
+  * **Stragglers** — ``StepWatchdog`` tracks a robust EWMA of step time and
+    flags steps slower than ``threshold×`` the trend; the policy hook
+    decides (log / mark host suspect / trigger re-mesh).  On TPU pods the
+    usual mitigation is preemptive restart of the slow worker; we surface
+    the signal rather than hard-kill inside the loop.
+  * **Elastic rescale** — ``elastic_remesh_plan`` computes, for a reduced
+    healthy-host set, the largest usable (data, model) mesh and whether
+    the FSDP-sharded state can be re-sliced without resharding collectives
+    (it can whenever new_data_parallelism divides the old).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+class StepFailure(RuntimeError):
+    """Raised by the training loop when a step fails in a recoverable way
+    (device error, NaN loss with strict mode, preemption notice)."""
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 3
+    restart_backoff_s: float = 1.0
+
+
+def run_supervised(run_fn: Callable[[int], None],
+                   cfg: Optional[SupervisorConfig] = None) -> int:
+    """Run ``run_fn(attempt)`` under restart supervision.
+
+    ``run_fn`` must restore its own state from the latest committed
+    checkpoint (CheckpointManager.restore_or_init does this).  Returns the
+    number of restarts consumed.
+    """
+    cfg = cfg or SupervisorConfig()
+    attempt = 0
+    while True:
+        try:
+            run_fn(attempt)
+            return attempt
+        except StepFailure as e:
+            attempt += 1
+            if attempt > cfg.max_restarts:
+                log.error("restart budget exhausted after %d attempts",
+                          attempt)
+                raise
+            log.warning("step failure (%s); restart %d/%d after %.1fs",
+                        e, attempt, cfg.max_restarts, cfg.restart_backoff_s)
+            time.sleep(cfg.restart_backoff_s)
+
+
+class StepWatchdog:
+    """Robust straggler detector over step wall times."""
+
+    def __init__(self, threshold: float = 2.5, ewma: float = 0.9,
+                 warmup_steps: int = 5):
+        self.threshold = threshold
+        self.ewma = ewma
+        self.warmup = warmup_steps
+        self._mean: Optional[float] = None
+        self._seen = 0
+        self.flagged: list = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True when ``step`` is a straggler."""
+        self._seen += 1
+        if self._mean is None:
+            self._mean = seconds
+            return False
+        is_slow = (self._seen > self.warmup
+                   and seconds > self.threshold * self._mean)
+        if is_slow:
+            self.flagged.append((step, seconds, self._mean))
+        else:
+            # only fold non-straggler steps into the trend
+            self._mean = self.ewma * self._mean + (1 - self.ewma) * seconds
+        return is_slow
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    pods: int
+    resliceable: bool     # FSDP shards re-slice without gather
+
+
+def elastic_remesh_plan(healthy_chips: int, *, model_parallelism: int,
+                        old_data_parallelism: int,
+                        chips_per_pod: int = 256) -> RemeshPlan:
+    """Largest mesh on the healthy chip set keeping TP degree fixed.
+
+    TP degree is architecture-determined (head/expert divisibility), so
+    elasticity trades only the data axis.  The FSDP state re-slices locally
+    iff the new data parallelism divides the old (each new shard is a
+    concatenation of old ones); otherwise restore goes through the
+    checkpoint reshard path.
+    """
+    if healthy_chips < model_parallelism:
+        raise ValueError("not enough chips for one model replica")
+    new_data = healthy_chips // model_parallelism
+    # prefer power-of-two data axes (collective efficiency)
+    while new_data & (new_data - 1):
+        new_data -= 1
+    pods = max(1, (new_data * model_parallelism) // chips_per_pod)
+    return RemeshPlan(
+        data=new_data // pods if pods > 1 else new_data,
+        model=model_parallelism,
+        pods=pods,
+        resliceable=(old_data_parallelism % new_data == 0),
+    )

@@ -1,0 +1,202 @@
+"""Logical-axis → mesh-axis sharding rules and helpers.
+
+Parameters and activations carry *logical* axis names ("embed", "heads",
+"vocab", "expert", "batch", "seq", ...).  A rules table maps each logical
+name to a mesh axis (or None = replicated).  This indirection is what lets
+ten architectures share one distribution layer: changing the parallelism
+strategy is a rules-table edit, not a model edit.
+
+Axis roles (DESIGN.md §6):
+  * ``pod``   — pure data parallelism across pods (cross-pod all-reduce)
+  * ``data``  — FSDP: batch sharding + parameter/optimizer-state sharding
+  * ``model`` — tensor parallelism (heads / mlp / vocab / experts) and
+                sequence parallelism for activations in norm regions
+
+``activation_rules`` differ from ``param_rules``: e.g. "embed" on a
+*parameter* is FSDP-sharded over ``data``, while "embed" on an *activation*
+is TP-sharded over ``model`` only in projection regions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rules tables
+# ---------------------------------------------------------------------------
+
+# Parameter logical axes.  FSDP ("data") shards one large dim of each weight;
+# TP ("model") shards heads/mlp/vocab/expert dims.
+PARAM_RULES = {
+    "embed": ("data",),            # d_model dim of weights -> FSDP
+    "heads": ("model",),           # query-head dim -> TP
+    "kv_heads": ("model",),        # kv-head dim -> TP
+    "head_dim": (),                # never sharded
+    "mlp": ("model",),             # FFN hidden -> TP
+    "heads_mlp": ("model",),       # fused head*dim projections (ssm/rwkv)
+    "vocab": ("model",),           # embedding/vocab -> TP
+    "expert": ("model",),          # MoE expert axis -> EP (over model)
+    "layers": (),                  # stacked-scan layer axis
+    None: (),
+}
+
+# Activation logical axes.
+ACT_RULES = {
+    "batch": ("pod", "data"),      # batch -> DP across pod×data
+    "batch_heads": ("pod", "data", "model"),  # merged b×h dim (blocked attn)
+    "seq": (),                     # sequence replicated by default
+    "seq_sp": ("model",),          # sequence-parallel regions
+    "embed": (),                   # d_model on activations: replicated
+    "heads": ("model",),           # per-head activations -> TP
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    None: (),
+}
+
+
+class _ShardingCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.param_rules = dict(PARAM_RULES)
+        self.act_rules = dict(ACT_RULES)
+
+
+_CTX = _ShardingCtx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, *, param_rules=None, act_rules=None):
+    """Activate a mesh + rules for logical-axis constraint helpers."""
+    prev = (_CTX.mesh, _CTX.param_rules, _CTX.act_rules)
+    _CTX.mesh = mesh
+    if param_rules is not None:
+        _CTX.param_rules = dict(param_rules)
+    if act_rules is not None:
+        _CTX.act_rules = dict(act_rules)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.mesh, _CTX.param_rules, _CTX.act_rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _spec_from_axes(axes, rules, mesh) -> P:
+    parts = []
+    used = set()
+    for name in axes:
+        mesh_axes = rules.get(name, ())
+        # keep only axes present in this mesh and not already used
+        eligible = tuple(a for a in mesh_axes
+                         if a in mesh.axis_names and a not in used)
+        used.update(eligible)
+        if not eligible:
+            parts.append(None)
+        elif len(eligible) == 1:
+            parts.append(eligible[0])
+        else:
+            parts.append(eligible)
+    # PartitionSpec trailing Nones are implicit
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _divisible(shape, spec, mesh) -> bool:
+    for dim, part in zip(shape, spec):
+        if part is None:
+            continue
+        names = part if isinstance(part, tuple) else (part,)
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if dim % size:
+            return False
+    return True
+
+
+def param_spec(axes, shape=None, mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a parameter with logical ``axes``.
+
+    If ``shape`` is given, sharded dims that do not divide evenly fall back
+    to replication (keeps tiny reduced-config tests shardable)."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P()
+    spec = _spec_from_axes(axes, _CTX.param_rules, mesh)
+    if shape is not None and not _divisible(shape, spec, mesh):
+        # drop offending axes one dim at a time
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, part in enumerate(parts):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            if shape[i] % size:
+                parts[i] = None
+        while parts and parts[-1] is None:
+            parts.pop()
+        spec = P(*parts)
+    return spec
+
+
+def param_sharding(axes_tree, arr_tree, mesh: Optional[Mesh] = None):
+    """Tree of NamedSharding for an unboxed param tree + axes tree."""
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None
+
+    def one(axes, arr):
+        return NamedSharding(mesh, param_spec(axes, arr.shape, mesh))
+
+    return jax.tree.map(one, axes_tree, arr_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint via activation logical axes. No-op when no
+    mesh is active (single-device tests). Dims whose size does not divide
+    their mesh axes fall back to replication *per dim* — when an early
+    logical axis is dropped this way, later axes mapping to the same mesh
+    axis get their chance (e.g. ("heads", "seq_sp") both -> "model": a
+    40-head tensor on a 16-way axis shards its seq dim instead)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    rules = _CTX.act_rules
+    parts = []
+    used = set()
+    for i, name in enumerate(axes):
+        mesh_axes = rules.get(name, ())
+        eligible = tuple(a for a in mesh_axes
+                         if a in mesh.axis_names and a not in used)
+        if eligible and i < x.ndim:
+            size = int(np.prod([mesh.shape[a] for a in eligible]))
+            if x.shape[i] % size == 0 and x.shape[i] >= size:
+                used.update(eligible)
+                parts.append(eligible[0] if len(eligible) == 1
+                             else eligible)
+                continue
+        parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a (batch, ...) input array."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P()
+    return _spec_from_axes(("batch",), _CTX.act_rules, mesh)

@@ -1,0 +1,9 @@
+"""TFHE simulation layer: exact integer circuits + cost/parameter models."""
+
+from repro.fhe.circuits import (  # noqa: F401
+    dotprod_attention_circuit,
+    inhibitor_attention_circuit,
+)
+from repro.fhe.cost import circuit_seconds, describe, pbs_seconds  # noqa: F401
+from repro.fhe.params import TfheParams, select_params  # noqa: F401
+from repro.fhe.tfhe_sim import EncTensor, FheContext, decrypt, encrypt  # noqa: F401

@@ -1,0 +1,47 @@
+"""TFHE macro-parameter selection from circuit statistics.
+
+Mirrors what the Concrete optimizer (Bergerat et al. 2023) does from the
+outside: given the message-space bit-width a circuit's PBS inputs require,
+pick (polySize, lweDim, decomposition) meeting the noise/failure budget.
+The table below follows the published Concrete parameter curves at
+p_fail ≈ 2⁻⁴⁰ and reproduces the paper's Table 2 structure: polySize
+doubles when the PBS message width crosses ~6 bits, lweDim creeps with
+width, and the dot-product arm lands 1–2 bits (and often one polySize
+step) above the inhibitor arm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TfheParams:
+    lwe_dim: int
+    poly_size: int
+    base_log: int
+    level: int
+    msg_bits: int        # message space the PBS table must cover
+
+
+# (max message bits at PBS) -> parameter point (Concrete-style curve)
+_PARAM_CURVE = (
+    (4, TfheParams(lwe_dim=750, poly_size=1024, base_log=23, level=1, msg_bits=4)),
+    (5, TfheParams(lwe_dim=800, poly_size=2048, base_log=23, level=1, msg_bits=5)),
+    (6, TfheParams(lwe_dim=840, poly_size=2048, base_log=23, level=1, msg_bits=6)),
+    (7, TfheParams(lwe_dim=870, poly_size=4096, base_log=22, level=1, msg_bits=7)),
+    (8, TfheParams(lwe_dim=900, poly_size=4096, base_log=22, level=1, msg_bits=8)),
+    (9, TfheParams(lwe_dim=930, poly_size=8192, base_log=15, level=2, msg_bits=9)),
+    (10, TfheParams(lwe_dim=950, poly_size=8192, base_log=15, level=2, msg_bits=10)),
+    (12, TfheParams(lwe_dim=980, poly_size=16384, base_log=15, level=2, msg_bits=12)),
+    (16, TfheParams(lwe_dim=1024, poly_size=32768, base_log=9, level=3, msg_bits=16)),
+)
+
+
+def select_params(max_bits_at_pbs: int) -> TfheParams:
+    for bits, params in _PARAM_CURVE:
+        if max_bits_at_pbs <= bits:
+            return params
+    raise ValueError(
+        f"message width {max_bits_at_pbs} bits exceeds the 16-bit TFHE "
+        "table-lookup ceiling (paper §Computational Efficiency)")

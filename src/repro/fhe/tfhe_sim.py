@@ -1,0 +1,181 @@
+"""TFHE circuit simulator: exact integer semantics + cost/noise accounting.
+
+We cannot run the Concrete compiler in this environment, so the paper's FHE
+axis (Tables 2 & 4) is reproduced with a *faithful cost simulator*: every
+homomorphic operation on an :class:`EncTensor` executes the exact integer
+arithmetic (so circuit outputs are bit-exact with a cleartext reference)
+while a :class:`FheContext` records, per TFHE's actual cost structure:
+
+  * ``pbs``      — programmable bootstraps.  Univariate LUT = 1 PBS per
+                   element; ciphertext×ciphertext multiplication = 2 PBS per
+                   element via the paper's eq. 1–2 identity
+                   ``ab = PBS(x²/4; a+b) − PBS(x²/4; a−b)``.
+  * ``adds``     — ciphertext additions/subtractions (levelled, cheap).
+  * ``lit_muls`` — literal (plaintext-constant) multiplications (cheap).
+  * ``max_bits`` — the message-space bit-width high-water mark: every
+                   intermediate's dynamic range is tracked, because TFHE
+                   circuit parameters (polySize, lweDim) are chosen from the
+                   largest value that must survive a PBS (paper Table 2).
+
+The ``x²/4`` trick needs the *sum* a+b inside the table, so a k-bit × k-bit
+product costs a (k+1)-bit table — this is exactly why the paper's dot-
+product circuits need 1–2 bits more than the inhibitor circuits (their
+last-two-column gap in Table 2), and the simulator reproduces it for free
+by tracking ranges of PBS *inputs*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FheContext:
+    """Operation counters + message-space tracking for one circuit."""
+
+    pbs: int = 0
+    adds: int = 0
+    lit_muls: int = 0
+    max_bits: int = 0           # widest signed message seen at a PBS input
+    max_bits_any: int = 0       # widest signed message anywhere
+    trace: bool = False
+
+    def _observe(self, arr: np.ndarray, at_pbs: bool):
+        amax = int(np.max(np.abs(arr))) if arr.size else 0
+        bits = max(1, int(amax).bit_length()) + 1  # signed representation
+        self.max_bits_any = max(self.max_bits_any, bits)
+        if at_pbs:
+            self.max_bits = max(self.max_bits, bits)
+
+    def count_pbs(self, arr: np.ndarray, n_per_element: int = 1):
+        self.pbs += int(arr.size) * n_per_element
+        self._observe(arr, at_pbs=True)
+
+    def count_add(self, arr: np.ndarray):
+        self.adds += int(arr.size)
+        self._observe(arr, at_pbs=False)
+
+    def count_lit_mul(self, arr: np.ndarray):
+        self.lit_muls += int(arr.size)
+        self._observe(arr, at_pbs=False)
+
+    def summary(self) -> dict:
+        return {
+            "pbs": self.pbs,
+            "adds": self.adds,
+            "lit_muls": self.lit_muls,
+            "max_bits_at_pbs": self.max_bits,
+            "max_bits_any": self.max_bits_any,
+        }
+
+
+class EncTensor:
+    """An "encrypted" integer tensor: exact values + cost accounting.
+
+    Supports exactly the operations TFHE supports natively or via PBS:
+    add/sub (cheap), multiply-by-literal (cheap), univariate LUT (1 PBS per
+    element), ciphertext multiply (2 PBS per element), and the derived
+    relu/abs/sign/square/max helpers the two attention circuits need.
+    """
+
+    def __init__(self, values: np.ndarray, ctx: FheContext):
+        self.values = np.asarray(values, dtype=np.int64)
+        self.ctx = ctx
+
+    # ---- structure ----
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def reshape(self, *shape):
+        return EncTensor(self.values.reshape(*shape), self.ctx)
+
+    def __getitem__(self, idx):
+        return EncTensor(self.values[idx], self.ctx)
+
+    # ---- levelled ops (no PBS) ----
+    def __add__(self, other):
+        if isinstance(other, EncTensor):
+            out = self.values + other.values
+        else:
+            out = self.values + np.asarray(other, dtype=np.int64)
+        self.ctx.count_add(out)
+        return EncTensor(out, self.ctx)
+
+    def __sub__(self, other):
+        if isinstance(other, EncTensor):
+            out = self.values - other.values
+        else:
+            out = self.values - np.asarray(other, dtype=np.int64)
+        self.ctx.count_add(out)
+        return EncTensor(out, self.ctx)
+
+    def __neg__(self):
+        return EncTensor(-self.values, self.ctx)
+
+    def mul_literal(self, c) -> "EncTensor":
+        out = self.values * np.asarray(c, dtype=np.int64)
+        self.ctx.count_lit_mul(out)
+        return EncTensor(out, self.ctx)
+
+    def shift_right(self, k: int) -> "EncTensor":
+        """Arithmetic shift (literal division by 2^k) — levelled rescale."""
+        out = self.values >> k
+        self.ctx.count_lit_mul(out)
+        return EncTensor(out, self.ctx)
+
+    def sum(self, axis=None) -> "EncTensor":
+        out = self.values.sum(axis=axis)
+        # a tree of ciphertext additions
+        self.ctx.adds += max(int(self.values.size - out.size), 0)
+        self.ctx._observe(out, at_pbs=False)
+        return EncTensor(out, self.ctx)
+
+    # ---- PBS ops ----
+    def lut(self, fn: Callable[[np.ndarray], np.ndarray],
+            n_pbs: int = 1) -> "EncTensor":
+        """Univariate table lookup: 1 PBS per element.
+
+        The *input* range determines the required table size — that is the
+        message-space bit-width recorded for parameter selection.
+        """
+        self.ctx.count_pbs(self.values, n_pbs)
+        return EncTensor(fn(self.values).astype(np.int64), self.ctx)
+
+    def relu(self) -> "EncTensor":
+        return self.lut(lambda x: np.maximum(x, 0))
+
+    def abs(self) -> "EncTensor":
+        return self.lut(np.abs)
+
+    def sign(self) -> "EncTensor":
+        return self.lut(np.sign)
+
+    def mul_cipher(self, other: "EncTensor") -> "EncTensor":
+        """Ciphertext × ciphertext via eq. 1: two PBS of x²/4 over a+b, a−b.
+
+        Exact for integers: (a+b)² − (a−b)² = 4ab; the x²/4 table rounds,
+        and the two roundings cancel exactly when a+b and a−b share parity
+        (always true). PBS inputs a±b are observed for width tracking —
+        the +1 bit over the operands is the paper's Table 2 gap.
+        """
+        s = self.values + other.values
+        d = self.values - other.values
+        self.ctx.count_pbs(s, 1)
+        self.ctx.count_pbs(d, 1)
+        self.ctx.adds += 2 * int(s.size) + int(s.size)
+        out = (s * s - d * d) // 4
+        self.ctx._observe(out, at_pbs=False)
+        return EncTensor(out, self.ctx)
+
+
+def encrypt(values: np.ndarray, ctx: Optional[FheContext] = None):
+    ctx = ctx or FheContext()
+    return EncTensor(np.asarray(values, dtype=np.int64), ctx), ctx
+
+
+def decrypt(t: EncTensor) -> np.ndarray:
+    return t.values.copy()

@@ -1,0 +1,161 @@
+"""Flash attention (dot-product Softmax) — the paper's baseline mechanism,
+as a blockwise Pallas TPU kernel with the standard running-max/denominator
+online-Softmax recurrence.
+
+Kept deliberately symmetric with :mod:`repro.kernels.inhibitor` (same grid,
+same BlockSpecs, same GQA grouping) so the two mechanisms' HLO and roofline
+terms are directly comparable — this is the kernel-level analogue of the
+paper's Tables 3/4 comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *,
+    score_scale: float,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (group, bq, d)
+    group, bq, d = q.shape
+    ks = k_ref[0].astype(jnp.float32)         # (bk, d)
+    vs = v_ref[0].astype(jnp.float32)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+    m_blk = k_pos < kv_len
+    if causal:
+        m_blk = m_blk & (k_pos <= q_pos)
+    if window is not None:
+        m_blk = m_blk & (k_pos > q_pos - window)
+
+    def do_block():
+        s = jnp.einsum("gqd,kd->gqk", q, ks) * (1.0 / score_scale)
+        s = jnp.where(m_blk[None], s, NEG_INF)
+        m_prev = m_ref[...]                                 # (g, bq)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # fully-masked rows: exp(NEG_INF - NEG_INF) = 1 — zero them out
+        p = p * jnp.any(m_blk, axis=-1)[None, :, None]
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc_ref[...] * alpha[..., None] + jnp.einsum("gqk,kd->gqd", p, vs)
+        return acc, m_new, l_new
+
+    live = True
+    if causal:
+        live = (ik * block_k) <= (iq * block_q + block_q - 1)
+    if isinstance(live, bool):
+        acc, m_new, l_new = do_block()
+    else:
+        acc, m_new, l_new = jax.lax.cond(
+            live, do_block,
+            lambda: (acc_ref[...], m_ref[...], l_ref[...]))
+
+    acc_ref[...] = acc
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    score_scale: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (b, n_q, h, d); k, v: (b, n_k, h_kv, d) -> (b, n_q, h, d)."""
+    batch, n_q, heads, d = q.shape
+    n_k, kv_heads = k.shape[1], k.shape[2]
+    assert heads % kv_heads == 0
+    group = heads // kv_heads
+    scale = score_scale if score_scale is not None else math.sqrt(d)
+
+    block_q = min(block_q, max(8, 1 << (n_q - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (n_k - 1).bit_length()))
+    nq_pad = -n_q % block_q
+    nk_pad = -n_k % block_k
+
+    qg = q.reshape(batch, n_q, kv_heads, group, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(batch * kv_heads, group, n_q, d)
+    kg = k.transpose(0, 2, 1, 3).reshape(batch * kv_heads, n_k, d)
+    vg = v.transpose(0, 2, 1, 3).reshape(batch * kv_heads, n_k, d)
+    if nq_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, nq_pad), (0, 0)))
+    if nk_pad:
+        kg = jnp.pad(kg, ((0, 0), (0, nk_pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, nk_pad), (0, 0)))
+
+    n_q_blocks = (n_q + nq_pad) // block_q
+    n_kv_blocks = (n_k + nk_pad) // block_k
+    grid = (batch * kv_heads, n_q_blocks, n_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_attention_kernel,
+        score_scale=scale, causal=causal, window=window, kv_len=n_k,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_kv_blocks,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, block_q, d), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, block_q, d),
+                               lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (batch * kv_heads, group, n_q + nq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, block_q, d), jnp.float32),
+            pltpu.VMEM((group, block_q), jnp.float32),
+            pltpu.VMEM((group, block_q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out[:, :, :n_q, :]
+    out = out.reshape(batch, kv_heads, group, n_q, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(batch, n_q, heads, d)

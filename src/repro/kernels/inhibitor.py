@@ -1,0 +1,231 @@
+"""Flash-Inhibitor: blockwise-streaming Pallas TPU kernel for the paper's
+attention mechanism (eq. 5 + eq. 10/9 fused forms).
+
+TPU adaptation (DESIGN.md §2): the paper's eq. 9 decomposition
+``H = ½·Σ V − ½·Σ Z + ½·Σ |V − Z|`` accumulates term-by-term over key/value
+blocks, so the n×n score matrix never exists in HBM.  Because inhibition is
+a plain sum (no Softmax normalizer) the blockwise accumulation is *exact* —
+no running max/denominator rescaling passes, which Softmax flash attention
+must do on the VPU.
+
+Memory hierarchy:
+  * Q block (group, block_q, d), K/V blocks (block_k, d) staged in VMEM by
+    BlockSpec; output accumulator + key-count live in VMEM scratch across
+    the sequential kv-block grid dimension.
+  * The Manhattan/inhibition cross terms need (rows × keys × d) cubes;
+    these are tiled over ``sub_k``-sized key slices inside the kernel so the
+    live cube is (group, block_q, sub_k, d) — VMEM-bounded regardless of
+    block_k.
+  * GQA: the grid is over (batch × kv_heads); all ``group = heads/kv_heads``
+    query heads sharing one KV head are processed together against a single
+    staged K/V block (KV HBM traffic is paid once per group, not per head).
+
+Masking (causal / sliding window / padded tail) is computed from block
+indices with ``broadcasted_iota`` — no mask tensors in HBM.  Masked pairs
+are excluded from the sums by multiplication (exact-zero contribution; see
+core.inhibitor for why additive large-constant masking is unstable in the
+fused form).
+
+Validated in ``interpret=True`` mode against :mod:`repro.kernels.ref`
+(tests/test_kernel_inhibitor.py sweeps shapes/dtypes/window/shift).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 128
+DEFAULT_SUB_K = 16
+
+
+def _flash_inhibitor_kernel(
+    # refs
+    q_ref, k_ref, v_ref, o_ref, acc_ref, cnt_ref,
+    *,
+    score_scale: float,
+    score_shift: float,
+    signed: bool,
+    normalize: bool,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    sub_k: int,
+    n_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (group, block_q, d)
+    group, bq, d = q.shape
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, sub_k), 0)
+
+    def process_sub(s, carry):
+        acc, cnt = carry
+        ks = k_ref[0, pl.ds(s * sub_k, sub_k), :].astype(jnp.float32)
+        vs = v_ref[0, pl.ds(s * sub_k, sub_k), :].astype(jnp.float32)
+
+        # ---- scores: Z = relu(Σ_d |q − k| / γ − α)  (eq. 5 + shift) ----
+        diff = jnp.abs(q[:, :, None, :] - ks[None, None, :, :])
+        z = jnp.sum(diff, axis=-1) * (1.0 / score_scale)   # (g, bq, sub_k)
+        if score_shift:
+            z = jnp.maximum(z - score_shift, 0.0)
+
+        # ---- block mask from positions (True = attend) ----
+        k_pos = (ik * block_k + s * sub_k
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, sub_k), 1))
+        m = k_pos < kv_len
+        if causal:
+            m = m & (k_pos <= q_pos)
+        if window is not None:
+            m = m & (k_pos > q_pos - window)
+        mf = m.astype(jnp.float32)                          # (bq, sub_k)
+
+        # ---- inhibition (masked fused forms, eq. 9 / eq. 10) ----
+        col_v = jnp.einsum("qs,sd->qd", mf, vs)             # (bq, d)
+        if signed:
+            vp = jnp.maximum(vs, 0.0)
+            vn = vs - vp
+            t_pos = jnp.sum(jnp.abs(vp[None, None, :, :] - z[..., None])
+                            * mf[None, :, :, None], axis=2)
+            t_neg = jnp.sum(jnp.abs(-vn[None, None, :, :] - z[..., None])
+                            * mf[None, :, :, None], axis=2)
+            part = 0.5 * (col_v[None] + t_pos - t_neg)      # (g, bq, d)
+        else:
+            row_z = jnp.sum(z * mf[None], axis=-1)          # (g, bq)
+            cross = jnp.sum(jnp.abs(vs[None, None, :, :] - z[..., None])
+                            * mf[None, :, :, None], axis=2)
+            part = 0.5 * (col_v[None] - row_z[..., None] + cross)
+
+        acc = acc + part
+        cnt = cnt + jnp.sum(mf, axis=-1)                    # (bq,)
+        return acc, cnt
+
+    acc = acc_ref[...]
+    cnt = cnt_ref[..., 0]
+    n_sub = block_k // sub_k
+
+    if causal:
+        # skip fully-masked blocks (whole kv block strictly above diagonal)
+        first_q = iq * block_q
+        first_k = ik * block_k
+        live = first_k <= first_q + block_q - 1
+    else:
+        live = True
+
+    def do_block():
+        return jax.lax.fori_loop(0, n_sub, process_sub, (acc, cnt))
+
+    if isinstance(live, bool):
+        acc, cnt = do_block()
+    else:
+        acc, cnt = jax.lax.cond(live, do_block, lambda: (acc, cnt))
+
+    acc_ref[...] = acc
+    cnt_ref[..., 0] = cnt
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        out = acc_ref[...]
+        if normalize:
+            out = out / jnp.maximum(cnt_ref[..., 0], 1.0)[None, :, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_inhibitor_fwd(
+    q: jax.Array,            # (batch, n_q, heads, d)
+    k: jax.Array,            # (batch, n_k, kv_heads, d)
+    v: jax.Array,            # (batch, n_k, kv_heads, d)
+    *,
+    score_scale: Optional[float] = None,
+    score_shift: float = 0.5,
+    signed: bool = True,
+    normalize: bool = True,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    sub_k: int = DEFAULT_SUB_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas flash-inhibitor forward pass. Returns (batch, n_q, heads, d).
+
+    Sequences are padded to block multiples internally; the pad tail is
+    excluded via the kv_len mask.
+    """
+    batch, n_q, heads, d = q.shape
+    n_k, kv_heads = k.shape[1], k.shape[2]
+    assert heads % kv_heads == 0
+    group = heads // kv_heads
+    scale = score_scale if score_scale is not None else math.sqrt(d)
+
+    block_q = min(block_q, max(8, 1 << (n_q - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (n_k - 1).bit_length()))
+    sub_k = min(sub_k, block_k)
+    if block_k % sub_k:
+        sub_k = math.gcd(block_k, sub_k)
+
+    nq_pad = -n_q % block_q
+    nk_pad = -n_k % block_k
+
+    # (batch, kv_heads, group, n_q, d) — group-major so one KV stage serves
+    # all query heads of its group
+    qg = q.reshape(batch, n_q, kv_heads, group, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(batch * kv_heads, group, n_q, d)
+    kg = k.transpose(0, 2, 1, 3).reshape(batch * kv_heads, n_k, d)
+    vg = v.transpose(0, 2, 1, 3).reshape(batch * kv_heads, n_k, d)
+    if nq_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, nq_pad), (0, 0)))
+    if nk_pad:
+        kg = jnp.pad(kg, ((0, 0), (0, nk_pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, nk_pad), (0, 0)))
+
+    n_q_blocks = (n_q + nq_pad) // block_q
+    n_kv_blocks = (n_k + nk_pad) // block_k
+    grid = (batch * kv_heads, n_q_blocks, n_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_inhibitor_kernel,
+        score_scale=scale, score_shift=score_shift, signed=signed,
+        normalize=normalize, causal=causal, window=window, kv_len=n_k,
+        block_q=block_q, block_k=block_k, sub_k=sub_k,
+        n_kv_blocks=n_kv_blocks,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, block_q, d), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, block_q, d),
+                               lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (batch * kv_heads, group, n_q + nq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out[:, :, :n_q, :]
+    out = out.reshape(batch, kv_heads, group, n_q, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(batch, n_q, heads, d)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers for the Pallas kernels, with CPU-fallback dispatch
+and a recompute-based custom VJP so the kernels are usable in training.
+
+On a CPU-only host (this container, CI) the wrappers run the kernels in
+``interpret=True`` mode — the kernel body executes as XLA ops, which keeps
+a single code path for tests and the multi-pod dry-run.  On TPU the same
+calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.flash import flash_attention_fwd
+from repro.kernels.inhibitor import flash_inhibitor_fwd
+from repro.kernels.rwkv6 import wkv6_chunked
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# flash inhibitor (paper's mechanism)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_inhibitor(q, k, v, score_scale=None, score_shift=0.5, signed=True,
+                    normalize=True, causal=True, window=None):
+    """Flash-inhibitor attention with recompute-based backward.
+
+    Forward runs the Pallas kernel; backward recomputes via the jnp
+    reference (activation-checkpoint style — no score matrix is saved).
+    """
+    return flash_inhibitor_fwd(
+        q, k, v, score_scale=score_scale, score_shift=score_shift,
+        signed=signed, normalize=normalize, causal=causal, window=window,
+        interpret=not _on_tpu())
+
+
+def _fi_fwd(q, k, v, score_scale, score_shift, signed, normalize, causal,
+            window):
+    out = flash_inhibitor(q, k, v, score_scale, score_shift, signed,
+                          normalize, causal, window)
+    return out, (q, k, v)
+
+
+def _fi_bwd(score_scale, score_shift, signed, normalize, causal, window,
+            res, g):
+    q, k, v = res
+
+    def f(q_, k_, v_):
+        return kref.flash_inhibitor_ref(
+            q_, k_, v_, score_scale=score_scale, score_shift=score_shift,
+            signed=signed, normalize=normalize, causal=causal, window=window)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_inhibitor.defvjp(_fi_fwd, _fi_bwd)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (baseline mechanism)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, score_scale=None, causal=True, window=None):
+    return flash_attention_fwd(
+        q, k, v, score_scale=score_scale, causal=causal, window=window,
+        interpret=not _on_tpu())
+
+
+def _fa_fwd(q, k, v, score_scale, causal, window):
+    out = flash_attention(q, k, v, score_scale, causal, window)
+    return out, (q, k, v)
+
+
+def _fa_bwd(score_scale, causal, window, res, g):
+    q, k, v = res
+
+    def f(q_, k_, v_):
+        return kref.flash_attention_ref(
+            q_, k_, v_, score_scale=score_scale, causal=causal, window=window)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv6(r, k, v, w, u, state=None, *, chunk: int = 32):
+    """Chunked WKV6 (kernel) when starting from zero state; falls back to
+    the exact scan when a carry state is provided (decode path)."""
+    if state is not None:
+        return kref.wkv6_ref(r, k, v, w, u, state)
+    return wkv6_chunked(r, k, v, w, u, chunk=chunk,
+                        interpret=not _on_tpu())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+They are thin reorderings of the core/nn reference implementations so that
+the kernels and the model code share a single source of truth.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dotprod import dot_product_attention
+from repro.core.inhibitor import (
+    causal_mask,
+    inhibitor_attention,
+    sliding_window_mask,
+)
+from repro.nn.ssm import wkv6_scan_ref
+
+
+def _mask_for(n_q: int, n_k: int, causal: bool, window: Optional[int]):
+    # Kernel convention: query block positions start at 0 (training/prefill);
+    # decode goes through the jnp cache path, not the kernel.
+    if causal and window is not None:
+        return sliding_window_mask(n_q, n_k, window)[None, None]
+    if causal:
+        return causal_mask(n_q, n_k)[None, None]
+    if window is not None:
+        return sliding_window_mask(n_q, n_k, window)[None, None]
+    return None
+
+
+def flash_inhibitor_ref(q, k, v, *, score_scale=None, score_shift=0.5,
+                        signed=True, normalize=True, causal=True,
+                        window=None):
+    """Oracle for kernels.inhibitor.flash_inhibitor_fwd."""
+    mask = _mask_for(q.shape[1], k.shape[1], causal, window)
+    return inhibitor_attention(
+        q, k, v, mask=mask, score_scale=score_scale,
+        score_shift=score_shift, signed=signed, normalize=normalize)
+
+
+def flash_attention_ref(q, k, v, *, score_scale=None, causal=True,
+                        window=None):
+    """Oracle for kernels.flash.flash_attention_fwd."""
+    mask = _mask_for(q.shape[1], k.shape[1], causal, window)
+    return dot_product_attention(q, k, v, mask=mask, score_scale=score_scale)
+
+
+def wkv6_ref(r, k, v, w, u, state=None):
+    """Oracle for kernels.rwkv6.wkv6_chunked (exact lax.scan recurrence)."""
+    return wkv6_scan_ref(r, k, v, w, u, state)

@@ -1,0 +1,144 @@
+"""RWKV-6 (Finch) WKV chunked-scan Pallas kernel.
+
+The recurrence per head (state S ∈ R^{n×n}, n = head_dim):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+
+The kernel processes the sequence in chunks of length ``chunk``: the state
+is carried in VMEM scratch across the sequential chunk grid dimension, and
+*within* a chunk all positions are computed at once:
+
+  * carry term   : (r_t ⊙ e^{cw_t}) @ S          — one matmul per chunk
+  * intra term   : A[t,s] = Σ_k r_tk k_sk e^{cw_t − cw_s}  for s < t,
+                   plus the diag bonus  A[t,t] = Σ_k r_tk k_tk u_k,
+                   then  o += A @ v               — cube + matmul
+  * state update : S ← diag(e^{cw_L}) S + Σ_s (k_s ⊙ e^{cw_L − cw_s})ᵀ v_s
+
+All exponents are differences of the within-chunk cumulative log-decay
+``cw_t = Σ_{s≤t} log w_s`` with the later index subtracted, hence ≤ 0 —
+every ``exp`` is in (0, 1] and the computation is overflow-free for any
+decay magnitude (no clamping or rescaling needed).  This is the TPU-native
+replacement for the CUDA kernel's per-warp sequential loop: sequential
+chunk grid + vectorized intra-chunk cube, sized to VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, o_ref, sfin_ref,
+                 s_ref, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)       # (chunk, n)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    logw = logw_ref[0].astype(jnp.float32)  # (chunk, n), entries ≤ 0
+    u = u_ref[0].astype(jnp.float32)        # (1, n) -> broadcast
+    S = s_ref[...]                          # (n, n) carry
+
+    cw = jnp.cumsum(logw, axis=0)           # (chunk, n) cumulative log decay
+
+    # carry term: o_t += (r_t ⊙ e^{cw_{t-1}}) @ S ; cw_{t-1} = cw_t − logw_t
+    cw_prev = cw - logw
+    o = jnp.einsum("tn,nm->tm", r * jnp.exp(cw_prev), S)
+
+    # intra-chunk: A[t,s] = Σ_n r_tn k_sn e^{cw_{t-1,n} − cw_{s,n}}, s < t
+    # exponent = cw_prev[t] − cw[s] ≤ 0 for s ≤ t−1  (decay over (s, t−1])
+    expo = cw_prev[:, None, :] - cw[None, :, :]          # (t, s, n)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
+        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w_ts = jnp.exp(jnp.minimum(expo, 0.0)) * tri[..., None]
+    A = jnp.einsum("tn,sn,tsn->ts", r, k, w_ts)
+    # diagonal bonus: o_t += (r_t ⊙ u ⊙ k_t) · v_t
+    diag = jnp.sum(r * u * k, axis=-1)                    # (chunk,)
+    o = o + jnp.einsum("ts,sm->tm", A, v) + diag[:, None] * v
+
+    # state update: S ← diag(e^{cw_L}) S + Σ_s (k_s e^{cw_L − cw_s})ᵀ v_s
+    decay_all = jnp.exp(cw[-1])                           # (n,)
+    k_scaled = k * jnp.exp(cw[-1][None, :] - cw)          # (chunk, n)
+    S = decay_all[:, None] * S + jnp.einsum("sn,sm->nm", k_scaled, v)
+
+    s_ref[...] = S
+    o_ref[0] = o.astype(o_ref.dtype)
+    # the (bh, 0, 0) output block is revisited every chunk; the last write
+    # (final chunk) is the state that lands in HBM
+    sfin_ref[0] = S.astype(sfin_ref.dtype)
+
+
+def wkv6_chunked(
+    r: jax.Array,      # (b, t, h, n)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,      # (b, t, h, n) decay in (0, 1)
+    u: jax.Array,      # (h, n) bonus
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """Chunked WKV6. Returns (out (b, t, h, n), final_state (b, h, n, n)).
+
+    Initial state is zero (prefill). Decode uses the single-step jnp path
+    (one token does not need a kernel).
+    """
+    b, t, h, n = r.shape
+    pad = -t % chunk
+    # floor at a *normal* fp32 value: subnormals (≤1.17e-38) can be flushed
+    # to zero by the backend, and log(0) = -inf poisons the exponent algebra
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+
+    def prep(x):
+        x = x.transpose(0, 2, 1, 3).reshape(b * h, t, n)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return x
+
+    rg, kg, vg, lwg = prep(r), prep(k), prep(v), prep(lw)
+    if pad:
+        # padded tail: zero k/v ⇒ no state contribution; logw 0 ⇒ no decay
+        lwg = lwg.at[:, t:, :].set(0.0)
+    ug = jnp.broadcast_to(u.astype(jnp.float32)[:, None, :], (h, 1, n))
+    ug = jnp.tile(ug, (b, 1, 1)).reshape(b * h, 1, n)
+
+    tp = t + pad
+    n_chunks = tp // chunk
+    grid = (b * h, n_chunks)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    out, sfin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, 1, n), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, n, n), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, tp, n), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rg, kg, vg, lwg, ug)
+
+    out = out[:, :t].reshape(b, h, t, n).transpose(0, 2, 1, 3)
+    return out, sfin.reshape(b, h, n, n)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+device query, and tests must keep seeing 1 device.
+
+Axis roles (DESIGN.md §6):
+  pod   — data parallelism across pods (slow inter-pod links)
+  data  — FSDP + batch sharding within a pod
+  model — tensor/expert/sequence parallelism within a pod
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    """Arbitrary mesh for tests/examples (e.g. (2, 2) on 4 CPU devices)."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,97 @@
+"""Sharding-spec assembly for the jitted step functions.
+
+Centralizes how (params, opt_state, batch, decode-states) map onto the
+mesh, so dryrun/train/serve all compile the same distribution:
+
+  * params      — logical axes via the rules table (FSDP over ``data``,
+                  TP/EP over ``model``), with divisibility fallback.
+  * opt state   — moments mirror the param shardings; scalars replicated.
+  * batch       — leading dim over ("pod", "data").
+  * states      — decode caches: batch dim over ("pod", "data"); one
+                  additional dim TP-sharded over ``model`` by preference
+                  order (sequence dim for KV buffers — the production
+                  choice for long-context serving — else the first
+                  model-divisible feature dim).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import param_spec
+from repro.nn.module import Param, axes_of, is_param, unbox
+
+
+def batch_axes_for(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def params_shardings(boxed_struct, mesh: Mesh):
+    """Boxed eval_shape tree -> (unboxed struct, shardings tree)."""
+    axes = axes_of(boxed_struct)
+    struct = unbox(boxed_struct)
+
+    def one(ax, st):
+        return NamedSharding(mesh, param_spec(ax, st.shape, mesh))
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    sh = jax.tree.map(one, axes, struct, is_leaf=is_axes_leaf)
+    return struct, sh
+
+
+def opt_shardings(opt_struct, param_shardings_tree, mesh: Mesh):
+    """Moments inherit param shardings; scalars/steps replicated."""
+    repl = NamedSharding(mesh, P())
+
+    def build(os, ps_tree):
+        # os: AdamWState(step, mu, nu) — mu/nu mirror params
+        return type(os)(step=repl, mu=ps_tree, nu=ps_tree)
+
+    return build(opt_struct, param_shardings_tree)
+
+
+def batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    ba = batch_axes_for(mesh)
+    out = {}
+    for k, s in specs.items():
+        bsize = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+        if s.shape and s.shape[0] % max(bsize, 1) == 0 and ba:
+            out[k] = NamedSharding(mesh, P(ba))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def state_shardings(state_struct, mesh: Mesh):
+    """Decode-state shardings by shape heuristics (see module docstring)."""
+    ba = batch_axes_for(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(st):
+        if not hasattr(st, "shape") or st.ndim == 0:
+            return P()
+        parts = [None] * st.ndim
+        # dim 0 is the stacked layer axis; dim 1 is batch
+        if st.ndim >= 2 and ba and st.shape[1] % bsize == 0:
+            parts[1] = ba
+        if "model" in mesh.axis_names:
+            for i in range(2, st.ndim):
+                if st.shape[i] % msize == 0 and st.shape[i] >= msize:
+                    parts[i] = "model"
+                    break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    return jax.tree.map(lambda st: NamedSharding(mesh, spec_for(st)),
+                        state_struct)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,223 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+Frontend stub per assignment: the encoder consumes precomputed frame
+embeddings (b, n_frames, d_frontend) — ``input_specs`` provides them; the
+speech frontend itself is out of scope.  Both stacks scan over stacked
+layer params; the decoder has self-attention (causal, cached at decode)
+plus cross-attention over the encoder memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import (AttentionConfig, KVCache, apply_attention,
+                                  init_attention, init_kv_cache)
+from repro.distributed.sharding import constrain
+from repro.nn import embedding as emb
+from repro.nn import norm as normnn
+from repro.nn.linear import apply_dense, init_dense
+from repro.nn.module import KeyGen, Param
+
+
+class DecLayerState(NamedTuple):
+    kv: KVCache
+
+
+def _enc_attn_cfg(cfg: ModelConfig) -> AttentionConfig:
+    return dataclasses.replace(cfg.attention, causal=False)
+
+
+def _cross_attn_cfg(cfg: ModelConfig) -> AttentionConfig:
+    return dataclasses.replace(cfg.attention, causal=False, use_rope=False)
+
+
+def _init_norm(cfg, dtype):
+    if cfg.norm == "rmsnorm":
+        return normnn.init_rmsnorm(cfg.d_model, dtype=dtype)
+    return normnn.init_layernorm(cfg.d_model, dtype=dtype)
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return normnn.apply_rmsnorm(p, x, eps=cfg.norm_eps)
+    return normnn.apply_layernorm(p, x, eps=cfg.norm_eps)
+
+
+def _init_ffn(key, cfg, dtype):
+    from repro.nn.mlp import init_mlp
+    return init_mlp(key, cfg.d_model, cfg.d_ff, use_bias=True, dtype=dtype)
+
+
+def _apply_ffn(cfg, p, x, cdt):
+    from repro.nn.mlp import apply_mlp
+    return apply_mlp(p, x, activation="relu", compute_dtype=cdt)
+
+
+def init_enc_block(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    return {
+        "ln1": _init_norm(cfg, dtype),
+        "attn": init_attention(kg("attn"), _enc_attn_cfg(cfg), cfg.d_model,
+                               dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+        "ffn": _init_ffn(kg("ffn"), cfg, dtype),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    return {
+        "ln1": _init_norm(cfg, dtype),
+        "self_attn": init_attention(kg("self"), cfg.attention, cfg.d_model,
+                                    dtype=dtype),
+        "ln_cross": _init_norm(cfg, dtype),
+        "cross_attn": init_attention(kg("cross"), _cross_attn_cfg(cfg),
+                                     cfg.d_model, dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+        "ffn": _init_ffn(kg("ffn"), cfg, dtype),
+    }
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    ed = cfg.encdec
+
+    enc_keys = jax.random.split(kg("enc"), ed.encoder_layers)
+    dec_keys = jax.random.split(kg("dec"), ed.decoder_layers)
+    enc = jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys)
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys)
+    stack = lambda tree: jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes) if isinstance(p, Param)
+        else p, tree, is_leaf=lambda p: isinstance(p, Param))
+
+    return {
+        # frontend stub projection: frame embeddings -> d_model
+        "frontend_proj": init_dense(kg("fp"), (cfg.frontend.embed_dim,),
+                                    (cfg.d_model,), (None,), ("embed",),
+                                    use_bias=True, dtype=dtype),
+        "embed": emb.init_embedding(kg("embed"), cfg.vocab_size, cfg.d_model,
+                                    dtype=dtype),
+        "encoder": stack(enc),
+        "enc_norm": _init_norm(cfg, dtype),
+        "decoder": stack(dec),
+        "dec_norm": _init_norm(cfg, dtype),
+        "lm_head": init_dense(kg("head"), (cfg.d_model,), (cfg.vocab_size,),
+                              ("embed",), ("vocab",), dtype=dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array):
+    """frames: (b, n_src, d_frontend) -> encoder memory (b, n_src, d)."""
+    cdt = cfg.cdtype
+    x = apply_dense(params["frontend_proj"], frames.astype(cdt), 1, cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    acfg = _enc_attn_cfg(cfg)
+
+    def body(h, lp):
+        a, _ = apply_attention(lp["attn"], acfg, _apply_norm(cfg, lp["ln1"], h),
+                               positions=positions, compute_dtype=cdt)
+        h = h + a
+        f = _apply_ffn(cfg, lp["ffn"], _apply_norm(cfg, lp["ln2"], h), cdt)
+        h = h + f
+        return constrain(h, "batch", "seq_sp", "embed"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    if cfg.unroll:
+        from repro.models.transformer import unrolled_scan
+        x, _ = unrolled_scan(body_fn, x, params["encoder"],
+                             cfg.encdec.encoder_layers)
+    else:
+        x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return _apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(lp, cfg, h, memory, positions, state, cdt):
+    a, new_kv = apply_attention(
+        lp["self_attn"], cfg.attention, _apply_norm(cfg, lp["ln1"], h),
+        positions=positions, cache=state.kv if state is not None else None,
+        compute_dtype=cdt)
+    h = h + a
+    c, _ = apply_attention(
+        lp["cross_attn"], _cross_attn_cfg(cfg),
+        _apply_norm(cfg, lp["ln_cross"], h), x_kv=memory, compute_dtype=cdt)
+    h = h + c
+    f = _apply_ffn(cfg, lp["ffn"], _apply_norm(cfg, lp["ln2"], h), cdt)
+    h = h + f
+    return constrain(h, "batch", "seq_sp", "embed"), new_kv
+
+
+def decode_train(params, cfg: ModelConfig, memory, tokens):
+    """Teacher-forced decoder. tokens (b, t) -> logits (b, t, V)."""
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(h, lp):
+        h, _ = _dec_block(lp, cfg, h, memory, positions, None, cdt)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    if cfg.unroll:
+        from repro.models.transformer import unrolled_scan
+        x, _ = unrolled_scan(body_fn, x, params["decoder"],
+                             cfg.encdec.decoder_layers)
+    else:
+        x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+    x = _apply_norm(cfg, params["dec_norm"], x)
+    logits = apply_dense(params["lm_head"], x, 1, cdt)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward_train(params, cfg: ModelConfig, frames, tokens):
+    """Full seq2seq training forward: (frames, target tokens) -> logits."""
+    memory = encode(params, cfg, frames)
+    return decode_train(params, cfg, memory, tokens)
+
+
+def init_states(cfg: ModelConfig, batch: int, max_len: int, *,
+                per_slot: bool = False) -> DecLayerState:
+    a = cfg.attention
+    kv = init_kv_cache(batch, max_len, a.num_kv_heads, a.head_dim,
+                       dtype=cfg.cdtype, per_slot=per_slot)
+    L = cfg.encdec.decoder_layers
+    kv = KVCache(*(jnp.broadcast_to(t[None], (L,) + t.shape)
+                   for t in (kv.k, kv.v)),
+                 jnp.broadcast_to(kv.length, (L,)))
+    return DecLayerState(kv=kv)
+
+
+def decode_step(params, cfg: ModelConfig, memory, tokens,
+                states: DecLayerState):
+    """Incremental decode: tokens (b, t) appended at the cache cursor."""
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    b, t, _ = x.shape
+    offset = states.kv.length[0]
+    positions = jnp.broadcast_to(jnp.arange(t)[None] + offset, (b, t))
+
+    def body(h, layer_in):
+        lp, st = layer_in
+        h, new_kv = _dec_block(lp, cfg, h, memory, positions,
+                               DecLayerState(st), cdt)
+        return h, new_kv
+
+    if cfg.unroll:
+        from repro.models.transformer import unrolled_scan
+        x, new_kv = unrolled_scan(body, x, (params["decoder"], states.kv),
+                                  cfg.encdec.decoder_layers)
+    else:
+        x, new_kv = jax.lax.scan(body, x, (params["decoder"], states.kv))
+    x = _apply_norm(cfg, params["dec_norm"], x)
+    logits = apply_dense(params["lm_head"], x, 1, cdt)
+    return logits, DecLayerState(kv=new_kv)

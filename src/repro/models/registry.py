@@ -1,0 +1,169 @@
+"""Model registry: one uniform API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelApi` whose members close over the
+config:
+
+  * ``init(key)``                      -> param tree (boxed)
+  * ``forward(params, batch)``         -> (logits, aux)      [train/prefill]
+  * ``init_states(batch, max_len)``    -> decode state
+  * ``step(params, tokens, states, batch)`` -> (logits, states')  [decode]
+  * ``input_specs(shape)``             -> dict of ShapeDtypeStruct stand-ins
+
+``input_specs`` is the single source of truth for the dry-run: it describes
+every array the train/serve step consumes (tokens, labels, frontend
+embeddings) as ShapeDtypeStructs — weak-type-correct, shardable, no device
+allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_m
+from repro.models import rwkv as rwkv_m
+from repro.models import transformer as tfm
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable          # (params, batch) -> (logits, aux)
+    init_states: Callable      # (batch_size, max_len) -> states
+    step: Callable             # (params, tokens, states, batch) -> (logits, states')
+    input_specs: Callable      # (ShapeConfig) -> dict[str, ShapeDtypeStruct]
+
+
+def _lm_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    s = shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a KV cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def _vlm_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = _lm_specs(cfg, shape)
+    fe = cfg.frontend
+    n_img = fe.tokens_per_item * fe.max_tiles
+    if shape.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, n_img, fe.embed_dim), jnp.float32)
+        # image tokens occupy the front of the sequence; text fills the rest
+        text_len = max(shape.seq_len - n_img, 1)
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, text_len), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, text_len + n_img), jnp.int32)
+    return specs
+
+
+def _encdec_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    fe = cfg.frontend
+    src = min(shape.seq_len, cfg.encdec.max_source_len)
+    if shape.kind == "train":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, src, fe.embed_dim),
+                                           jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, src, fe.embed_dim),
+                                           jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        }
+    return {
+        "memory": jax.ShapeDtypeStruct((b, src, cfg.d_model), jnp.float32),
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+    }
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "hybrid"):
+        def forward(params, batch):
+            return tfm.lm_forward(params, cfg, batch["tokens"])
+
+        def step(params, tokens, states, batch=None):
+            return tfm.lm_step(params, cfg, tokens, states)
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: tfm.init_lm(key, cfg),
+            forward=forward,
+            init_states=lambda b, s, **kw: tfm.init_states(cfg, b, s, **kw),
+            step=step,
+            input_specs=lambda shape: _lm_specs(cfg, shape),
+        )
+
+    if cfg.family == "vlm":
+        def forward(params, batch):
+            return tfm.lm_forward(params, cfg, batch["tokens"],
+                                  extra_embeds=batch.get("image_embeds"))
+
+        def step(params, tokens, states, batch=None):
+            return tfm.lm_step(params, cfg, tokens, states)
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: tfm.init_lm(key, cfg),
+            forward=forward,
+            init_states=lambda b, s, **kw: tfm.init_states(cfg, b, s, **kw),
+            step=step,
+            input_specs=lambda shape: _vlm_specs(cfg, shape),
+        )
+
+    if cfg.family == "ssm":
+        def forward(params, batch):
+            # Pallas WKV kernel on TPU; pure-jnp scan on CPU (tests/dry-run
+            # compile for the host backend, where the kernel would need
+            # interpret mode inside SPMD)
+            use_kernel = jax.default_backend() == "tpu"
+            return rwkv_m.lm_forward(params, cfg, batch["tokens"],
+                                     use_kernel=use_kernel)
+
+        def step(params, tokens, states, batch=None):
+            return rwkv_m.lm_step(params, cfg, tokens, states)
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: rwkv_m.init_lm(key, cfg),
+            forward=forward,
+            init_states=lambda b, s, **kw: rwkv_m.init_states(cfg, b, s, **kw),
+            step=step,
+            input_specs=lambda shape: _lm_specs(cfg, shape),
+        )
+
+    if cfg.family == "encdec":
+        def forward(params, batch):
+            logits = encdec_m.forward_train(params, cfg, batch["frames"],
+                                            batch["tokens"])
+            return logits, jnp.zeros((2,), jnp.float32)
+
+        def step(params, tokens, states, batch=None):
+            return encdec_m.decode_step(params, cfg, batch["memory"], tokens,
+                                        states)
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec_m.init_model(key, cfg),
+            forward=forward,
+            init_states=lambda b, s, **kw: encdec_m.init_states(cfg, b, s, **kw),
+            step=step,
+            input_specs=lambda shape: _encdec_specs(cfg, shape),
+        )
+
+    raise ValueError(f"unknown family {cfg.family!r}")

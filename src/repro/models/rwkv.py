@@ -1,0 +1,161 @@
+"""RWKV-6 (Finch) language model — attention-free SSM family.
+
+The Inhibitor technique replaces dot-product *attention*; RWKV has none,
+so this architecture is implemented faithfully without it (DESIGN.md
+§Arch-applicability).  Blocks scan over stacked layer params like the
+transformer; training/prefill uses the chunked WKV Pallas kernel path,
+decode carries (wkv state, time-mix shift token, channel-mix shift token)
+per layer.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.nn import embedding as emb
+from repro.nn import norm as normnn
+from repro.nn import ssm as ssmnn
+from repro.nn.module import KeyGen, Param
+
+
+class RwkvLayerState(NamedTuple):
+    wkv: jax.Array        # (b, h, n, n) wkv state
+    tm_x: jax.Array       # (b, d) last token seen by time-mix
+    cm_x: jax.Array       # (b, d) last token seen by channel-mix
+
+
+def _num_heads(cfg: ModelConfig) -> int:
+    return cfg.attention.num_heads
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    return {
+        "ln1": normnn.init_layernorm(cfg.d_model, dtype=dtype),
+        "time_mix": ssmnn.init_rwkv6_timemix(
+            kg("tm"), cfg.d_model, _num_heads(cfg),
+            lora_dim=cfg.ssm.lora_dim, decay_lora_dim=cfg.ssm.decay_lora_dim,
+            dtype=dtype),
+        "ln2": normnn.init_layernorm(cfg.d_model, dtype=dtype),
+        "channel_mix": ssmnn.init_rwkv6_channelmix(
+            kg("cm"), cfg.d_model, cfg.d_ff, dtype=dtype),
+    }
+
+
+def apply_block(params, cfg: ModelConfig, x, *,
+                state: Optional[RwkvLayerState] = None,
+                use_kernel: bool = True):
+    cdt = cfg.cdtype
+    h = normnn.apply_layernorm(params["ln1"], x, eps=cfg.norm_eps)
+    h = constrain(h, "batch", "seq_sp", "embed")
+    a, (wkv_state, tm_x) = ssmnn.apply_rwkv6_timemix(
+        params["time_mix"], h, _num_heads(cfg),
+        state=state.wkv if state is not None else None,
+        x_prev=state.tm_x if state is not None else None,
+        use_kernel=use_kernel and state is None, compute_dtype=cdt)
+    x = x + a
+    h2 = normnn.apply_layernorm(params["ln2"], x, eps=cfg.norm_eps)
+    f, cm_x = ssmnn.apply_rwkv6_channelmix(
+        params["channel_mix"], h2,
+        x_prev=state.cm_x if state is not None else None, compute_dtype=cdt)
+    x = x + f
+    x = constrain(x, "batch", "seq_sp", "embed")
+    return x, RwkvLayerState(wkv_state, tm_x, cm_x)
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    layer_keys = jax.random.split(kg("blocks"), cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    blocks = jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes) if isinstance(p, Param)
+        else p, blocks, is_leaf=lambda p: isinstance(p, Param))
+    p = {
+        "embed": emb.init_embedding(kg("embed"), cfg.vocab_size, cfg.d_model,
+                                    dtype=dtype),
+        "ln_in": normnn.init_layernorm(cfg.d_model, dtype=dtype),
+        "blocks": blocks,
+        "final_norm": normnn.init_layernorm(cfg.d_model, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        from repro.nn.linear import init_dense
+        p["lm_head"] = init_dense(kg("lm_head"), (cfg.d_model,),
+                                  (cfg.vocab_size,), ("embed",), ("vocab",),
+                                  dtype=dtype)
+    return p
+
+
+def _scan_blocks(params, cfg, x, states=None, use_kernel=True):
+    def body(carry, layer_in):
+        h = carry
+        if states is None:
+            lp, st = layer_in, None
+        else:
+            lp, st = layer_in
+        h, new_state = apply_block(lp, cfg, h, state=st,
+                                   use_kernel=use_kernel)
+        return h, new_state
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    xs = params["blocks"] if states is None else (params["blocks"], states)
+    if cfg.unroll:
+        from repro.models.transformer import unrolled_scan
+        return unrolled_scan(body_fn, x, xs, cfg.num_layers)
+    return jax.lax.scan(body_fn, x, xs)
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, positions=None,
+               extra_embeds=None, use_kernel: bool = True):
+    del positions, extra_embeds
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    x = normnn.apply_layernorm(params["ln_in"], x, eps=cfg.norm_eps)
+    x = constrain(x, "batch", "seq_sp", "embed")
+    x, _ = _scan_blocks(params, cfg, x, use_kernel=use_kernel)
+    x = normnn.apply_layernorm(params["final_norm"], x, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = emb.attend_logits(params["embed"], x, compute_dtype=cdt)
+    else:
+        from repro.nn.linear import apply_dense
+        logits = apply_dense(params["lm_head"], x, 1, cdt)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, jnp.zeros((2,), jnp.float32)
+
+
+def init_states(cfg: ModelConfig, batch: int, max_len: int, *,
+                per_slot: bool = False) -> RwkvLayerState:
+    """Stacked decode state. RWKV state is O(1) in sequence length — the
+    ``max_len``/``per_slot`` args are accepted for API symmetry; the
+    recurrent state is inherently per-row."""
+    del max_len, per_slot
+    h = _num_heads(cfg)
+    n = cfg.d_model // h
+    L = cfg.num_layers
+    return RwkvLayerState(
+        wkv=jnp.zeros((L, batch, h, n, n), jnp.float32),
+        tm_x=jnp.zeros((L, batch, cfg.d_model), cfg.cdtype),
+        cm_x=jnp.zeros((L, batch, cfg.d_model), cfg.cdtype),
+    )
+
+
+def lm_step(params, cfg: ModelConfig, tokens, states: RwkvLayerState):
+    """Decode step (t tokens, recurrent state carry)."""
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    x = normnn.apply_layernorm(params["ln_in"], x, eps=cfg.norm_eps)
+    x, new_states = _scan_blocks(params, cfg, x, states=states,
+                                 use_kernel=False)
+    x = normnn.apply_layernorm(params["final_norm"], x, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = emb.attend_logits(params["embed"], x, compute_dtype=cdt)
+    else:
+        from repro.nn.linear import apply_dense
+        logits = apply_dense(params["lm_head"], x, 1, cdt)
+    return logits, new_states

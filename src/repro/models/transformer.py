@@ -1,0 +1,309 @@
+"""Decoder-only transformer LM covering the dense / MoE / hybrid families.
+
+One homogeneous, `lax.scan`-able block per config: parameters are stacked
+with a leading ("layers",) axis and the forward pass scans over them, so
+the compiled HLO contains each layer's program once regardless of depth
+(30–48 layers compile in seconds, and remat policy applies per layer).
+
+Block (pre-norm):
+    a   = token_mixer(norm1(x))        # attention, or attention ∥ mamba
+    x   = x + a
+    f   = ffn_or_moe(norm2(x))
+    x   = x + f
+
+The token mixer's attention mechanism — dot-product or the paper's
+Inhibitor — is selected by ``cfg.attention.kind``; the hybrid family
+(hymba) averages a parallel mamba branch with the attention branch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import (
+    AttentionConfig, KVCache, apply_attention, init_attention, init_kv_cache)
+from repro.distributed.sharding import constrain
+from repro.nn import embedding as emb
+from repro.nn import mlp as mlpnn
+from repro.nn import moe as moenn
+from repro.nn import norm as normnn
+from repro.nn import ssm as ssmnn
+from repro.nn.module import KeyGen, Param, fold_key
+
+
+# ---------------------------------------------------------------------------
+# Per-layer state (decode caches)
+# ---------------------------------------------------------------------------
+
+class LayerState(NamedTuple):
+    """Decode-time state for ONE layer (stacked over layers in practice)."""
+    kv: Optional[KVCache] = None          # attention cache
+    ssm: Optional[jax.Array] = None       # mamba ssm state (b, c, n)
+    conv: Optional[jax.Array] = None      # mamba conv carry (b, k-1, c)
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "rmsnorm":
+        return normnn.init_rmsnorm(cfg.d_model, dtype=dtype)
+    return normnn.init_layernorm(cfg.d_model, dtype=dtype)
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return normnn.apply_rmsnorm(p, x, eps=cfg.norm_eps)
+    return normnn.apply_layernorm(p, x, eps=cfg.norm_eps)
+
+
+def _init_ffn(key, cfg: ModelConfig, dtype):
+    if cfg.mlp == "gated_silu":
+        return mlpnn.init_gated_mlp(key, cfg.d_model, cfg.d_ff,
+                                    use_bias=cfg.mlp_bias, dtype=dtype)
+    return mlpnn.init_mlp(key, cfg.d_model, cfg.d_ff,
+                          use_bias=cfg.mlp_bias, dtype=dtype)
+
+
+def _apply_ffn(cfg: ModelConfig, p, x, cdt):
+    if cfg.mlp == "gated_silu":
+        return mlpnn.apply_gated_mlp(p, x, activation="silu",
+                                     compute_dtype=cdt)
+    act = "gelu" if cfg.mlp == "mlp_gelu" else "relu"
+    return mlpnn.apply_mlp(p, x, activation=act, compute_dtype=cdt)
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+    p = {
+        "ln1": _init_norm(cfg, dtype),
+        "attn": init_attention(kg("attn"), cfg.attention, cfg.d_model,
+                               dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+    }
+    if cfg.family == "hybrid":
+        assert cfg.ssm is not None and cfg.ssm.kind == "mamba"
+        inner = cfg.ssm.inner_dim or 2 * cfg.d_model
+        p["mamba"] = ssmnn.init_mamba(
+            kg("mamba"), cfg.d_model, inner, state_dim=cfg.ssm.state_dim,
+            conv_dim=cfg.ssm.conv_dim, dt_rank=cfg.ssm.dt_rank, dtype=dtype)
+        # learned per-branch output scales (hymba fuses mean of normed outs)
+        p["branch_scale"] = Param(jnp.ones((2,), dtype), (None,))
+    if cfg.moe is not None:
+        p["moe"] = moenn.init_moe(
+            kg("moe"), cfg.d_model, cfg.moe.expert_hidden_dim,
+            cfg.moe.effective_experts,
+            shared_hidden_dim=cfg.moe.shared_hidden_dim,
+            shared_gate=cfg.moe.shared_gate, dtype=dtype)
+    else:
+        p["ffn"] = _init_ffn(kg("ffn"), cfg, dtype)
+    return p
+
+
+def apply_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                positions=None, state: Optional[LayerState] = None,
+                attn_mask=None):
+    """Returns (x, new_state, aux_losses (2,))."""
+    cdt = cfg.cdtype
+    h = _apply_norm(cfg, params["ln1"], x)
+    h = constrain(h, "batch", "seq_sp", "embed")
+
+    kv = state.kv if state is not None else None
+    a, new_kv = apply_attention(params["attn"], cfg.attention, h,
+                                positions=positions, cache=kv,
+                                attn_mask=attn_mask, compute_dtype=cdt)
+
+    new_ssm = new_conv = None
+    if cfg.family == "hybrid":
+        m, (new_ssm, new_conv) = ssmnn.apply_mamba(
+            params["mamba"], h, state_dim=cfg.ssm.state_dim,
+            ssm_state=state.ssm if state is not None else None,
+            conv_state=state.conv if state is not None else None,
+            compute_dtype=cdt)
+        s = params["branch_scale"].astype(cdt)
+        a = 0.5 * (s[0] * a + s[1] * m)
+
+    x = x + a
+    x = constrain(x, "batch", "seq_sp", "embed")
+
+    h2 = _apply_norm(cfg, params["ln2"], x)
+    aux = jnp.zeros((2,), jnp.float32)
+    if cfg.moe is not None:
+        f, moe_aux = moenn.apply_moe(
+            params["moe"], h2, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            normalize_topk=cfg.moe.normalize_topk, compute_dtype=cdt)
+        aux = jnp.stack([moe_aux.load_balance_loss, moe_aux.router_z_loss])
+    else:
+        f = _apply_ffn(cfg, params["ffn"], h2, cdt)
+    x = x + f
+    x = constrain(x, "batch", "seq_sp", "embed")
+
+    new_state = LayerState(kv=new_kv, ssm=new_ssm, conv=new_conv)
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    kg = KeyGen(key)
+    dtype = cfg.pdtype
+
+    # stacked block params: vmap init over per-layer keys -> leading
+    # ("layers",) axis on every leaf
+    layer_keys = jax.random.split(kg("blocks"), cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    blocks = jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes) if isinstance(p, Param)
+        else p, blocks, is_leaf=lambda p: isinstance(p, Param))
+
+    p = {
+        "embed": emb.init_embedding(kg("embed"), cfg.vocab_size, cfg.d_model,
+                                    dtype=dtype),
+        "blocks": blocks,
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        from repro.nn.linear import init_dense
+        p["lm_head"] = init_dense(kg("lm_head"), (cfg.d_model,),
+                                  (cfg.vocab_size,), ("embed",), ("vocab",),
+                                  dtype=dtype)
+    if cfg.frontend is not None:
+        from repro.nn.linear import init_dense
+        p["frontend_proj"] = init_dense(
+            kg("frontend_proj"), (cfg.frontend.embed_dim,), (cfg.d_model,),
+            (None,), ("embed",), use_bias=True, dtype=dtype)
+    return p
+
+
+def _scan_blocks(params, cfg: ModelConfig, x, positions, states=None,
+                 attn_mask=None):
+    """Scan apply_block over stacked layer params (and optional states)."""
+
+    def body(carry, layer_in):
+        h = carry
+        if states is None:
+            lp = layer_in
+            st = None
+        else:
+            lp, st = layer_in
+        h, new_state, aux = apply_block(lp, cfg, h, positions=positions,
+                                        state=st, attn_mask=attn_mask)
+        return h, (new_state if states is not None else None, aux)
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = params["blocks"] if states is None else (params["blocks"], states)
+    if cfg.unroll:
+        x, (new_states, auxs) = unrolled_scan(body_fn, x, xs, cfg.num_layers)
+    else:
+        x, (new_states, auxs) = jax.lax.scan(body_fn, x, xs)
+    return x, new_states, jnp.sum(auxs, axis=0)
+
+
+def unrolled_scan(body_fn, carry, xs, length: int):
+    """Python-loop drop-in for lax.scan (dry-run cost extraction)."""
+    ys = []
+    for i in range(length):
+        layer_in = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body_fn(carry, layer_in)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+               positions: Optional[jax.Array] = None,
+               extra_embeds: Optional[jax.Array] = None):
+    """Training / prefill forward. tokens: (b, s) int32 -> logits (b, s, V).
+
+    ``extra_embeds``: (b, n_extra, frontend_dim) modality-stub embeddings
+    prepended to the token embeddings (VLM/audio families).
+    Returns (logits, aux(2,)).
+    """
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    if extra_embeds is not None:
+        from repro.nn.linear import apply_dense
+        fe = apply_dense(params["frontend_proj"], extra_embeds.astype(cdt),
+                         1, cdt)
+        x = jnp.concatenate([fe, x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = constrain(x, "batch", "seq_sp", "embed")
+    x, _, aux = _scan_blocks(params, cfg, x, positions)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = emb.attend_logits(params["embed"], x, compute_dtype=cdt)
+    else:
+        from repro.nn.linear import apply_dense
+        logits = apply_dense(params["lm_head"], x, 1, cdt)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def init_states(cfg: ModelConfig, batch: int, max_len: int, *,
+                per_slot: bool = False) -> LayerState:
+    """Stacked (num_layers-leading) decode state for the LM.
+
+    ``per_slot``: per-batch-row cache cursors (ragged continuous batching).
+    """
+    a = cfg.attention
+    kv = init_kv_cache(batch, max_len, a.num_kv_heads, a.head_dim,
+                       dtype=cfg.cdtype, per_slot=per_slot)
+    kv = jax.tree.map(lambda t: jnp.broadcast_to(
+        t[None], (cfg.num_layers,) + t.shape), kv)
+    kv = KVCache(kv.k, kv.v, kv.length)
+    ssm = conv = None
+    if cfg.family == "hybrid":
+        inner = cfg.ssm.inner_dim or 2 * cfg.d_model
+        ssm = jnp.zeros((cfg.num_layers, batch, inner, cfg.ssm.state_dim),
+                        jnp.float32)
+        conv = jnp.zeros((cfg.num_layers, batch, cfg.ssm.conv_dim - 1, inner),
+                         cfg.cdtype)
+    return LayerState(kv=kv, ssm=ssm, conv=conv)
+
+
+def lm_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            states: LayerState):
+    """Decode step: tokens (b, t) appended at states.kv.length.
+
+    Returns (logits (b, t, V), new_states)."""
+    cdt = cfg.cdtype
+    x = emb.apply_embedding(params["embed"], tokens, compute_dtype=cdt)
+    b, t, _ = x.shape
+    # states are layer-stacked: kv.length is (L,) shared or (L, b) ragged.
+    # positions=None lets each layer derive RoPE positions from its cursor.
+    st = states
+    if st.kv.length.ndim == 0:
+        st = st._replace(kv=KVCache(
+            st.kv.k, st.kv.v,
+            jnp.broadcast_to(st.kv.length, (cfg.num_layers,))))
+    x, new_states, _ = _scan_blocks(params, cfg, x, None, states=st)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = emb.attend_logits(params["embed"], x, compute_dtype=cdt)
+    else:
+        from repro.nn.linear import apply_dense
+        logits = apply_dense(params["lm_head"], x, 1, cdt)
+    return logits, new_states

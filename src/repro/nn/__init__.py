@@ -1,0 +1,15 @@
+"""Pure-JAX neural-net substrate (no flax/haiku dependency)."""
+
+from repro.nn.module import (  # noqa: F401
+    KeyGen,
+    Param,
+    axes_of,
+    box_like,
+    cast_params,
+    fold_key,
+    is_param,
+    param_bytes,
+    param_count,
+    tree_map_params,
+    unbox,
+)

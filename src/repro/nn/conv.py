@@ -1,0 +1,61 @@
+"""Convolution wrappers (used by modality-frontend examples and tests).
+
+Production audio/vision frontends are stubs per the assignment (the
+backbone consumes precomputed frame/patch embeddings); these layers back
+the IAMW-style handwriting example (paper Table 1) and unit tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import KeyGen, Param
+from repro.nn import init as initializers
+
+
+def init_conv2d(key, in_ch: int, out_ch: int, kernel: tuple, *,
+                use_bias: bool = True, dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    kh, kw = kernel
+    w = initializers.he_normal(in_axis=2, out_axis=3)(
+        kg("w"), (kh, kw, in_ch, out_ch), dtype)
+    p = {"kernel": Param(w, (None, None, None, "mlp"))}
+    if use_bias:
+        p["bias"] = Param(jnp.zeros((out_ch,), dtype), ("mlp",))
+    return p
+
+
+def apply_conv2d(params: dict, x: jax.Array, *, stride: tuple = (1, 1),
+                 padding: str = "SAME") -> jax.Array:
+    """x: (batch, H, W, C_in) -> (batch, H', W', C_out)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"].astype(x.dtype),
+        window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+def init_conv1d(key, in_ch: int, out_ch: int, kernel: int, *,
+                use_bias: bool = True, dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    w = initializers.he_normal(in_axis=1, out_axis=2)(
+        kg("w"), (kernel, in_ch, out_ch), dtype)
+    p = {"kernel": Param(w, (None, None, "mlp"))}
+    if use_bias:
+        p["bias"] = Param(jnp.zeros((out_ch,), dtype), ("mlp",))
+    return p
+
+
+def apply_conv1d(params: dict, x: jax.Array, *, stride: int = 1,
+                 padding: str = "SAME") -> jax.Array:
+    """x: (batch, T, C_in) -> (batch, T', C_out)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"].astype(x.dtype),
+        window_strides=(stride,), padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y

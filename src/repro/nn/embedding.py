@@ -1,0 +1,48 @@
+"""Token embedding with optional logit-tying, sharded over ("vocab","embed")."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import Param
+
+
+def init_embedding(key, vocab_size: int, embed_dim: int, *,
+                   dtype=jnp.float32, stddev: float = 0.02) -> dict:
+    table = initializers.embedding_init(stddev)(key, (vocab_size, embed_dim), dtype)
+    return {"table": Param(table, ("vocab", "embed"))}
+
+
+def apply_embedding(params: dict, token_ids: jax.Array,
+                    compute_dtype=None) -> jax.Array:
+    """Lookup: (..., ) int32 -> (..., embed)."""
+    table = params["table"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+    # take() lowers to a gather that shards cleanly over the vocab axis.
+    return jnp.take(table, token_ids, axis=0)
+
+
+def attend_logits(params: dict, x: jax.Array, compute_dtype=None) -> jax.Array:
+    """Tied-softmax logits: (..., embed) @ table.T -> (..., vocab)."""
+    table = params["table"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def init_positional(key, max_len: int, embed_dim: int, *,
+                    dtype=jnp.float32, stddev: float = 0.02) -> dict:
+    tab = initializers.embedding_init(stddev)(key, (max_len, embed_dim), dtype)
+    return {"table": Param(tab, (None, "embed"))}
+
+
+def apply_positional(params: dict, positions: jax.Array,
+                     compute_dtype=None) -> jax.Array:
+    table = params["table"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+    return jnp.take(table, positions, axis=0)

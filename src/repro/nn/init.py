@@ -1,0 +1,91 @@
+"""Parameter initializers (pure functions, no global state)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal(stddev: float = 1.0):
+    def _init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return _init
+
+
+def truncated_normal(stddev: float = 1.0, lower: float = -2.0, upper: float = 2.0):
+    def _init(key, shape, dtype=jnp.float32):
+        x = jax.random.truncated_normal(key, lower, upper, shape, jnp.float32)
+        # correct variance of the truncated distribution back to stddev
+        c = stddev / 0.87962566103423978
+        return (x * c).astype(dtype)
+
+    return _init
+
+
+def _fans(shape, in_axis=-2, out_axis=-1):
+    if len(shape) < 1:
+        return 1.0, 1.0
+    if len(shape) == 1:
+        return float(shape[0]), float(shape[0])
+    receptive = 1.0
+    for i, d in enumerate(shape):
+        if i not in (in_axis % len(shape), out_axis % len(shape)):
+            receptive *= d
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def variance_scaling(scale: float, mode: str, distribution: str,
+                     in_axis=-2, out_axis=-1):
+    """flax-compatible variance-scaling initializer family."""
+
+    def _init(key, shape, dtype=jnp.float32):
+        fan_in, fan_out = _fans(shape, in_axis, out_axis)
+        if mode == "fan_in":
+            denom = max(1.0, fan_in)
+        elif mode == "fan_out":
+            denom = max(1.0, fan_out)
+        elif mode == "fan_avg":
+            denom = max(1.0, (fan_in + fan_out) / 2.0)
+        else:
+            raise ValueError(mode)
+        var = scale / denom
+        if distribution == "truncated_normal":
+            return truncated_normal(math.sqrt(var))(key, shape, dtype)
+        if distribution == "normal":
+            return normal(math.sqrt(var))(key, shape, dtype)
+        if distribution == "uniform":
+            lim = math.sqrt(3.0 * var)
+            return (jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+                    ).astype(dtype)
+        raise ValueError(distribution)
+
+    return _init
+
+
+def lecun_normal(in_axis=-2, out_axis=-1):
+    return variance_scaling(1.0, "fan_in", "truncated_normal", in_axis, out_axis)
+
+
+def xavier_uniform(in_axis=-2, out_axis=-1):
+    return variance_scaling(1.0, "fan_avg", "uniform", in_axis, out_axis)
+
+
+def he_normal(in_axis=-2, out_axis=-1):
+    return variance_scaling(2.0, "fan_in", "truncated_normal", in_axis, out_axis)
+
+
+def embedding_init(stddev: float = 0.02):
+    return normal(stddev)

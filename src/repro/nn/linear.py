@@ -1,0 +1,76 @@
+"""General dense (einsum) layers with logical-axis annotations."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import Param
+
+
+def init_dense(
+    key,
+    in_shape: Sequence[int],
+    out_shape: Sequence[int],
+    in_axes: Sequence[Optional[str]],
+    out_axes: Sequence[Optional[str]],
+    *,
+    use_bias: bool = False,
+    dtype=jnp.float32,
+    kernel_init=None,
+    bias_axes: Optional[Sequence[Optional[str]]] = None,
+) -> dict:
+    """A generalized linear layer contracting ``in_shape`` into ``out_shape``.
+
+    Kernel has shape ``(*in_shape, *out_shape)`` with logical axes
+    ``(*in_axes, *out_axes)``.
+    """
+    in_shape = tuple(in_shape)
+    out_shape = tuple(out_shape)
+    if kernel_init is None:
+        # truncated-normal with stddev = 1/sqrt(prod(in_shape))
+        kernel_init = _fan_in_init(in_shape)
+    kernel = kernel_init(key, in_shape + out_shape, dtype)
+    params = {"kernel": Param(kernel, tuple(in_axes) + tuple(out_axes))}
+    if use_bias:
+        baxes = tuple(bias_axes) if bias_axes is not None else tuple(out_axes)
+        params["bias"] = Param(jnp.zeros(out_shape, dtype), baxes)
+    return params
+
+
+def _fan_in_init(in_shape):
+    fan_in = int(np.prod(in_shape))
+
+    def _init(key, shape, dtype=jnp.float32):
+        std = fan_in ** -0.5
+        x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return (x * std / 0.87962566103423978).astype(dtype)
+
+    return _init
+
+
+def apply_dense(params: dict, x: jax.Array, n_in_dims: int = 1,
+                compute_dtype=None) -> jax.Array:
+    """Contract the last ``n_in_dims`` dims of ``x`` with the kernel."""
+    kernel = params["kernel"]
+    if compute_dtype is not None:
+        kernel = kernel.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    n_out = kernel.ndim - n_in_dims
+    # build einsum: batch dims ... + contraction
+    x_dims = x.ndim
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    batch = letters[: x_dims - n_in_dims]
+    contract = letters[x_dims - n_in_dims: x_dims]
+    out = letters[x_dims: x_dims + n_out]
+    eq = f"{batch}{contract},{contract}{out}->{batch}{out}"
+    y = jnp.einsum(eq, x, kernel)
+    if "bias" in params:
+        b = params["bias"]
+        if compute_dtype is not None:
+            b = b.astype(compute_dtype)
+        y = y + b
+    return y

@@ -1,0 +1,59 @@
+"""Feed-forward blocks: classic ReLU/GELU MLP (paper eq. 4) and gated
+(SwiGLU) variants used by the llama/qwen/mistral-family architectures."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import apply_dense, init_dense
+from repro.nn.module import KeyGen
+
+
+def _act(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+def init_mlp(key, embed_dim: int, hidden_dim: int, *,
+             use_bias: bool = False, dtype=jnp.float32) -> dict:
+    """Two-layer MLP (paper eq. 4): x -> act(x W1 + b1) W2 + b2."""
+    kg = KeyGen(key)
+    return {
+        "wi": init_dense(kg("wi"), (embed_dim,), (hidden_dim,),
+                         ("embed",), ("mlp",), use_bias=use_bias, dtype=dtype),
+        "wo": init_dense(kg("wo"), (hidden_dim,), (embed_dim,),
+                         ("mlp",), ("embed",), use_bias=use_bias, dtype=dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, *, activation: str = "relu",
+              compute_dtype=None) -> jax.Array:
+    h = apply_dense(params["wi"], x, 1, compute_dtype)
+    h = _act(activation)(h)
+    return apply_dense(params["wo"], h, 1, compute_dtype)
+
+
+def init_gated_mlp(key, embed_dim: int, hidden_dim: int, *,
+                   use_bias: bool = False, dtype=jnp.float32) -> dict:
+    """SwiGLU-style gated MLP: x -> (act(x Wg) * (x Wu)) Wd."""
+    kg = KeyGen(key)
+    return {
+        "wg": init_dense(kg("wg"), (embed_dim,), (hidden_dim,),
+                         ("embed",), ("mlp",), use_bias=use_bias, dtype=dtype),
+        "wu": init_dense(kg("wu"), (embed_dim,), (hidden_dim,),
+                         ("embed",), ("mlp",), use_bias=use_bias, dtype=dtype),
+        "wd": init_dense(kg("wd"), (hidden_dim,), (embed_dim,),
+                         ("mlp",), ("embed",), use_bias=use_bias, dtype=dtype),
+    }
+
+
+def apply_gated_mlp(params: dict, x: jax.Array, *, activation: str = "silu",
+                    compute_dtype=None) -> jax.Array:
+    g = _act(activation)(apply_dense(params["wg"], x, 1, compute_dtype))
+    u = apply_dense(params["wu"], x, 1, compute_dtype)
+    return apply_dense(params["wd"], g * u, 1, compute_dtype)

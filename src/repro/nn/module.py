@@ -1,0 +1,160 @@
+"""Lightweight parameter/module system for pure-JAX models.
+
+No framework dependency: parameters are nested dicts whose leaves are
+:class:`Param` pytree nodes.  Each ``Param`` carries the array *and* a tuple
+of **logical axis names** (one per array dim, e.g. ``("vocab", "embed")``).
+Logical names are mapped to physical mesh axes by the rules tables in
+:mod:`repro.distributed.sharding`, which is how every model in this repo
+gets its pjit ``in_shardings`` without per-model sharding code.
+
+Usage pattern::
+
+    params = model.init(key, cfg)          # tree of Param
+    arrs   = unbox(params)                 # tree of jax.Array (same structure)
+    axes   = axes_of(params)               # tree of tuple[str, ...]
+    out    = model.apply(arrs, inputs)     # apply functions take plain arrays
+
+``Param`` is registered as a pytree node whose child is the array and whose
+aux data is the axes tuple, so ``jax.tree.map`` over a boxed tree maps over
+arrays while preserving the annotation (used by the optimizer to keep
+optimizer-state shardings aligned with parameter shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """An array annotated with logical sharding axes.
+
+    ``axes`` has one entry per dim; ``None`` entries mean "replicated /
+    no constraint on this dim".
+    """
+
+    value: jax.Array
+    axes: tuple
+
+    def __post_init__(self):
+        if hasattr(self.value, "ndim") and len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"Param axes {self.axes} rank mismatch with value shape "
+                f"{getattr(self.value, 'shape', '?')}"
+            )
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        # Bypass __post_init__ checks: during tree transforms the child can
+        # be a tracer/placeholder object without ndim.
+        obj = object.__new__(cls)
+        obj.value = children[0]
+        obj.axes = axes
+        return obj
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree: PyTree) -> PyTree:
+    """Strip Param boxes, returning a plain-array tree of the same structure."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_of(tree: PyTree) -> PyTree:
+    """Return the logical-axes tree matching ``unbox(tree)``'s structure."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def box_like(arrs: PyTree, axes: PyTree) -> PyTree:
+    """Re-attach axis annotations to a plain-array tree."""
+    return jax.tree.map(Param, arrs, axes)
+
+
+def param_count(tree: PyTree) -> int:
+    arrs = unbox(tree) if any(is_param(l) for l in jax.tree.leaves(
+        tree, is_leaf=is_param)) else tree
+    return sum(int(x.size) for x in jax.tree.leaves(arrs))
+
+
+def param_bytes(tree: PyTree) -> int:
+    arrs = unbox(tree) if any(is_param(l) for l in jax.tree.leaves(
+        tree, is_leaf=is_param)) else tree
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(arrs))
+
+
+def split_keys(key: jax.Array, n: int) -> list:
+    return list(jax.random.split(key, n))
+
+
+def fold_key(key: jax.Array, name: str) -> jax.Array:
+    """Deterministically derive a sub-key from a string name."""
+    h = hash(name) % (2**31 - 1)
+    return jax.random.fold_in(key, h)
+
+
+class KeyGen:
+    """Convenience splitter: ``kg = KeyGen(key); k1 = kg('wq')``."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self, name: str) -> jax.Array:
+        return fold_key(self._key, name)
+
+
+def format_tree(tree: PyTree, max_leaves: int = 200) -> str:
+    """Human-readable parameter inventory (shape/dtype/axes per leaf)."""
+    lines = []
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_param)[0]
+    for path, leaf in flat[:max_leaves]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if is_param(leaf):
+            lines.append(
+                f"  {name:60s} {str(leaf.value.shape):24s} "
+                f"{str(leaf.value.dtype):10s} axes={leaf.axes}"
+            )
+        else:
+            lines.append(f"  {name:60s} {leaf!r}")
+    if len(flat) > max_leaves:
+        lines.append(f"  ... (+{len(flat) - max_leaves} more)")
+    return "\n".join(lines)
+
+
+def tree_map_params(fn: Callable, tree: PyTree) -> PyTree:
+    """Map ``fn`` over Param leaves, preserving annotations."""
+    return jax.tree.map(
+        lambda p: Param(fn(p.value), p.axes) if is_param(p) else fn(p),
+        tree,
+        is_leaf=is_param,
+    )
+
+
+def cast_params(tree: PyTree, dtype) -> PyTree:
+    """Cast all floating-point params to ``dtype`` (int params untouched)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return tree_map_params(_cast, tree)

@@ -1,0 +1,68 @@
+"""Layer normalization variants (LayerNorm, RMSNorm).
+
+Norm statistics are always accumulated in float32 regardless of the
+activation dtype (bf16-safe), matching production LM practice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Param
+
+
+def init_layernorm(embed_dim: int, *, use_bias: bool = True,
+                   dtype=jnp.float32) -> dict:
+    p = {"scale": Param(jnp.ones((embed_dim,), dtype), ("embed",))}
+    if use_bias:
+        p["bias"] = Param(jnp.zeros((embed_dim,), dtype), ("embed",))
+    return p
+
+
+def apply_layernorm(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_rmsnorm(embed_dim: int, *, dtype=jnp.float32) -> dict:
+    return {"scale": Param(jnp.ones((embed_dim,), dtype), ("embed",))}
+
+
+def apply_rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_groupnorm(num_groups: int, embed_dim: int, *, dtype=jnp.float32) -> dict:
+    assert embed_dim % num_groups == 0
+    return {
+        "scale": Param(jnp.ones((embed_dim,), dtype), ("embed",)),
+        "bias": Param(jnp.zeros((embed_dim,), dtype), ("embed",)),
+        # static metadata kept out of the pytree; callers pass num_groups.
+    }
+
+
+def apply_groupnorm(params: dict, x: jax.Array, num_groups: int,
+                    *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    *lead, d = xf.shape
+    g = xf.reshape(*lead, num_groups, d // num_groups)
+    mean = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(g - mean), axis=-1, keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    y = g.reshape(*lead, d)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

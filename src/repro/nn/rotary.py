@@ -1,0 +1,36 @@
+"""Rotary position embeddings (RoPE), decode-aware.
+
+Supports plain RoPE (llama/qwen/mistral style, interleaved halves) with a
+configurable base, applied over ``(batch, seq, heads, head_dim)`` tensors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, base: float = 10000.0) -> jax.Array:
+    """(head_dim//2,) inverse frequencies, float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               base: float = 10000.0) -> jax.Array:
+    """Rotate ``x`` of shape (batch, seq, heads, head_dim).
+
+    ``positions``: (batch, seq) int32 absolute positions (decode passes the
+    cache offset here, so the same code path serves prefill and decode).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, base)  # (hd/2,)
+    # (batch, seq, hd/2)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    sin = jnp.sin(angles)[:, :, None, :]  # (b, s, 1, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    # "rotate half" convention (HF llama): (x1, x2) -> (x1*cos - x2*sin,
+    #                                                   x2*cos + x1*sin)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,306 @@
+"""State-space / linear-recurrence layers: RWKV-6 (Finch) time-mix and a
+selective-SSM (Mamba-style) block used by the Hymba hybrid architecture.
+
+Both are attention-free token mixers.  The Inhibitor technique (this paper)
+replaces dot-product *attention*; these layers have none, so they are
+implemented faithfully without it — see DESIGN.md §Arch-applicability.
+
+The reference recurrences here use ``jax.lax.scan`` over time (exact,
+O(seq) sequential).  The performance path for RWKV-6 training is the
+chunked kernel in :mod:`repro.kernels.rwkv6`, which the model layer calls
+through :func:`repro.kernels.ops.wkv6`; decode uses the single-step form.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import apply_dense, init_dense
+from repro.nn.module import KeyGen, Param
+from repro.nn.norm import apply_groupnorm, init_groupnorm
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear recurrence
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_timemix(key, embed_dim: int, num_heads: int, *,
+                       lora_dim: int = 64, decay_lora_dim: int = 64,
+                       dtype=jnp.float32) -> dict:
+    """RWKV-6 time-mix: token-shift LoRA mixers + r/k/v/g/w projections."""
+    kg = KeyGen(key)
+    head_dim = embed_dim // num_heads
+    assert head_dim * num_heads == embed_dim
+
+    def lin(name, out_dim, out_axis="heads_mlp"):
+        return init_dense(kg(name), (embed_dim,), (out_dim,),
+                          ("embed",), ("heads_mlp",), dtype=dtype)
+
+    p = {
+        # token-shift base mix coefficients (mu) for x_{t} vs x_{t-1}
+        "mu_base": Param(jnp.zeros((5, embed_dim), dtype), (None, "embed")),
+        # data-dependent mix: x -> lora_dim -> 5*embed (stacked LoRA, "ddlerp")
+        "mix_lora_a": Param(
+            jax.random.normal(kg("mla"), (embed_dim, 5 * lora_dim),
+                              jnp.float32).astype(dtype) * 0.01,
+            ("embed", None)),
+        "mix_lora_b": Param(
+            jnp.zeros((5, lora_dim, embed_dim), dtype), (None, None, "embed")),
+        "receptance": lin("receptance", embed_dim),
+        "key": lin("key", embed_dim),
+        "value": lin("value", embed_dim),
+        "gate": lin("gate", embed_dim),
+        # decay: base + LoRA(x) -> per-channel decay logits
+        "w_base": Param(jnp.full((embed_dim,), -6.0, dtype), ("embed",)),
+        "w_lora_a": Param(
+            jax.random.normal(kg("wla"), (embed_dim, decay_lora_dim),
+                              jnp.float32).astype(dtype) * 0.01,
+            ("embed", None)),
+        "w_lora_b": Param(jnp.zeros((decay_lora_dim, embed_dim), dtype),
+                          (None, "embed")),
+        # per-channel "bonus" for the current token
+        "u": Param(jnp.zeros((embed_dim,), dtype), ("embed",)),
+        "output": init_dense(kg("output"), (embed_dim,), (embed_dim,),
+                             ("heads_mlp",), ("embed",), dtype=dtype),
+        "ln_x": init_groupnorm(num_heads, embed_dim, dtype=dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Shift sequence right by one; ``prev`` is the carry token for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_projections(params: dict, x: jax.Array, num_heads: int,
+                      x_prev: Optional[jax.Array] = None,
+                      compute_dtype=None):
+    """Compute r, k, v, g, w (decay) tensors with RWKV-6 ddlerp token shift.
+
+    x: (batch, seq, d). Returns tensors shaped (batch, seq, heads, head_dim)
+    and gate g: (batch, seq, d).
+    """
+    cdt = compute_dtype or x.dtype
+    b, s, d = x.shape
+    hd = d // num_heads
+    xs = _token_shift(x, x_prev)                     # (b, s, d) previous token
+    dx = xs - x
+
+    mu = params["mu_base"].astype(jnp.float32)       # (5, d)
+    # data-dependent part: tanh(x @ A) @ B  per mixed stream
+    la = params["mix_lora_a"].astype(jnp.float32)    # (d, 5*r)
+    lb = params["mix_lora_b"].astype(jnp.float32)    # (5, r, d)
+    r_dim = lb.shape[1]
+    base = x.astype(jnp.float32) + dx.astype(jnp.float32) * mu[:, None, None, :]
+    # (5, b, s, r) -> (5, b, s, d)
+    z = jnp.tanh((x.astype(jnp.float32) @ la).reshape(b, s, 5, r_dim)
+                 ).transpose(2, 0, 1, 3)
+    dd = jnp.einsum("nbsr,nrd->nbsd", z, lb)
+    mixed = base + dx.astype(jnp.float32) * dd       # (5, b, s, d)
+    xw, xk, xv, xr, xg = [m.astype(cdt) for m in mixed]
+
+    r = apply_dense(params["receptance"], xr, 1, cdt).reshape(b, s, num_heads, hd)
+    k = apply_dense(params["key"], xk, 1, cdt).reshape(b, s, num_heads, hd)
+    v = apply_dense(params["value"], xv, 1, cdt).reshape(b, s, num_heads, hd)
+    g = jax.nn.silu(apply_dense(params["gate"], xg, 1, cdt))
+
+    wa = params["w_lora_a"].astype(jnp.float32)
+    wb = params["w_lora_b"].astype(jnp.float32)
+    w_logit = (params["w_base"].astype(jnp.float32)
+               + jnp.tanh(xw.astype(jnp.float32) @ wa) @ wb)  # (b, s, d)
+    # decay in (0, 1): exp(-exp(w_logit))
+    w = jnp.exp(-jnp.exp(w_logit)).reshape(b, s, num_heads, hd)
+    return r, k, v, g, w
+
+
+def wkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Exact RWKV-6 recurrence via lax.scan (reference; O(T) sequential).
+
+    Shapes: r,k,v,w: (b, t, h, n) with n = head_dim; u: (h, n).
+    State S: (b, h, n, n) with update  S <- diag(w_t) S + k_t^T v_t  and
+    output  o_t = r_t (S + diag(u) k_t^T v_t).
+    Returns (out (b, t, h, n), final_state).
+    """
+    b, t, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # each (b, h, n)
+        kv = kt[..., :, None] * vt[..., None, :]          # (b, h, n, n)
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    final, outs = jax.lax.scan(step, state, xs)
+    return outs.transpose(1, 0, 2, 3), final
+
+
+def apply_rwkv6_timemix(params: dict, x: jax.Array, num_heads: int, *,
+                        state: Optional[jax.Array] = None,
+                        x_prev: Optional[jax.Array] = None,
+                        use_kernel: bool = False,
+                        compute_dtype=None):
+    """Full RWKV-6 time-mix block. Returns (y, (final_state, last_token))."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    cdt = compute_dtype or x.dtype
+    r, k, v, g, w = rwkv6_projections(params, x, num_heads, x_prev, cdt)
+    u = params["u"].astype(jnp.float32).reshape(num_heads, hd)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, final = kops.wkv6(r, k, v, w, u, state)
+    else:
+        out, final = wkv6_scan_ref(r, k, v, w, u, state)
+    out = out.reshape(b, s, d)
+    out = apply_groupnorm(params["ln_x"], out.astype(cdt), num_heads)
+    out = out * g.astype(cdt)
+    y = apply_dense(params["output"], out, 1, cdt)
+    return y, (final, x[:, -1])
+
+
+def init_rwkv6_channelmix(key, embed_dim: int, hidden_dim: int, *,
+                          dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    return {
+        "mu_k": Param(jnp.zeros((embed_dim,), dtype), ("embed",)),
+        "mu_r": Param(jnp.zeros((embed_dim,), dtype), ("embed",)),
+        "key": init_dense(kg("key"), (embed_dim,), (hidden_dim,),
+                          ("embed",), ("mlp",), dtype=dtype),
+        "receptance": init_dense(kg("receptance"), (embed_dim,), (embed_dim,),
+                                 ("embed",), ("heads_mlp",), dtype=dtype),
+        "value": init_dense(kg("value"), (hidden_dim,), (embed_dim,),
+                            ("mlp",), ("embed",), dtype=dtype),
+    }
+
+
+def apply_rwkv6_channelmix(params: dict, x: jax.Array, *,
+                           x_prev: Optional[jax.Array] = None,
+                           compute_dtype=None):
+    """RWKV channel-mix (squared-ReLU FFN with token shift + receptance gate)."""
+    cdt = compute_dtype or x.dtype
+    xs = _token_shift(x, x_prev)
+    dx = xs - x
+    mk = params["mu_k"].astype(cdt)
+    mr = params["mu_r"].astype(cdt)
+    xk = x + dx * mk
+    xr = x + dx * mr
+    kk = apply_dense(params["key"], xk, 1, cdt)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = apply_dense(params["value"], kk, 1, cdt)
+    rr = jax.nn.sigmoid(apply_dense(params["receptance"], xr, 1, cdt))
+    return rr * vv, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM (Mamba-style) for Hymba's parallel SSM heads
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, embed_dim: int, inner_dim: int, *, state_dim: int = 16,
+               conv_dim: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.float32) -> dict:
+    kg = KeyGen(key)
+    dt_rank = dt_rank or max(1, embed_dim // 16)
+    # S4D-real initialization of A: -[1..state_dim] per channel
+    a_init = jnp.tile(jnp.arange(1, state_dim + 1, dtype=jnp.float32)[None, :],
+                      (inner_dim, 1))
+    p = {
+        "in_proj": init_dense(kg("in_proj"), (embed_dim,), (2 * inner_dim,),
+                              ("embed",), ("mlp",), dtype=dtype),
+        "conv_w": Param(
+            (jax.random.normal(kg("conv"), (conv_dim, inner_dim), jnp.float32)
+             * (conv_dim ** -0.5)).astype(dtype), (None, "mlp")),
+        "conv_b": Param(jnp.zeros((inner_dim,), dtype), ("mlp",)),
+        "x_proj": init_dense(kg("x_proj"), (inner_dim,),
+                             (dt_rank + 2 * state_dim,),
+                             ("mlp",), (None,), dtype=dtype),
+        "dt_proj": init_dense(kg("dt_proj"), (dt_rank,), (inner_dim,),
+                              (None,), ("mlp",), use_bias=True, dtype=dtype),
+        "A_log": Param(jnp.log(a_init).astype(jnp.float32), ("mlp", None)),
+        "D": Param(jnp.ones((inner_dim,), jnp.float32), ("mlp",)),
+        "out_proj": init_dense(kg("out_proj"), (inner_dim,), (embed_dim,),
+                               ("mlp",), ("embed",), dtype=dtype),
+    }
+    return p
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           carry: Optional[jax.Array] = None):
+    """x: (b, t, c); w: (k, c) depthwise causal conv. Returns (y, new_carry)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    # depthwise conv as sum of shifted slices (k is tiny: 4)
+    t = x.shape[1]
+    y = sum(xp[:, i:i + t] * w[i][None, None, :] for i in range(k))
+    new_carry = xp[:, -(k - 1):] if k > 1 else None
+    return y + b[None, None, :], new_carry
+
+
+def selective_scan_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array, D: jax.Array,
+                       state: Optional[jax.Array] = None):
+    """Mamba selective scan (reference, lax.scan over time).
+
+    u, dt: (b, t, c); A: (c, n); B, C: (b, t, n); D: (c,).
+    State: (b, c, n). Returns (y (b, t, c), final_state).
+    """
+    b, t, c = u.shape
+    n = A.shape[1]
+    if state is None:
+        state = jnp.zeros((b, c, n), jnp.float32)
+    dA = jnp.exp(dt[..., None] * (-jnp.exp(A))[None, None, :, :])  # (b,t,c,n)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]          # (b,t,c,n)
+
+    def step(S, inp):
+        dA_t, dBu_t, C_t = inp
+        S = dA_t * S + dBu_t
+        y = jnp.einsum("bcn,bn->bc", S, C_t)
+        return S, y
+
+    xs = (dA.transpose(1, 0, 2, 3), dBu.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2) + u * D[None, None, :]
+    return y, final
+
+
+def apply_mamba(params: dict, x: jax.Array, *, state_dim: int = 16,
+                ssm_state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None,
+                compute_dtype=None):
+    """Mamba block forward. Returns (y, (ssm_state, conv_state))."""
+    cdt = compute_dtype or x.dtype
+    xz = apply_dense(params["in_proj"], x, 1, cdt)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_conv = _causal_depthwise_conv(
+        xs, params["conv_w"].astype(cdt), params["conv_b"].astype(cdt),
+        conv_state)
+    xs = jax.nn.silu(xs)
+    proj = apply_dense(params["x_proj"], xs, 1, cdt)
+    dt_rank = proj.shape[-1] - 2 * state_dim
+    dt_low, B, C = jnp.split(proj, [dt_rank, dt_rank + state_dim], axis=-1)
+    dt = apply_dense(params["dt_proj"], dt_low, 1, cdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    y, new_ssm = selective_scan_ref(
+        xs.astype(jnp.float32), dt, params["A_log"].astype(jnp.float32),
+        B.astype(jnp.float32), C.astype(jnp.float32),
+        params["D"].astype(jnp.float32), ssm_state)
+    y = y.astype(cdt) * jax.nn.silu(z)
+    out = apply_dense(params["out_proj"], y, 1, cdt)
+    return out, (new_ssm, new_conv)

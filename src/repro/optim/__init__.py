@@ -1,0 +1,17 @@
+"""Optimizers, schedules, gradient compression."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_adamw,
+)
+from repro.optim.compress import (  # noqa: F401
+    CompressionState,
+    compress_tree,
+    decompress_tree,
+    init_compression,
+)
+from repro.optim.schedule import constant, warmup_cosine, warmup_linear  # noqa: F401

@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the ``pod`` axis all-reduce crosses the slowest links
+(inter-pod ICI/DCN), so gradients are compressed to int8 with a per-tensor
+scale before the cross-pod reduction and decompressed after.  An error-
+feedback accumulator (Seide et al.; 1-bit SGD lineage) carries the
+quantization residual into the next step so compression error does not
+bias convergence.
+
+Usage inside a shard_map'd gradient sync (see distributed.collectives):
+the intra-pod reduction runs at full precision (cheap links), then the
+int8 payload crosses pods — an 4× wire-byte reduction on the slow hop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: any            # error-feedback residual, same tree as grads
+
+
+def init_compression(grads_like) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                                    jax.Array]:
+    """g + err -> (int8 payload, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, state: CompressionState):
+    """Tree version. Returns ((q_tree, scale_tree), new_state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(state.error)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return ((jax.tree.unflatten(treedef, qs),
+             jax.tree.unflatten(treedef, scales)),
+            CompressionState(error=jax.tree.unflatten(treedef, errs)))
+
+
+def decompress_tree(q_tree, scale_tree):
+    return jax.tree.map(decompress, q_tree, scale_tree)

@@ -1,0 +1,39 @@
+"""Learning-rate schedules (warmup + cosine/linear decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+    return lr
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        lin = 1.0 - (1.0 - final_frac) * prog
+        return jnp.where(s < warmup_steps, warm, peak_lr * lin)
+
+    return lr
+
+
+def constant(lr_value: float):
+    def lr(step):
+        del step
+        return jnp.asarray(lr_value, jnp.float32)
+
+    return lr

@@ -1,0 +1,14 @@
+"""Quantization: fake-quant (QAT) and integer inference paths."""
+
+from repro.quant.fake_quant import (  # noqa: F401
+    QuantConfig,
+    dequantize,
+    fake_quant,
+    quantize,
+    quantize_params,
+)
+from repro.quant.int_attention import (  # noqa: F401
+    int_dot_product_attention,
+    int_inhibitor_attention,
+    quantize_qkv,
+)

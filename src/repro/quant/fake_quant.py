@@ -1,0 +1,77 @@
+"""Symmetric quantization utilities (QAT fake-quant + PTQ helpers).
+
+The paper's thesis is that the Inhibitor "allows straightforward
+quantization": its score/inhibition path is linear in Q, K, V up to ReLU/|·|
+— all scale-covariant ops — so a single shared scale survives the whole
+attention computation (no rescale between score and mixing, unlike
+Softmax(QKᵀ)·V whose products square the scale).  These helpers provide the
+integer projection used by the plaintext-scaling and FHE benchmarks and a
+straight-through-estimator fake-quant for QAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    symmetric: bool = True
+    per_channel: bool = False     # quantize per last-dim channel
+    narrow_range: bool = False    # use [-(2^(b-1)-1), 2^(b-1)-1]
+
+
+def _qrange(cfg: QuantConfig):
+    qmax = 2 ** (cfg.bits - 1) - 1
+    qmin = -qmax if cfg.narrow_range else -(2 ** (cfg.bits - 1))
+    return qmin, qmax
+
+
+def compute_scale(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Max-abs calibration scale (per tensor or per channel)."""
+    qmin, qmax = _qrange(cfg)
+    if cfg.per_channel:
+        amax = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)),
+                       keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array, cfg: QuantConfig) -> jax.Array:
+    qmin, qmax = _qrange(cfg)
+    q = jnp.round(x / scale)
+    return jnp.clip(q, qmin, qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, cfg: QuantConfig,
+               scale: Optional[jax.Array] = None) -> jax.Array:
+    """Quantize-dequantize with straight-through gradients (QAT)."""
+    s = compute_scale(jax.lax.stop_gradient(x), cfg) if scale is None else scale
+    qdq = dequantize(quantize(jax.lax.stop_gradient(x), s, cfg), s)
+    return x + jax.lax.stop_gradient(qdq - x)
+
+
+def quantize_params(tree, cfg: QuantConfig):
+    """PTQ an unboxed param tree -> (int tree, scale tree)."""
+
+    def one(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x, jnp.ones((), jnp.float32)
+        s = compute_scale(x, cfg)
+        return quantize(x, s, cfg), s
+
+    flat, treedef = jax.tree.flatten(tree)
+    pairs = [one(x) for x in flat]
+    q = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    s = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return q, s

@@ -1,0 +1,107 @@
+"""Integer-arithmetic attention paths (paper's plaintext scaling experiment).
+
+These mirror the paper's low-level Rust int16 implementation: both
+mechanisms run on int32 lanes with integer-only ops so the comparison is
+not biased by float-pipeline optimizations (paper §Scaling experiments).
+
+  * inhibitor: |q − k| sums (int add/abs), shift/ReLU (int max), value
+    inhibition (int sub/max) — *no variable×variable products at all*.
+  * dot-product: int MACs for QKᵀ and S·V plus an integer-friendly
+    Softmax surrogate (shift-normalized exp LUT as used by quantized
+    transformer deployments); products force int32 accumulators from int8/16
+    inputs — the "expansion to double precision" the paper refers to.
+
+Used by benchmarks/table3_plaintext.py for the timing-vs-T scaling law and
+by tests for exactness against the float reference at quantized inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import QuantConfig, compute_scale, quantize
+
+
+def quantize_qkv(q, k, v, bits: int = 8) -> Tuple:
+    """Shared-scale symmetric quantization of q, k, v (paper setup)."""
+    cfg = QuantConfig(bits=bits)
+    s = jnp.maximum(compute_scale(q, cfg),
+                    jnp.maximum(compute_scale(k, cfg),
+                                compute_scale(v, cfg)))
+    return (quantize(q, s, cfg), quantize(k, s, cfg), quantize(v, s, cfg),
+            s)
+
+
+def int_inhibitor_attention(
+    qi: jax.Array,        # (..., n_q, d) int32
+    ki: jax.Array,        # (..., n_k, d) int32
+    vi: jax.Array,        # (..., n_k, d) int32
+    *,
+    gamma_shift: int = 0,     # score scale as a right-shift (γ = 2^shift·d?)
+    alpha_q: int = 0,         # quantized score shift α
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Integer inhibitor attention (eq. 5/6 on int lanes).
+
+    Z = (Σ|q−k|) >> gamma_shift; H = Σ_j max(V − Z, 0) with masked pairs
+    excluded. Integer ops only: sub, abs, add, shift, max.
+    """
+    z = jnp.sum(jnp.abs(qi[..., :, None, :] - ki[..., None, :, :]),
+                axis=-1)                                   # (..., n_q, n_k)
+    z = jax.lax.shift_right_arithmetic(z, gamma_shift)
+    if alpha_q:
+        z = jnp.maximum(z - alpha_q, 0)
+    if mask is not None:
+        inhibited = jnp.maximum(vi[..., None, :, :] - z[..., :, :, None], 0)
+        inhibited = inhibited * mask[..., None].astype(inhibited.dtype)
+        return jnp.sum(inhibited, axis=-2)
+    return jnp.sum(
+        jnp.maximum(vi[..., None, :, :] - z[..., :, :, None], 0), axis=-2)
+
+
+def _int_softmax_surrogate(scores: jax.Array, frac_bits: int = 8):
+    """Integer Softmax surrogate: shift-normalized exp2 LUT.
+
+    scores: int32. Returns fixed-point probabilities with ``frac_bits``
+    fractional bits (int32). This is the standard integer-only softmax
+    used in quantized deployments (max-subtract, exp2 via LUT on the
+    clamped difference, fixed-point normalize).
+    """
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    d = jnp.clip(scores - m, -31, 0)
+    # exp2 LUT: 2^d in fixed point (d in [-31, 0])
+    lut = (2.0 ** jnp.arange(-31, 1, dtype=jnp.float32)
+           * (1 << frac_bits)).astype(jnp.int32)
+    p = lut[(d + 31).astype(jnp.int32)]
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    # fixed-point division
+    return ((p.astype(jnp.int64) << frac_bits)
+            // jnp.maximum(denom, 1).astype(jnp.int64)).astype(jnp.int32)
+
+
+def int_dot_product_attention(
+    qi: jax.Array,
+    ki: jax.Array,
+    vi: jax.Array,
+    *,
+    scale_shift: int = 0,
+    mask: Optional[jax.Array] = None,
+    frac_bits: int = 8,
+) -> jax.Array:
+    """Integer dot-product attention baseline (paper's comparison arm).
+
+    QKᵀ int MACs -> shift scale -> integer softmax surrogate -> fixed-point
+    S·V. Output carries ``frac_bits`` fractional bits divided out at the
+    end (still integer ops).
+    """
+    s = jnp.einsum("...qd,...kd->...qk", qi, ki)           # int32 MACs
+    s = jax.lax.shift_right_arithmetic(s, scale_shift)
+    if mask is not None:
+        s = jnp.where(mask, s, jnp.int32(-(1 << 30)))
+    p = _int_softmax_surrogate(s, frac_bits)               # (..., q, k) fp
+    out = jnp.einsum("...qk,...kd->...qd", p.astype(jnp.int64),
+                     vi.astype(jnp.int64))
+    return jax.lax.shift_right_arithmetic(out, frac_bits).astype(jnp.int32)

@@ -1,0 +1,4 @@
+"""Serving: slot-pool continuous batching engine + KV cache management."""
+
+from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401
+from repro.serve.kvcache import SlotAllocator, SlotState  # noqa: F401

@@ -1,0 +1,178 @@
+"""Batched serving engine with continuous batching.
+
+Design (vLLM-style scheduling on a slot pool, TPU-friendly static shapes):
+
+  * A fixed pool of ``max_batch`` slots backs one layer-stacked KV cache
+    with **per-slot cursors** (ragged decode is exact — each row attends
+    over its own valid prefix only).
+  * Incoming requests queue; whenever a slot frees, the next request is
+    admitted and its prompt is prefilled *into that slot only* (the other
+    slots' rows are untouched because prefill uses per-slot masking).
+  * Every engine tick runs one decode step for all active slots together
+    (inactive rows compute garbage that is ignored — static shapes, no
+    recompilation).
+  * A request finishes on EOS or at max_new_tokens; its slot is recycled
+    immediately (continuous batching: no global barrier at batch end).
+
+The same engine drives the `serve` launcher and the serving example; on a
+mesh the step functions are jit'd with sharded params (TP) and replicated
+small decode batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+from repro.serve.kvcache import SlotAllocator
+
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray             # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[list] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, api: ModelApi, params, cfg: EngineConfig):
+        self.api = api
+        self.params = params
+        self.cfg = cfg
+        self.alloc = SlotAllocator(cfg.max_batch)
+        self.queue: deque = deque()
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.states = api.init_states(cfg.max_batch, cfg.max_len)
+        self._jit_decode = jax.jit(self._decode_step)
+        self._jit_prefill_one = jax.jit(self._prefill_slot,
+                                        static_argnames=("slot",))
+
+    # ---- jitted kernels ----
+    def _decode_step(self, params, tokens, states):
+        logits, new_states = self.api.step(params, tokens, states, None)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, new_states
+
+    def _prefill_slot(self, params, tokens, states, *, slot: int):
+        """Prefill one slot's row: the other rows' caches must not change.
+
+        We run the step over the full (static-shape) batch with the prompt
+        broadcast, then splice the updated row into the previous states.
+        Per-slot cursors make the attention of other rows irrelevant."""
+        b = self.cfg.max_batch
+        toks = jnp.broadcast_to(tokens[None], (b,) + tokens.shape)
+        logits, new_states = self.api.step(params, toks, states, None)
+
+        # splice the target slot's updated rows into the *argument* states
+        # (never a captured self.states — inside jit that would freeze a
+        # stale snapshot as a constant and clobber other slots on recycle)
+        def splice(new, old):
+            if new is None or old is None:
+                return old
+            # leaf layouts: (L, b, ...) for buffers, (L, b) or (L,) lengths
+            if new.ndim >= 2 and new.shape[1] == b:
+                return old.at[:, slot].set(new[:, slot])
+            return old  # shared scalars (not used with per-slot cursors)
+
+        spliced = jax.tree.map(splice, new_states, states,
+                               is_leaf=lambda x: x is None)
+        nxt = jnp.argmax(logits[slot, -1], axis=-1).astype(jnp.int32)
+        return nxt, spliced
+
+    # ---- public API ----
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue:
+            slot = self.alloc.claim(self.queue[0].request_id)
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            self.active[slot] = req
+            # reset this slot's cursor/recurrent state, then prefill
+            self.states = _reset_slot(self.states, slot)
+            nxt, self.states = self._jit_prefill_one(
+                self.params, jnp.asarray(req.prompt), self.states, slot=slot)
+            self.alloc.slots[slot].length = len(req.prompt)
+            req.output.append(int(nxt))
+            log.debug("admitted request %d into slot %d", req.request_id,
+                      slot)
+
+    def _finish(self, slot: int):
+        req = self.active.pop(slot)
+        self.alloc.release(slot)
+        return req
+
+    def step(self) -> List[Request]:
+        """One engine tick. Returns requests that finished this tick."""
+        self._admit()
+        if not self.active:
+            return []
+        last = np.zeros((self.cfg.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            last[slot, 0] = req.output[-1]
+        nxt, self.states = self._jit_decode(self.params, jnp.asarray(last),
+                                            self.states)
+        nxt = np.asarray(nxt)
+        finished = []
+        for slot in list(self.active):
+            req = self.active[slot]
+            req.output.append(int(nxt[slot]))
+            self.alloc.slots[slot].length += 1
+            done = (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None
+                        and req.output[-1] == req.eos_id))
+            if done:
+                finished.append(self._finish(slot))
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return done
+
+
+def _reset_slot(states, slot: int):
+    """Reset one slot's decode state across all layers.
+
+    Transformer family: zero the (L, b) cursor; KV buffer rows need no
+    clearing (validity is cursor-defined).  Hybrid: also zero the slot's
+    mamba ssm/conv carries.  RWKV: zero the slot's recurrent state rows.
+    """
+    from repro.core.attention import KVCache
+    from repro.models.transformer import LayerState
+
+    if isinstance(states, LayerState):
+        kv = states.kv._replace(length=states.kv.length.at[:, slot].set(0))
+        ssm = (states.ssm.at[:, slot].set(0)
+               if states.ssm is not None else None)
+        conv = (states.conv.at[:, slot].set(0)
+                if states.conv is not None else None)
+        return LayerState(kv=kv, ssm=ssm, conv=conv)
+    # recurrent families (rwkv): zero every state leaf's slot row
+    return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])),
+                        states)

@@ -1,0 +1,50 @@
+"""Serving-side KV cache management: slot-based continuous batching.
+
+The engine keeps a fixed pool of ``max_batch`` slots, each owning a stride
+of the stacked (layers, batch, max_len, kv_heads, head_dim) cache buffers.
+Requests claim a free slot, prefill writes their prompt into it, decode
+steps advance all active slots together, and finished slots are recycled
+without touching the others — per-slot lengths make ragged decode exact.
+
+This is the contiguous (non-paged) variant; page tables only pay off once
+prompts share prefixes or lengths vary by orders of magnitude. The slot
+abstraction is what the engine schedules against, so a paged allocator can
+replace this module without touching engine logic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SlotState:
+    request_id: Optional[int] = None
+    length: int = 0
+    done: bool = True
+
+
+class SlotAllocator:
+    def __init__(self, max_batch: int):
+        self.slots: List[SlotState] = [SlotState() for _ in range(max_batch)]
+
+    def claim(self, request_id: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.done:
+                self.slots[i] = SlotState(request_id, 0, False)
+                return i
+        return None
+
+    def release(self, slot: int):
+        self.slots[slot] = SlotState()
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.done]
+
+    def lengths(self) -> np.ndarray:
+        return np.array([s.length for s in self.slots], np.int32)

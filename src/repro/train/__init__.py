@@ -1,0 +1,12 @@
+"""Training: step builders + loop."""
+
+from repro.train.loop import TrainConfig, train  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    init_train_state,
+    make_eval_step,
+    make_loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    softmax_xent,
+)

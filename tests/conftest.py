@@ -1,0 +1,14 @@
+import os
+import sys
+
+# src-layout import path (so `PYTHONPATH=src pytest tests/` and bare
+# `pytest` both work)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

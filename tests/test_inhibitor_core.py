@@ -1,0 +1,195 @@
+"""Paper-equation identities + property tests for the inhibitor core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import inhibitor as I
+from repro.core.blocked import blocked_inhibitor_attention
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("shift", [0.0, 0.5, 2.0])
+def test_fused_equals_naive(rng, signed, shift):
+    """Eq. 9/10 ≡ eq. 6/7 (the appendix identities)."""
+    q = _rand(rng, 2, 3, 6, 8)
+    k = _rand(rng, 2, 3, 10, 8)
+    v = _rand(rng, 2, 3, 10, 8)
+    z = I.manhattan_scores(q, k, score_shift=shift)
+    if signed:
+        np.testing.assert_allclose(I.inhibit_signed_fused(v, z),
+                                   I.inhibit_signed_naive(v, z),
+                                   rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_allclose(I.inhibit_fused(v, z),
+                                   I.inhibit_naive(v, z),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_masked_fused_equals_masked_naive(rng, signed):
+    """Mask-by-exclusion (fused) ≡ mask-by-large-Z (naive oracle)."""
+    q = _rand(rng, 2, 2, 5, 4)
+    k = _rand(rng, 2, 2, 7, 4)
+    v = _rand(rng, 2, 2, 7, 4)
+    mask = jnp.asarray(np.random.default_rng(1).random((2, 2, 5, 7)) > 0.4)
+    z = I.manhattan_scores(q, k, score_shift=0.5)
+    zm = I.mask_scores(z, mask)
+    if signed:
+        np.testing.assert_allclose(I.inhibit_signed_fused(v, z, mask),
+                                   I.inhibit_signed_naive(v, zm),
+                                   rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_allclose(I.inhibit_fused(v, z, mask),
+                                   I.inhibit_naive(v, zm),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("kv_chunk", [5, 16])
+def test_chunked_equals_full(rng, signed, kv_chunk):
+    q = _rand(rng, 2, 16, 4, 8)
+    k = _rand(rng, 2, 16, 2, 8)
+    v = _rand(rng, 2, 16, 2, 8)
+    mask = I.causal_mask(16, 16)[None, None]
+    o1 = I.inhibitor_attention(q, k, v, mask=mask, signed=signed)
+    o2 = I.inhibitor_attention_chunked(q, k, v, mask=mask, signed=signed,
+                                       kv_chunk=kv_chunk)
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 9)])
+def test_blocked_equals_full_with_grads(rng, signed, causal, window):
+    b, n, h, hk, d = 2, 37, 4, 2, 16
+    q = _rand(rng, b, n, h, d)
+    k = _rand(rng, b, n, hk, d)
+    v = _rand(rng, b, n, hk, d)
+    mask = (I.sliding_window_mask(n, n, window) if window
+            else I.causal_mask(n, n))[None, None]
+
+    ref = I.inhibitor_attention(q, k, v, mask=mask, signed=signed)
+    out = blocked_inhibitor_attention(q, k, v, signed=signed, causal=causal,
+                                      window=window, chunk_q=8, chunk_k=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    g1 = jax.grad(lambda x: (blocked_inhibitor_attention(
+        x, k, v, signed=signed, causal=causal, window=window,
+        chunk_q=8, chunk_k=16) ** 2).sum())(q)
+    g2 = jax.grad(lambda x: (I.inhibitor_attention(
+        x, k, v, mask=mask, signed=signed) ** 2).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-4)
+
+
+def test_custom_vjp_matches_naive_autodiff(rng):
+    """Analytic fused VJP ≡ autodiff of the naive (eq. 6/7) form."""
+    q = _rand(rng, 2, 10, 3, 8)
+    k = _rand(rng, 2, 10, 3, 8)
+    v = _rand(rng, 2, 10, 3, 8)
+    mask = I.causal_mask(10, 10)[None, None]
+
+    def naive(q_, k_, v_):
+        qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q_, k_, v_))
+        z = I.manhattan_scores(qt, kt, score_shift=0.5)
+        zm = I.mask_scores(z, jnp.broadcast_to(mask, z.shape))
+        out = I.inhibit_signed_naive(vt, zm)
+        cnt = jnp.broadcast_to(mask, z.shape).sum(-1, keepdims=True)
+        return (out / jnp.maximum(cnt, 1)).transpose(0, 2, 1, 3)
+
+    for idx in range(3):
+        arrs = [q, k, v]
+
+        def f_new(x, idx=idx):
+            a = list(arrs)
+            a[idx] = x
+            return (I.inhibitor_attention(a[0], a[1], a[2],
+                                          mask=mask) ** 2).sum()
+
+        def f_ref(x, idx=idx):
+            a = list(arrs)
+            a[idx] = x
+            return (naive(a[0], a[1], a[2]) ** 2).sum()
+
+        np.testing.assert_allclose(jax.grad(f_new)(arrs[idx]),
+                                   jax.grad(f_ref)(arrs[idx]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (paper-level invariants)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(2, 6),
+       st.floats(0.0, 2.0), st.integers(0, 10**6))
+def test_scores_nonnegative_and_shift_monotone(nq, nk, d, shift, seed):
+    """Z ≥ 0 always; larger α ⇒ pointwise smaller Z (eq. 5 + shift)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
+    z = I.manhattan_scores(q, k, score_shift=shift)
+    assert bool((z >= 0).all())
+    z2 = I.manhattan_scores(q, k, score_shift=shift + 0.5)
+    assert bool((z2 <= z + 1e-6).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 10), st.integers(2, 6),
+       st.integers(0, 10**6))
+def test_inhibition_monotone_in_z(nq, nk, d, seed):
+    """Unsigned H is pointwise non-increasing in Z (inhibition semantics)."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
+    z = jnp.asarray(np.abs(rng.normal(size=(nq, nk))).astype(np.float32))
+    h1 = I.inhibit_fused(v, z)
+    h2 = I.inhibit_fused(v, z + 0.3)
+    assert bool((h2 <= h1 + 1e-5).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 6), st.integers(0, 10**6))
+def test_normalized_output_bounded_by_values(nk, d, seed):
+    """With normalization, |H| ≤ max|V| (inhibition only attenuates)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    qb, kb, vb = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    out = I.inhibitor_attention(qb, kb, vb, normalize=True, signed=True)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 10), st.integers(2, 5), st.integers(0, 10**6))
+def test_key_permutation_invariance(nk, d, seed):
+    """H is invariant to permuting (K, V) rows together (no positional
+    dependence in the mechanism itself — order comes only from masks)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 4, 2, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
+    perm = np.random.default_rng(seed + 1).permutation(nk)
+    o1 = I.inhibitor_attention(q, k, v)
+    o2 = I.inhibitor_attention(q, k[:, perm], v[:, perm])
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_positions_contribute_zero(rng):
+    """Adding arbitrary masked-out keys never changes the output."""
+    q = _rand(rng, 1, 4, 2, 6)
+    k = _rand(rng, 1, 5, 2, 6)
+    v = _rand(rng, 1, 5, 2, 6)
+    out1 = I.inhibitor_attention(q, k, v, mask=jnp.ones((1, 1, 4, 5),
+                                                        bool))
+    k2 = jnp.concatenate([k, _rand(rng, 1, 3, 2, 6) * 100], axis=1)
+    v2 = jnp.concatenate([v, _rand(rng, 1, 3, 2, 6) * 100], axis=1)
+    mask = jnp.concatenate([jnp.ones((1, 1, 4, 5), bool),
+                            jnp.zeros((1, 1, 4, 3), bool)], axis=-1)
+    out2 = I.inhibitor_attention(q, k2, v2, mask=mask)
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,103 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref as kref
+from repro.kernels.flash import flash_attention_fwd
+from repro.kernels.inhibitor import flash_inhibitor_fwd
+from repro.kernels.rwkv6 import wkv6_chunked
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(
+        dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,heads,kv_heads,d", [
+    (48, 4, 2, 32), (33, 9, 3, 16), (64, 2, 2, 64),
+])
+@pytest.mark.parametrize("signed", [True, False])
+def test_flash_inhibitor_sweep(rng, dtype, n, heads, kv_heads, d, signed):
+    q = _mk(rng, (2, n, heads, d), dtype)
+    k = _mk(rng, (2, n, kv_heads, d), dtype)
+    v = _mk(rng, (2, n, kv_heads, d), dtype)
+    out = flash_inhibitor_fwd(q, k, v, signed=signed, causal=True,
+                              block_q=16, block_k=16, sub_k=8,
+                              interpret=True)
+    refo = kref.flash_inhibitor_ref(q, k, v, signed=signed, causal=True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(refo, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_inhibitor_window(rng, window):
+    q = _mk(rng, (1, 40, 4, 16), jnp.float32)
+    k = _mk(rng, (1, 40, 4, 16), jnp.float32)
+    v = _mk(rng, (1, 40, 4, 16), jnp.float32)
+    out = flash_inhibitor_fwd(q, k, v, window=window, block_q=16,
+                              block_k=16, sub_k=8, interpret=True)
+    refo = kref.flash_inhibitor_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, refo, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,heads,kv_heads,d", [
+    (48, 4, 2, 32), (40, 8, 8, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, n, heads, kv_heads, d, causal):
+    q = _mk(rng, (2, n, heads, d), jnp.float32)
+    k = _mk(rng, (2, n, kv_heads, d), jnp.float32)
+    v = _mk(rng, (2, n, kv_heads, d), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=16,
+                              block_k=16, interpret=True)
+    refo = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, refo, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,heads,n,chunk", [
+    (50, 3, 16, 16), (32, 2, 8, 8), (17, 1, 16, 32),
+])
+def test_wkv6_chunked_sweep(rng, t, heads, n, chunk):
+    b = 2
+    r = _mk(rng, (b, t, heads, n), jnp.float32)
+    k = _mk(rng, (b, t, heads, n), jnp.float32)
+    v = _mk(rng, (b, t, heads, n), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(
+        rng.normal(size=(b, t, heads, n)) * 2)).astype(np.float32))
+    u = _mk(rng, (heads, n), jnp.float32)
+    o_k, s_k = wkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=True)
+    o_r, s_r = kref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(o_k, o_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_extreme_decay_stability(rng):
+    """Zero-decay (w underflows to 0) must not produce NaN (subnormal
+    flush regression)."""
+    b, t, h, n = 1, 24, 1, 8
+    r = _mk(rng, (b, t, h, n), jnp.float32)
+    k = _mk(rng, (b, t, h, n), jnp.float32)
+    v = _mk(rng, (b, t, h, n), jnp.float32)
+    w = jnp.zeros((b, t, h, n), jnp.float32)  # hardest case
+    u = _mk(rng, (h, n), jnp.float32)
+    o_k, s_k = wkv6_chunked(r, k, v, w, u, chunk=8, interpret=True)
+    assert bool(jnp.isfinite(o_k).all()) and bool(jnp.isfinite(s_k).all())
+
+
+def test_ops_grads_match_ref(rng):
+    q = _mk(rng, (2, 24, 4, 16), jnp.float32)
+    k = _mk(rng, (2, 24, 2, 16), jnp.float32)
+    v = _mk(rng, (2, 24, 2, 16), jnp.float32)
+    g1 = jax.grad(lambda x: ops.flash_inhibitor(x, k, v).sum())(q)
+    g2 = jax.grad(lambda x: kref.flash_inhibitor_ref(x, k, v).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+    g3 = jax.grad(lambda x: ops.flash_attention(x, k, v).sum())(q)
+    g4 = jax.grad(lambda x: kref.flash_attention_ref(x, k, v).sum())(q)
+    np.testing.assert_allclose(g3, g4, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,107 @@
+"""Quantization + TFHE simulation: exactness, paper-claim regressions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fhe import (circuit_seconds, describe, dotprod_attention_circuit,
+                       encrypt, inhibitor_attention_circuit, select_params)
+from repro.fhe.tfhe_sim import FheContext
+from repro.quant.fake_quant import QuantConfig, compute_scale, dequantize, \
+    fake_quant, quantize
+from repro.quant.int_attention import (int_inhibitor_attention,
+                                       quantize_qkv)
+
+
+# ---- quantization ----
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 8), st.integers(1, 64), st.integers(0, 10**6))
+def test_quant_roundtrip_error_bound(bits, n, seed):
+    """|x − dq(q(x))| ≤ scale/2 (symmetric max-abs quantization)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    cfg = QuantConfig(bits=bits)
+    s = compute_scale(x, cfg)
+    err = jnp.abs(dequantize(quantize(x, s, cfg), s) - x)
+    assert float(err.max()) <= float(s) / 2 + 1e-6
+
+
+def test_fake_quant_straight_through(rng):
+    import jax
+    x = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    g = jax.grad(lambda t: (fake_quant(t, QuantConfig(bits=8)) ** 2).sum())(x)
+    # STE: gradient flows as if identity (2x)
+    np.testing.assert_allclose(g, 2 * fake_quant(x, QuantConfig(bits=8)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---- TFHE simulator ----
+
+def test_cipher_mul_exact(rng):
+    """ab = PBS(x²/4; a+b) − PBS(x²/4; a−b) is exact on integers (eq. 1)."""
+    a = np.asarray(rng.integers(-100, 100, (50,)))
+    b = np.asarray(rng.integers(-100, 100, (50,)))
+    ea, ctx = encrypt(a)
+    eb, _ = encrypt(b, ctx)
+    prod = ea.mul_cipher(eb)
+    np.testing.assert_array_equal(prod.values, a * b)
+    assert ctx.pbs == 2 * 50  # two PBS per element
+
+
+def test_inhibitor_circuit_matches_int_reference(rng):
+    T, d = 6, 3
+    q = rng.integers(-7, 8, (T, d))
+    k = rng.integers(-7, 8, (T, d))
+    v = rng.integers(-7, 8, (T, d))
+    h, _ = inhibitor_attention_circuit(q, k, v, gamma_shift=1, alpha_q=1)
+    ref = np.asarray(int_inhibitor_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        gamma_shift=1, alpha_q=1))
+    np.testing.assert_array_equal(h, ref)
+
+
+def test_paper_claims_bits_pbs_speedup(rng):
+    """Table 2/4 regression: +1–2 bits, ~2× PBS, 3–6× encrypted speedup."""
+    for T in (2, 4, 8, 16):
+        q = rng.integers(-7, 8, (T, 2))
+        k = rng.integers(-7, 8, (T, 2))
+        v = rng.integers(-7, 8, (T, 2))
+        _, si = inhibitor_attention_circuit(q, k, v, gamma_shift=1,
+                                            alpha_q=1)
+        _, sd = dotprod_attention_circuit(q, k, v, scale_shift=2)
+        gap = sd["max_bits_at_pbs"] - si["max_bits_at_pbs"]
+        assert 1 <= gap <= 2, (T, gap)
+        ratio_pbs = sd["pbs"] / si["pbs"]
+        assert 1.8 <= ratio_pbs <= 3.0, (T, ratio_pbs)
+        speedup = circuit_seconds(sd) / circuit_seconds(si)
+        assert 3.0 <= speedup <= 6.0, (T, speedup)
+
+
+def test_param_curve_monotone():
+    prev = None
+    for bits in range(4, 17):
+        p = select_params(bits)
+        if prev is not None:
+            assert p.poly_size >= prev.poly_size
+            assert p.lwe_dim >= prev.lwe_dim - 60
+        prev = p
+    with pytest.raises(ValueError):
+        select_params(17)   # paper: 16-bit TFHE LUT ceiling
+
+
+def test_shared_scale_survives_inhibitor(rng):
+    """Paper's 'straightforward quantization': with a shared scale s,
+    int-inhibitor(q/s, k/s, v/s) ≈ float-inhibitor(q, k, v)/s."""
+    q = rng.normal(size=(5, 4)).astype(np.float32)
+    k = rng.normal(size=(5, 4)).astype(np.float32)
+    v = rng.normal(size=(5, 4)).astype(np.float32)
+    qi, ki, vi, s = quantize_qkv(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), bits=8)
+    hi = int_inhibitor_attention(qi, ki, vi)            # γ=1, α=0
+    # float reference at γ=1, α=0 (unsigned eq. 6)
+    z = np.abs(q[:, None, :] - k[None, :, :]).sum(-1)
+    hf = np.maximum(v[None, :, :] - z[:, :, None], 0).sum(1)
+    np.testing.assert_allclose(np.asarray(hi) * float(s), hf,
+                               atol=float(s) * 40)

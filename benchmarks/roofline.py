@@ -122,7 +122,8 @@ def markdown_table(rows) -> str:
     return "\n".join(lines)
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    del smoke                     # reads dry-run records; no size knob
     recs = load_records()
     rows = [roofline_row(r) for r in recs]
     csv = []

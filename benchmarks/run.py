@@ -1,7 +1,9 @@
 """Benchmark harness: one function per paper table (+ roofline reader).
 
 Prints ``name,us_per_call,derived`` CSV; ``python -m benchmarks.run``.
-Select subsets with ``--only table1`` etc.
+Select subsets with ``--only table1`` etc.  ``--smoke`` runs every suite
+at a shrunken size (few steps/reps, smallest T) — the CI job that makes
+dispatch/planner regressions visible in timings.
 """
 
 from __future__ import annotations
@@ -15,6 +17,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/reps for CI dispatch-regression runs")
     args = ap.parse_args(argv)
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -34,7 +38,7 @@ def main(argv=None) -> None:
         if wanted and name not in wanted:
             continue
         try:
-            for row in fn():
+            for row in fn(smoke=args.smoke):
                 print(",".join(map(str, row)), flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

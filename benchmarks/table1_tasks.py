@@ -58,7 +58,8 @@ def _apply_block(p, kind, x):
     return x
 
 
-def _train(init_fn, loss_fn, data_fn, steps=STEPS, lr=3e-3, seed=0):
+def _train(init_fn, loss_fn, data_fn, steps=None, lr=3e-3, seed=0):
+    steps = STEPS if steps is None else steps
     params = unbox(init_fn(jax.random.PRNGKey(seed)))
     opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
     opt = init_adamw(params, opt_cfg)
@@ -77,7 +78,7 @@ def _train(init_fn, loss_fn, data_fn, steps=STEPS, lr=3e-3, seed=0):
 
 # ---- adding problem (regression; paper metric: MSE) ----
 
-def bench_adding(kind: str, length=50, seed=0):
+def bench_adding(kind: str, length=50, seed=0, steps=None):
     def init_fn(key):
         kg = KeyGen(key)
         return {
@@ -101,7 +102,7 @@ def bench_adding(kind: str, length=50, seed=0):
         x, y = adding_problem(BATCH, length, s)
         return jnp.asarray(x), jnp.asarray(y)
 
-    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    params = _train(init_fn, loss_fn, data_fn, steps=steps, seed=seed)
     x, y = adding_problem(512, length, 123_456 + seed)
     pred = forward(params, jnp.asarray(x))
     return float(jnp.mean(jnp.square(pred - jnp.asarray(y))))
@@ -109,7 +110,7 @@ def bench_adding(kind: str, length=50, seed=0):
 
 # ---- digits (10-class; paper metric: accuracy) ----
 
-def bench_digits(kind: str, res=16, seed=0):
+def bench_digits(kind: str, res=16, seed=0, steps=None):
     def init_fn(key):
         kg = KeyGen(key)
         return {
@@ -135,7 +136,7 @@ def bench_digits(kind: str, res=16, seed=0):
         x, y = digits(BATCH, s, res=res)
         return jnp.asarray(x), jnp.asarray(y)
 
-    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    params = _train(init_fn, loss_fn, data_fn, steps=steps, seed=seed)
     x, y = digits(1024, 777_777 + seed, res=res)
     pred = jnp.argmax(forward(params, jnp.asarray(x)), axis=-1)
     return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
@@ -143,7 +144,7 @@ def bench_digits(kind: str, res=16, seed=0):
 
 # ---- sentiment (binary; paper metric: accuracy) ----
 
-def bench_sentiment(kind: str, length=64, vocab=512, seed=0):
+def bench_sentiment(kind: str, length=64, vocab=512, seed=0, steps=None):
     def init_fn(key):
         kg = KeyGen(key)
         return {
@@ -168,28 +169,45 @@ def bench_sentiment(kind: str, length=64, vocab=512, seed=0):
         t, y = sentiment(BATCH, s, length=length, vocab=vocab)
         return jnp.asarray(t), jnp.asarray(y)
 
-    params = _train(init_fn, loss_fn, data_fn, seed=seed)
+    params = _train(init_fn, loss_fn, data_fn, steps=steps, seed=seed)
     t, y = sentiment(1024, 555_555 + seed, length=length, vocab=vocab)
     pred = jnp.argmax(forward(params, jnp.asarray(t)), axis=-1)
     return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
 
 
-def run() -> list:
-    """Returns CSV rows (name, us_per_call, derived)."""
+def run(smoke: bool = False) -> list:
+    """Returns CSV rows (name, us_per_call, derived).
+
+    Mechanisms are enumerated from the registry, so a newly registered
+    fourth mechanism shows up in the parity table without touching this
+    driver.  ``smoke``: one task, two mechanisms, few steps (CI).
+    """
+    from repro.core.mechanism import available_mechanisms
+
+    tasks = (("adding", bench_adding, "mse"),
+             ("digits", bench_digits, "acc"),
+             ("sentiment", bench_sentiment, "acc"))
+    kinds = available_mechanisms()
+    steps = STEPS
+    if smoke:
+        tasks = tasks[:1]
+        kinds = ("dotprod", "inhibitor")
+        steps = 5
     rows = []
-    for task, fn, metric in (("adding", bench_adding, "mse"),
-                             ("digits", bench_digits, "acc"),
-                             ("sentiment", bench_sentiment, "acc")):
+    for task, fn, metric in tasks:
         scores = {}
-        for kind in ("dotprod", "inhibitor"):
+        for kind in kinds:
             t0 = time.perf_counter()
-            scores[kind] = fn(kind)
-            dt = (time.perf_counter() - t0) * 1e6 / STEPS
+            scores[kind] = fn(kind, steps=steps)
+            dt = (time.perf_counter() - t0) * 1e6 / steps
             rows.append((f"table1/{task}/{kind}", round(dt, 1),
                          f"{metric}={scores[kind]:.4f}"))
-        gap = scores["inhibitor"] - scores["dotprod"]
-        rows.append((f"table1/{task}/gap", 0.0,
-                     f"inhibitor-dotprod={gap:+.4f}"))
+        for kind in kinds:
+            if kind == "dotprod":
+                continue
+            gap = scores[kind] - scores["dotprod"]
+            rows.append((f"table1/{task}/gap_{kind}", 0.0,
+                         f"{kind}-dotprod={gap:+.4f}"))
     return rows
 
 

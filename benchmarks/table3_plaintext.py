@@ -15,36 +15,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.quant.int_attention import (int_dot_product_attention,
-                                       int_inhibitor_attention)
+from repro.core.mechanism import get_mechanism
 
 REPS = 20
 D = 16
 
 
-def _time(fn, *args) -> float:
+def _time(fn, *args, reps: int = REPS) -> float:
     out = fn(*args)
     jax.block_until_ready(out)          # compile + warm
     t0 = time.perf_counter()
-    for _ in range(REPS):
+    for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / REPS * 1e6  # µs
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    # the integer-lane reference of each arm comes off the registry
+    int_inhibitor = get_mechanism("inhibitor").int_reference
+    int_dotprod = get_mechanism("dotprod").int_reference
     rows = []
     rng = np.random.default_rng(0)
-    inh = jax.jit(lambda q, k, v: int_inhibitor_attention(
+    inh = jax.jit(lambda q, k, v: int_inhibitor(
         q, k, v, gamma_shift=2, alpha_q=1))
-    dot = jax.jit(lambda q, k, v: int_dot_product_attention(
-        q, k, v, scale_shift=4))
-    for T in (32, 64, 128, 256):
+    dot = jax.jit(lambda q, k, v: int_dotprod(q, k, v, scale_shift=4))
+    for T in (32, 64) if smoke else (32, 64, 128, 256):
         q = jnp.asarray(rng.integers(-127, 128, (T, D)).astype(np.int32))
         k = jnp.asarray(rng.integers(-127, 128, (T, D)).astype(np.int32))
         v = jnp.asarray(rng.integers(-127, 128, (T, D)).astype(np.int32))
-        t_i = _time(inh, q, k, v)
-        t_d = _time(dot, q, k, v)
+        t_i = _time(inh, q, k, v, reps=3 if smoke else REPS)
+        t_d = _time(dot, q, k, v, reps=3 if smoke else REPS)
         saving = 1.0 - t_i / t_d
         rows.append((f"table3/T{T}/inhibitor", round(t_i, 1), "us"))
         rows.append((f"table3/T{T}/dotprod", round(t_d, 1), "us"))

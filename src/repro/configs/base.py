@@ -102,8 +102,12 @@ class ModelConfig:
         return jnp.dtype(self.compute_dtype)
 
     def with_attention_kind(self, kind: str) -> "ModelConfig":
+        # keep both naming fields in sync: ``mechanism`` outranks the
+        # legacy ``kind`` in the planner, so overriding only ``kind``
+        # would be silently ignored on configs that set ``mechanism``
         return dataclasses.replace(
-            self, attention=dataclasses.replace(self.attention, kind=kind))
+            self, attention=dataclasses.replace(self.attention, kind=kind,
+                                                mechanism=kind))
 
     def with_layers(self, n: int, *, unroll: bool = False) -> "ModelConfig":
         """Depth-n variant (dry-run per-layer cost extraction)."""

@@ -1,4 +1,5 @@
-"""Core: the paper's contribution — inhibitor attention — and its baseline."""
+"""Core: the paper's contribution — inhibitor attention — and its baseline,
+behind the pluggable mechanism registry + backend planner."""
 
 from repro.core.attention import (  # noqa: F401
     AttentionConfig,
@@ -6,6 +7,21 @@ from repro.core.attention import (  # noqa: F401
     apply_attention,
     init_attention,
     init_kv_cache,
+)
+from repro.core.mechanism import (  # noqa: F401
+    BACKENDS,
+    MASK_FREE_BACKENDS,
+    AttnShapes,
+    ExecutionPlan,
+    Mechanism,
+    MechanismParams,
+    Structural,
+    available_mechanisms,
+    backend_eligible,
+    execute_plan,
+    get_mechanism,
+    plan_attention,
+    register_mechanism,
 )
 from repro.core.dotprod import dot_product_attention  # noqa: F401
 from repro.core.inhibitor import (  # noqa: F401

@@ -1,10 +1,11 @@
 """Unified multi-head attention layer with swappable score mechanism.
 
-``AttentionConfig.kind`` selects the mechanism:
-
-  * ``"dotprod"``            — conventional Softmax attention (paper eq. 3)
-  * ``"inhibitor"``          — signed inhibitor (paper eq. 7 / fused eq. 10)
-  * ``"inhibitor_unsigned"`` — unsigned inhibitor (paper eq. 6 / fused eq. 9)
+The mechanism (``"dotprod"`` | ``"inhibitor"`` | ``"inhibitor_unsigned"``
+| anything else registered) and the execution backend are both resolved
+through :mod:`repro.core.mechanism`: ``plan_attention(cfg, shapes)``
+returns an inspectable :class:`~repro.core.mechanism.ExecutionPlan` and
+``apply_attention`` executes it — no string ladders or inline shape
+heuristics live here (DESIGN.md §7).
 
 The projection layout (fused QKV per-head, GQA, optional QKV bias, RoPE) is
 shared across mechanisms so the paper's technique is a one-line config swap
@@ -22,15 +23,18 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dotprod as dp
-from repro.core import inhibitor as inh
+from repro.core.mechanism import (
+    DEFAULT_BLOCKED_THRESHOLD, DEFAULT_CHUNKED_THRESHOLD,
+    MASK_FREE_BACKENDS, AttnShapes, Structural, execute_plan, get_mechanism,
+    plan_attention)
 from repro.nn.linear import apply_dense, init_dense
 from repro.nn.module import KeyGen
 
 
 @dataclasses.dataclass(frozen=True)
 class AttentionConfig:
-    kind: str = "dotprod"           # dotprod | inhibitor | inhibitor_unsigned
+    kind: str = "dotprod"           # legacy mechanism name; prefer
+                                    # ``mechanism`` (registry key)
     num_heads: int = 8
     num_kv_heads: int = 8
     head_dim: int = 64
@@ -44,10 +48,15 @@ class AttentionConfig:
     normalize: bool = True          # key-count normalization (DESIGN.md §2)
     sliding_window: Optional[int] = None
     causal: bool = True
-    use_kernel: bool = False        # dispatch to Pallas flash path
-    kv_chunk: int = 256             # chunk size for the streaming form
-    chunked_threshold: int = 4096   # n_k above which the streaming form is
-                                    # used when the kernel path is off
+    mechanism: Optional[str] = None  # registry name; None -> ``kind``
+    backend: Optional[str] = None   # force a backend; None = planner auto
+    use_kernel: bool = False        # DEPRECATED: shim for backend="pallas"
+    kv_chunk: int = 256             # chunk size for streaming/blocked forms
+    # planner thresholds (single source of truth: core.mechanism defaults)
+    chunked_threshold: int = DEFAULT_CHUNKED_THRESHOLD   # n_k > this ->
+                                                         # streaming form
+    blocked_threshold: int = DEFAULT_BLOCKED_THRESHOLD   # n_q·n_k ≥ this ->
+                                                         # mask-free paths
 
 
 class KVCache(NamedTuple):
@@ -82,29 +91,6 @@ def init_attention(key, cfg: AttentionConfig, embed_dim: int, *,
                          ("heads", "head_dim"), ("embed",),
                          use_bias=cfg.out_bias, dtype=dtype),
     }
-
-
-def _mechanism(cfg: AttentionConfig, q, k, v, mask):
-    if cfg.kind == "dotprod":
-        return dp.dot_product_attention(q, k, v, mask=mask,
-                                        score_scale=cfg.score_scale)
-    signed = cfg.kind == "inhibitor"
-    if cfg.kind not in ("inhibitor", "inhibitor_unsigned"):
-        raise ValueError(f"unknown attention kind {cfg.kind!r}")
-    if cfg.use_kernel:
-        from repro.kernels import ops as kops
-        return kops.flash_inhibitor(
-            q, k, v, mask=mask, score_scale=cfg.score_scale,
-            score_shift=cfg.score_shift, signed=signed,
-            normalize=cfg.normalize)
-    if k.shape[1] > cfg.chunked_threshold:
-        return inh.inhibitor_attention_chunked(
-            q, k, v, mask=mask, score_scale=cfg.score_scale,
-            score_shift=cfg.score_shift, signed=signed,
-            normalize=cfg.normalize, kv_chunk=cfg.kv_chunk)
-    return inh.inhibitor_attention(
-        q, k, v, mask=mask, score_scale=cfg.score_scale,
-        score_shift=cfg.score_shift, signed=signed, normalize=cfg.normalize)
 
 
 def _build_mask(cfg: AttentionConfig, n_q: int, n_k: int, q_offset,
@@ -208,34 +194,38 @@ def apply_attention(
     q_offset = cache.length if cache is not None else 0
     scalar_cursor = jnp.asarray(q_offset).ndim == 0
 
-    # Large structural-mask inhibitor attention takes the flash-structured
-    # blocked path: exact, chunk-bounded memory, analytic backward, no
-    # (n_q, n_k) mask arrays (core.blocked).
-    if (cfg.kind in ("inhibitor", "inhibitor_unsigned") and not cfg.use_kernel
-            and attn_mask is None and x_kv is None and scalar_cursor
-            and n_q * n_k >= (1 << 20)):
-        from repro.core.blocked import blocked_inhibitor_attention
+    # Mechanism AND backend come exclusively from the registry/planner —
+    # the plan is inspectable up front via plan_attention(cfg, shapes).
+    shapes = AttnShapes(
+        batch=b, n_q=n_q, n_k=n_k, num_heads=cfg.num_heads,
+        num_kv_heads=k.shape[2], head_dim=cfg.head_dim, dtype=q.dtype,
+        has_explicit_mask=attn_mask is not None, is_cross=x_kv is not None,
+        has_cache=cache is not None, scalar_cursor=bool(scalar_cursor))
+    plan = plan_attention(cfg, shapes)
+    mech = get_mechanism(plan.mechanism)
+    mech_params = mech.make_params(
+        score_scale=cfg.score_scale, score_shift=cfg.score_shift,
+        normalize=cfg.normalize, kv_chunk=cfg.kv_chunk)
 
-        out = blocked_inhibitor_attention(
-            q, k, v, score_scale=cfg.score_scale,
-            score_shift=cfg.score_shift, signed=cfg.kind == "inhibitor",
-            normalize=cfg.normalize, causal=cfg.causal,
-            window=cfg.sliding_window, q_offset=q_offset,
-            kv_valid_len=kv_valid_len, chunk_k=cfg.kv_chunk,
-            chunk_q=min(cfg.kv_chunk, 512))
-        y = apply_dense(params["wo"], out, 2, cdt)
-        return y, new_cache
+    if plan.backend in MASK_FREE_BACKENDS:
+        # blocked/pallas compute causality/window/valid-length from indices
+        # inside their chunk loops — no (n_q, n_k) mask array in HBM
+        structural = Structural(causal=cfg.causal, window=cfg.sliding_window,
+                                q_offset=q_offset, kv_valid_len=kv_valid_len)
+        out = execute_plan(plan, q, k, v, params=mech_params,
+                           structural=structural)
+    else:
+        mask = attn_mask
+        if mask is None and x_kv is None:
+            mask = _build_mask(cfg, n_q, n_k, q_offset, kv_valid_len)
+        elif mask is None and x_kv is not None and kv_valid_len is not None:
+            kvl = jnp.asarray(kv_valid_len)
+            if kvl.ndim == 1:
+                mask = (jnp.arange(n_k)[None, :] < kvl[:, None])[:, None,
+                                                                 None]
+            else:
+                mask = (jnp.arange(n_k)[None, :] < kvl)[None, None, None]
+        out = execute_plan(plan, q, k, v, mask=mask, params=mech_params)
 
-    mask = attn_mask
-    if mask is None and x_kv is None:
-        mask = _build_mask(cfg, n_q, n_k, q_offset, kv_valid_len)
-    elif mask is None and x_kv is not None and kv_valid_len is not None:
-        kvl = jnp.asarray(kv_valid_len)
-        if kvl.ndim == 1:
-            mask = (jnp.arange(n_k)[None, :] < kvl[:, None])[:, None, None]
-        else:
-            mask = (jnp.arange(n_k)[None, :] < kvl)[None, None, None]
-
-    out = _mechanism(cfg, q, k, v, mask)              # (b, n_q, h, d)
-    y = apply_dense(params["wo"], out, 2, cdt)
+    y = apply_dense(params["wo"], out, 2, cdt)        # out: (b, n_q, h, d)
     return y, new_cache

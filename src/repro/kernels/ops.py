@@ -106,8 +106,11 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 # ---------------------------------------------------------------------------
 
 def wkv6(r, k, v, w, u, state=None, *, chunk: int = 32):
-    """Chunked WKV6 (kernel) when starting from zero state; falls back to
-    the exact scan when a carry state is provided (decode path)."""
+    """Chunked WKV6 (kernel) when starting from zero state; the exact scan
+    when a carry state is provided.  The kernel-vs-scan *plan* is made
+    (and trace-logged) once at the model level — models.rwkv.apply_block's
+    ``choose_plan`` — so this wrapper only enforces the state-carry
+    constraint for direct callers."""
     if state is not None:
         return kref.wkv6_ref(r, k, v, w, u, state)
     return wkv6_chunked(r, k, v, w, u, chunk=chunk,

@@ -37,7 +37,6 @@ def main(argv=None):
     log = logging.getLogger("repro.launch.serve")
 
     from repro.configs import get_config
-    from repro.models import transformer as tfm
     from repro.models.registry import get_model
     from repro.nn.module import unbox
     from repro.serve.engine import Engine, EngineConfig, Request
@@ -52,9 +51,13 @@ def main(argv=None):
         from repro.checkpoint import restore
         (params, _), step = restore(args.ckpt_dir, (params, None))[0], None
 
+    # per-slot cursors for ragged continuous batching; every family's
+    # init_states accepts per_slot (recurrent families ignore it — their
+    # state is inherently per-row)
+    base_init = api.init_states
     api = api._replace(
-        init_states=lambda b, s, **kw: tfm.init_states(cfg, b, s,
-                                                        per_slot=True))
+        init_states=lambda b, s, **kw: base_init(b, s,
+                                                 **{"per_slot": True, **kw}))
     eng = Engine(api, params,
                  EngineConfig(max_batch=args.max_batch,
                               max_len=args.max_len))

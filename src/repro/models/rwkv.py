@@ -51,14 +51,24 @@ def init_block(key, cfg: ModelConfig) -> dict:
 def apply_block(params, cfg: ModelConfig, x, *,
                 state: Optional[RwkvLayerState] = None,
                 use_kernel: bool = True):
+    from repro.core.mechanism import choose_plan
+
     cdt = cfg.cdtype
     h = normnn.apply_layernorm(params["ln1"], x, eps=cfg.norm_eps)
     h = constrain(h, "batch", "seq_sp", "embed")
+    # the WKV token mixer's kernel-vs-scan choice is an explicit plan,
+    # trace-logged alongside the attention planner's decisions
+    plan = choose_plan("wkv6", [
+        ("pallas", use_kernel and state is None,
+         "chunked WKV kernel (train/prefill, zero initial state)"),
+        ("naive", True,
+         "exact scan (decode state carry or kernel disabled)"),
+    ])
     a, (wkv_state, tm_x) = ssmnn.apply_rwkv6_timemix(
         params["time_mix"], h, _num_heads(cfg),
         state=state.wkv if state is not None else None,
         x_prev=state.tm_x if state is not None else None,
-        use_kernel=use_kernel and state is None, compute_dtype=cdt)
+        use_kernel=plan.backend == "pallas", compute_dtype=cdt)
     x = x + a
     h2 = normnn.apply_layernorm(params["ln2"], x, eps=cfg.norm_eps)
     f, cm_x = ssmnn.apply_rwkv6_channelmix(

@@ -11,9 +11,12 @@ Block (pre-norm):
     f   = ffn_or_moe(norm2(x))
     x   = x + f
 
-The token mixer's attention mechanism — dot-product or the paper's
-Inhibitor — is selected by ``cfg.attention.kind``; the hybrid family
-(hymba) averages a parallel mamba branch with the attention branch.
+The token mixer's attention mechanism — dot-product, the paper's
+Inhibitor, or any other registered mechanism — is resolved through the
+:mod:`repro.core.mechanism` registry (``cfg.attention.mechanism``, legacy
+``cfg.attention.kind``), and the execution backend is chosen per shape by
+its planner; the hybrid family (hymba) averages a parallel mamba branch
+with the attention branch.
 """
 
 from __future__ import annotations
@@ -85,6 +88,9 @@ def _apply_ffn(cfg: ModelConfig, p, x, cdt):
 # ---------------------------------------------------------------------------
 
 def init_block(key, cfg: ModelConfig) -> dict:
+    from repro.core.mechanism import get_mechanism, resolve_mechanism_name
+
+    get_mechanism(resolve_mechanism_name(cfg.attention))  # fail fast
     kg = KeyGen(key)
     dtype = cfg.pdtype
     p = {

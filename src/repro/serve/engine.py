@@ -62,9 +62,31 @@ class Engine:
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}     # slot -> request
         self.states = api.init_states(cfg.max_batch, cfg.max_len)
+        self.decode_plan = self._plan_decode()
+        if self.decode_plan is not None:
+            log.info("engine decode %s [max_batch=%d max_len=%d]",
+                     self.decode_plan.trace_line(), cfg.max_batch,
+                     cfg.max_len)
         self._jit_decode = jax.jit(self._decode_step)
         self._jit_prefill_one = jax.jit(self._prefill_slot,
                                         static_argnames=("slot",))
+
+    def _plan_decode(self):
+        """Inspectable attention plan for the steady-state decode tick
+        (per-slot ragged cursors, full-pool KV buffer).  None for
+        attention-free families (rwkv)."""
+        from repro.core.mechanism import AttnShapes, plan_attention
+
+        mcfg = self.api.cfg
+        if mcfg.family == "ssm":
+            return None
+        acfg = mcfg.attention
+        shapes = AttnShapes(
+            batch=self.cfg.max_batch, n_q=1, n_k=self.cfg.max_len,
+            num_heads=acfg.num_heads, num_kv_heads=acfg.num_kv_heads,
+            head_dim=acfg.head_dim, dtype=mcfg.cdtype, has_cache=True,
+            scalar_cursor=False)
+        return plan_attention(acfg, shapes)
 
     # ---- jitted kernels ----
     def _decode_step(self, params, tokens, states):

@@ -1,10 +1,14 @@
-"""Paper-equation identities + property tests for the inhibitor core."""
+"""Paper-equation identities for the inhibitor core (deterministic).
+
+Hypothesis-based property tests live in test_property_based.py, which
+skips as a unit when the optional ``hypothesis`` dependency is absent —
+tier-1 collection must never die on an optional import.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import inhibitor as I
 from repro.core.blocked import blocked_inhibitor_attention
@@ -119,65 +123,6 @@ def test_custom_vjp_matches_naive_autodiff(rng):
         np.testing.assert_allclose(jax.grad(f_new)(arrs[idx]),
                                    jax.grad(f_ref)(arrs[idx]),
                                    rtol=1e-3, atol=1e-4)
-
-
-# ---------------------------------------------------------------------------
-# Hypothesis property tests (paper-level invariants)
-# ---------------------------------------------------------------------------
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 8), st.integers(2, 8), st.integers(2, 6),
-       st.floats(0.0, 2.0), st.integers(0, 10**6))
-def test_scores_nonnegative_and_shift_monotone(nq, nk, d, shift, seed):
-    """Z ≥ 0 always; larger α ⇒ pointwise smaller Z (eq. 5 + shift)."""
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
-    z = I.manhattan_scores(q, k, score_shift=shift)
-    assert bool((z >= 0).all())
-    z2 = I.manhattan_scores(q, k, score_shift=shift + 0.5)
-    assert bool((z2 <= z + 1e-6).all())
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 6), st.integers(2, 10), st.integers(2, 6),
-       st.integers(0, 10**6))
-def test_inhibition_monotone_in_z(nq, nk, d, seed):
-    """Unsigned H is pointwise non-increasing in Z (inhibition semantics)."""
-    rng = np.random.default_rng(seed)
-    v = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
-    z = jnp.asarray(np.abs(rng.normal(size=(nq, nk))).astype(np.float32))
-    h1 = I.inhibit_fused(v, z)
-    h2 = I.inhibit_fused(v, z + 0.3)
-    assert bool((h2 <= h1 + 1e-5).all())
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 10), st.integers(2, 6), st.integers(0, 10**6))
-def test_normalized_output_bounded_by_values(nk, d, seed):
-    """With normalization, |H| ≤ max|V| (inhibition only attenuates)."""
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
-    qb, kb, vb = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
-    out = I.inhibitor_attention(qb, kb, vb, normalize=True, signed=True)
-    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(3, 10), st.integers(2, 5), st.integers(0, 10**6))
-def test_key_permutation_invariance(nk, d, seed):
-    """H is invariant to permuting (K, V) rows together (no positional
-    dependence in the mechanism itself — order comes only from masks)."""
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.normal(size=(1, 4, 2, d)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
-    perm = np.random.default_rng(seed + 1).permutation(nk)
-    o1 = I.inhibitor_attention(q, k, v)
-    o2 = I.inhibitor_attention(q, k[:, perm], v[:, perm])
-    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
 
 
 def test_masked_positions_contribute_zero(rng):

@@ -1,0 +1,318 @@
+"""Mechanism registry + planner: backend parity and plan selection.
+
+The parity tests are registry-driven: every registered mechanism is
+checked across every eligible float backend (naive / fused / chunked /
+blocked / pallas-in-interpret) against its ``naive`` oracle, through the
+full ``apply_attention`` layer (so the planner's forced-backend path,
+mask materialization, and structural routing are all exercised) — with
+GQA, explicit-mask, and decode-cache cases.  A fourth mechanism that
+registers itself is covered with zero edits here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import (AttentionConfig, apply_attention,
+                                  init_attention, init_kv_cache)
+from repro.core.mechanism import (AttnShapes, ExecutionPlan, Mechanism,
+                                  available_mechanisms, backend_eligible,
+                                  execute_plan, get_mechanism,
+                                  plan_attention, register_mechanism)
+from repro.nn.module import unbox
+
+FLOAT_BACKENDS = ("fused", "chunked", "blocked", "pallas")
+TOL = dict(rtol=1e-3, atol=1e-4)
+
+
+def _cfg(mech, backend=None, **kw):
+    kw.setdefault("num_heads", 4)
+    kw.setdefault("num_kv_heads", 2)        # GQA everywhere
+    kw.setdefault("head_dim", 8)
+    return AttentionConfig(kind=mech, backend=backend, **kw)
+
+
+def _layer(mech, embed=32):
+    cfg = _cfg(mech)
+    return unbox(init_attention(jax.random.PRNGKey(0), cfg, embed))
+
+
+def _shapes(cfg, n_q, n_k, **kw):
+    return AttnShapes(batch=2, n_q=n_q, n_k=n_k, num_heads=cfg.num_heads,
+                      num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                      **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry contents
+# ---------------------------------------------------------------------------
+
+def test_builtin_mechanisms_registered():
+    assert set(available_mechanisms()) >= {"dotprod", "inhibitor",
+                                           "inhibitor_unsigned"}
+    for name in available_mechanisms():
+        mech = get_mechanism(name)
+        assert "naive" in mech.backends, "every mechanism needs its oracle"
+        assert mech.mask_semantics in ("exclude", "neg_inf")
+
+
+def test_unknown_mechanism_error_lists_registered():
+    with pytest.raises(ValueError, match="inhibitor"):
+        get_mechanism("power_softmax")
+
+
+def test_duplicate_registration_fails_loudly():
+    mech = get_mechanism("dotprod")
+    with pytest.raises(ValueError, match="already registered"):
+        register_mechanism(mech)
+    register_mechanism(mech, overwrite=True)    # idempotent restore
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (registry-driven)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mech", available_mechanisms())
+@pytest.mark.parametrize("backend", FLOAT_BACKENDS)
+def test_backend_parity_full_gqa(rng, mech, backend):
+    """Causal self-attention, GQA heads: every backend ≡ the naive oracle."""
+    cfg_ref = _cfg(mech, backend="naive")
+    cfg = _cfg(mech, backend=backend)
+    ok, why = backend_eligible(
+        backend, cfg, _shapes(cfg, 32, 32), get_mechanism(mech))
+    if not ok:
+        pytest.skip(f"{backend}: {why}")
+    params = _layer(mech)
+    x = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32))
+    y_ref, _ = apply_attention(params, cfg_ref, x)
+    y, _ = apply_attention(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL)
+
+
+@pytest.mark.parametrize("mech", available_mechanisms())
+@pytest.mark.parametrize("backend", FLOAT_BACKENDS)
+def test_backend_parity_explicit_mask(rng, mech, backend):
+    """Arbitrary boolean masks: mask-capable backends ≡ the oracle."""
+    cfg = _cfg(mech, backend=backend, causal=False)
+    shapes = _shapes(cfg, 12, 12, has_explicit_mask=True)
+    ok, why = backend_eligible(backend, cfg, shapes, get_mechanism(mech))
+    if not ok:
+        pytest.skip(f"{backend}: {why}")
+    params = _layer(mech)
+    x = jnp.asarray(rng.normal(size=(2, 12, 32)).astype(np.float32))
+    m = np.random.default_rng(7).random((2, 1, 12, 12)) > 0.4
+    m |= np.eye(12, dtype=bool)[None, None]       # every query sees itself
+    mask = jnp.asarray(m)
+    y_ref, _ = apply_attention(params, _cfg(mech, backend="naive",
+                                            causal=False), x,
+                               attn_mask=mask)
+    y, _ = apply_attention(params, cfg, x, attn_mask=mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL)
+
+
+@pytest.mark.parametrize("mech", available_mechanisms())
+@pytest.mark.parametrize("backend", FLOAT_BACKENDS)
+def test_backend_parity_decode_cache(rng, mech, backend):
+    """Prefill + one-token decode against a KV cache ≡ the oracle."""
+    cfg = _cfg(mech, backend=backend)
+    shapes = _shapes(cfg, 1, 16, has_cache=True)
+    ok, why = backend_eligible(backend, cfg, shapes, get_mechanism(mech))
+    if not ok:
+        pytest.skip(f"{backend}: {why}")
+    params = _layer(mech)
+    x = jnp.asarray(rng.normal(size=(2, 6, 32)).astype(np.float32))
+
+    def run(c):
+        cache = init_kv_cache(2, 16, c.num_kv_heads, c.head_dim, jnp.float32)
+        y_pre, cache = apply_attention(params, c, x[:, :5], cache=cache)
+        y_dec, _ = apply_attention(params, c, x[:, 5:6], cache=cache)
+        return y_pre, y_dec
+
+    ref_pre, ref_dec = run(_cfg(mech, backend="naive"))
+    y_pre, y_dec = run(cfg)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(ref_pre), **TOL)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(ref_dec), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Planner selection
+# ---------------------------------------------------------------------------
+
+def test_plan_default_is_fused():
+    cfg = _cfg("inhibitor")
+    plan = plan_attention(cfg, _shapes(cfg, 64, 64))
+    assert (plan.mechanism, plan.backend) == ("inhibitor", "fused")
+
+
+def test_plan_large_structural_goes_blocked():
+    cfg = _cfg("inhibitor")
+    plan = plan_attention(cfg, _shapes(cfg, 2048, 2048))
+    assert plan.backend == "blocked"
+    assert "blocked_threshold" in plan.reason
+
+
+def test_plan_long_kv_goes_chunked():
+    cfg = _cfg("inhibitor")
+    # ragged per-slot decode: structural backends ineligible, long kv
+    plan = plan_attention(cfg, _shapes(cfg, 1, 8192, has_cache=True,
+                                       scalar_cursor=False))
+    assert plan.backend == "chunked"
+
+
+def test_plan_dotprod_has_no_blocked_path():
+    cfg = _cfg("dotprod")
+    plan = plan_attention(cfg, _shapes(cfg, 2048, 2048,
+                                       platform="cpu"))
+    assert plan.backend == "fused"
+
+
+def test_plan_tpu_prefers_pallas_at_scale():
+    cfg = _cfg("inhibitor")
+    plan = plan_attention(cfg, _shapes(cfg, 2048, 2048, platform="tpu"))
+    assert plan.backend == "pallas"
+
+
+def test_plan_integer_lanes_go_int():
+    cfg = _cfg("inhibitor")
+    plan = plan_attention(cfg, _shapes(cfg, 16, 16, dtype=jnp.int32))
+    assert plan.backend == "int"
+
+
+def test_use_kernel_shim_forces_pallas_and_falls_back():
+    cfg = _cfg("inhibitor", use_kernel=True)
+    with pytest.warns(DeprecationWarning):
+        import repro.core.mechanism as M
+        M._use_kernel_warned = False        # re-arm the one-shot warning
+        plan = plan_attention(cfg, _shapes(cfg, 32, 32, platform="tpu"))
+    assert plan.backend == "pallas"
+    assert "use_kernel" in plan.reason
+    # the kernel cannot honor an explicit mask: shim falls back, reason says so
+    plan2 = plan_attention(cfg, _shapes(cfg, 32, 32, platform="tpu",
+                                        has_explicit_mask=True))
+    assert plan2.backend != "pallas"
+    assert "use_kernel requested but pallas ineligible" in plan2.reason
+    # on non-TPU hosts the shim never picks interpret-mode pallas
+    plan3 = plan_attention(cfg, _shapes(cfg, 32, 32, platform="cpu"))
+    assert plan3.backend == "fused"
+    assert "interpret mode" in plan3.reason
+    # legacy semantics preserved: use_kernel was always a no-op for dotprod
+    plan4 = plan_attention(_cfg("dotprod", use_kernel=True),
+                           _shapes(cfg, 32, 32, platform="tpu"))
+    assert (plan4.backend, plan4.reason) == ("fused", "dense default")
+
+
+def test_pallas_backend_rejects_inexpressible_structure(rng):
+    """The flash kernels have no q_offset/valid-length operands — handing
+    them decode-cache structure must fail loudly, not silently attend
+    over stale rows."""
+    from repro.core.mechanism import Structural
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 2, 8)).astype(np.float32))
+    plan = ExecutionPlan("inhibitor", "pallas", "test")
+    mech = get_mechanism("inhibitor")
+    with pytest.raises(ValueError, match="kv_valid_len"):
+        execute_plan(plan, q, q, q,
+                     params=mech.make_params(score_scale=None,
+                                             score_shift=0.5,
+                                             normalize=True, kv_chunk=64),
+                     structural=Structural(kv_valid_len=jnp.int32(3)))
+
+
+def test_forced_ineligible_backend_raises():
+    cfg = _cfg("inhibitor", backend="pallas")
+    with pytest.raises(ValueError, match="ineligible"):
+        plan_attention(cfg, _shapes(cfg, 1, 16, has_cache=True))
+
+
+def test_legacy_kind_still_plans():
+    cfg = AttentionConfig(kind="inhibitor_unsigned")
+    plan = plan_attention(cfg, AttnShapes(2, 8, 8, 8, 8, 64))
+    assert plan.mechanism == "inhibitor_unsigned"
+
+
+# ---------------------------------------------------------------------------
+# Integer / FHE execution domains
+# ---------------------------------------------------------------------------
+
+def test_int_backend_matches_raw_reference(rng):
+    from repro.quant.int_attention import int_inhibitor_attention
+
+    cfg = _cfg("inhibitor", score_scale=4.0, score_shift=1.0, causal=False)
+    q = jnp.asarray(rng.integers(-31, 32, (2, 8, 4, 4)).astype(np.int32))
+    k = jnp.asarray(rng.integers(-31, 32, (2, 8, 2, 4)).astype(np.int32))
+    v = jnp.asarray(rng.integers(-31, 32, (2, 8, 2, 4)).astype(np.int32))
+    shapes = _shapes(cfg, 8, 8, dtype=jnp.int32)
+    plan = plan_attention(cfg, shapes)
+    assert plan.backend == "int"
+    mech = get_mechanism("inhibitor")
+    out = execute_plan(plan, q, k, v, params=mech.make_params(
+        score_scale=4.0, score_shift=1.0, normalize=False, kv_chunk=256))
+    from repro.core.inhibitor import _repeat_kv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = _repeat_kv(k, 2).transpose(0, 2, 1, 3)
+    vt = _repeat_kv(v, 2).transpose(0, 2, 1, 3)
+    ref = int_inhibitor_attention(qt, kt, vt, gamma_shift=2, alpha_q=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.transpose(0, 2, 1, 3)))
+
+
+def test_fhe_sim_backend_matches_circuit():
+    from repro.fhe.circuits import inhibitor_attention_circuit
+
+    rng = np.random.default_rng(3)
+    q = rng.integers(-7, 8, (1, 4, 1, 2))
+    k = rng.integers(-7, 8, (1, 4, 1, 2))
+    v = rng.integers(-7, 8, (1, 4, 1, 2))
+    cfg = _cfg("inhibitor", backend="fhe_sim", num_heads=1, num_kv_heads=1,
+               head_dim=2, causal=False)
+    shapes = AttnShapes(1, 4, 4, 1, 1, 2, dtype=jnp.int32)
+    plan = plan_attention(cfg, shapes)
+    assert plan.backend == "fhe_sim"
+    mech = get_mechanism("inhibitor")
+    out = execute_plan(plan, jnp.asarray(q, jnp.int32),
+                       jnp.asarray(k, jnp.int32), jnp.asarray(v, jnp.int32),
+                       params=mech.make_params(score_scale=None,
+                                               score_shift=0.0,
+                                               normalize=False,
+                                               kv_chunk=256))
+    ref, _ = inhibitor_attention_circuit(q[0, :, 0], k[0, :, 0], v[0, :, 0],
+                                         gamma_shift=1, alpha_q=1)
+    np.testing.assert_array_equal(np.asarray(out)[0, :, 0], ref)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-change extensibility: a fourth mechanism registers once and the
+# whole layer stack picks it up (the redesign's raison d'être)
+# ---------------------------------------------------------------------------
+
+def test_new_mechanism_is_a_leaf_change(rng):
+    def mean_pool(q, k, v, *, mask=None, params=None, structural=None):
+        from repro.core.inhibitor import _repeat_kv
+        vt = _repeat_kv(v, q.shape[2] // v.shape[2]).astype(jnp.float32)
+        if mask is not None:
+            m = jnp.broadcast_to(mask, (q.shape[0], q.shape[2], q.shape[1],
+                                        k.shape[1])).astype(jnp.float32)
+            num = jnp.einsum("bhqk,bkhd->bqhd", m, vt)
+            den = jnp.maximum(m.sum(-1), 1.0)
+            return (num / den.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+        return jnp.broadcast_to(vt.mean(axis=1, keepdims=True),
+                                q.shape).astype(q.dtype)
+
+    register_mechanism(Mechanism(
+        name="_test_meanpool", description="uniform-average stub",
+        mask_semantics="exclude", vjp="autodiff",
+        backends={"naive": mean_pool, "fused": mean_pool}),
+        overwrite=True)
+    try:
+        cfg = _cfg("_test_meanpool")
+        params = _layer("_test_meanpool")
+        x = jnp.asarray(rng.normal(size=(2, 6, 32)).astype(np.float32))
+        y, _ = apply_attention(params, cfg, x)
+        assert y.shape == (2, 6, 32) and bool(jnp.isfinite(y).all())
+        plan = plan_attention(cfg, _shapes(cfg, 6, 6))
+        assert plan == ExecutionPlan("_test_meanpool", "fused",
+                                     "dense default")
+    finally:
+        import repro.core.mechanism as M
+        M._REGISTRY.pop("_test_meanpool", None)

@@ -1,0 +1,119 @@
+"""Hypothesis property tests (paper-level invariants + substrate bounds).
+
+``hypothesis`` is an optional test dependency (the ``test`` extra in
+pyproject.toml).  This module holds every property-based test so that,
+when the package is absent, the whole file skips at collection via
+``pytest.importorskip`` and tier-1 collection never dies — the
+deterministic tests stay in their home modules and always run.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import inhibitor as I  # noqa: E402
+from repro.optim import (compress_tree, decompress_tree,  # noqa: E402
+                         init_compression)
+from repro.quant.fake_quant import (QuantConfig, compute_scale,  # noqa: E402
+                                    dequantize, quantize)
+
+
+# ---------------------------------------------------------------------------
+# Inhibitor core (paper-level invariants)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(2, 6),
+       st.floats(0.0, 2.0), st.integers(0, 10**6))
+def test_scores_nonnegative_and_shift_monotone(nq, nk, d, shift, seed):
+    """Z ≥ 0 always; larger α ⇒ pointwise smaller Z (eq. 5 + shift)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(nq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
+    z = I.manhattan_scores(q, k, score_shift=shift)
+    assert bool((z >= 0).all())
+    z2 = I.manhattan_scores(q, k, score_shift=shift + 0.5)
+    assert bool((z2 <= z + 1e-6).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 10), st.integers(2, 6),
+       st.integers(0, 10**6))
+def test_inhibition_monotone_in_z(nq, nk, d, seed):
+    """Unsigned H is pointwise non-increasing in Z (inhibition semantics)."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(nk, d)).astype(np.float32))
+    z = jnp.asarray(np.abs(rng.normal(size=(nq, nk))).astype(np.float32))
+    h1 = I.inhibit_fused(v, z)
+    h2 = I.inhibit_fused(v, z + 0.3)
+    assert bool((h2 <= h1 + 1e-5).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 6), st.integers(0, 10**6))
+def test_normalized_output_bounded_by_values(nk, d, seed):
+    """With normalization, |H| ≤ max|V| (inhibition only attenuates)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 3, nk, d)).astype(np.float32))
+    qb, kb, vb = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    out = I.inhibitor_attention(qb, kb, vb, normalize=True, signed=True)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 10), st.integers(2, 5), st.integers(0, 10**6))
+def test_key_permutation_invariance(nk, d, seed):
+    """H is invariant to permuting (K, V) rows together (no positional
+    dependence in the mechanism itself — order comes only from masks)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 4, 2, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, nk, 2, d)).astype(np.float32))
+    perm = np.random.default_rng(seed + 1).permutation(nk)
+    o1 = I.inhibitor_attention(q, k, v)
+    o2 = I.inhibitor_attention(q, k[:, perm], v[:, perm])
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 8), st.integers(1, 64), st.integers(0, 10**6))
+def test_quant_roundtrip_error_bound(bits, n, seed):
+    """|x − dq(q(x))| ≤ scale/2 (symmetric max-abs quantization)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    cfg = QuantConfig(bits=bits)
+    s = compute_scale(x, cfg)
+    err = jnp.abs(dequantize(quantize(x, s, cfg), s) - x)
+    assert float(err.max()) <= float(s) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_compression_error_feedback(seed):
+    """With error feedback, the accumulated compressed sum tracks the true
+    sum (residual stays bounded)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    state = init_compression(g)
+    total_true = jnp.zeros(64)
+    total_comp = jnp.zeros(64)
+    for _ in range(10):
+        (q, s), state = compress_tree(g, state)
+        total_comp = total_comp + decompress_tree(q, s)["w"]
+        total_true = total_true + g["w"]
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert float(jnp.abs(total_comp - total_true).max()) <= scale + 1e-5

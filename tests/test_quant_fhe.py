@@ -3,7 +3,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.fhe import (circuit_seconds, describe, dotprod_attention_circuit,
                        encrypt, inhibitor_attention_circuit, select_params)
@@ -15,18 +14,7 @@ from repro.quant.int_attention import (int_inhibitor_attention,
 
 
 # ---- quantization ----
-
-@settings(max_examples=30, deadline=None)
-@given(st.integers(4, 8), st.integers(1, 64), st.integers(0, 10**6))
-def test_quant_roundtrip_error_bound(bits, n, seed):
-    """|x − dq(q(x))| ≤ scale/2 (symmetric max-abs quantization)."""
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
-    cfg = QuantConfig(bits=bits)
-    s = compute_scale(x, cfg)
-    err = jnp.abs(dequantize(quantize(x, s, cfg), s) - x)
-    assert float(err.max()) <= float(s) / 2 + 1e-6
-
+# (the hypothesis round-trip property test lives in test_property_based.py)
 
 def test_fake_quant_straight_through(rng):
     import jax

@@ -1,0 +1,131 @@
+"""Serving benchmark: paged vs contiguous KV-cache allocators.
+
+Drives the continuous-batching engine over the same synthetic ragged
+workload under both allocators and reports, per arm:
+
+  * decode-tick throughput (tokens/s over the serving loop)
+  * prefill compile count (bucketed single-row prefill: bounded by the
+    number of buckets, not the number of distinct prompt lengths)
+  * cache-memory high-water mark in bytes (pages actually held for the
+    paged arm; the full up-front reservation for the contiguous arm)
+
+and asserts greedy-output parity between the arms.  Results are printed
+as CSV rows (same shape as benchmarks.run) and written to a
+``BENCH_serve_*.json`` so CI records the serving perf trajectory.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
+            engine_kw):
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    eng = Engine(api, params, EngineConfig(allocator=allocator, **engine_kw))
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=new_tokens))
+    ticks = 0
+    done = []
+    while eng.active or eng.queue:
+        done.extend(eng.step())
+        ticks += 1
+        if ticks > 100_000:
+            raise RuntimeError("engine did not drain")
+    wall = time.perf_counter() - t0
+
+    import numpy as np
+
+    mcfg = api.cfg
+    a = mcfg.attention
+    itemsize = np.dtype(mcfg.cdtype).itemsize
+    row_bytes = 2 * a.num_kv_heads * a.head_dim * itemsize  # k + v
+    if allocator == "paged":
+        hw_rows = eng.alloc.high_water_pages * eng.cfg.page_size
+    else:
+        hw_rows = engine_kw["max_batch"] * engine_kw["max_len"]
+    tokens = sum(len(r.output) for r in done)
+    return {
+        "allocator": allocator,
+        "requests": len(done),
+        "tokens": tokens,
+        "decode_ticks": ticks,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(tokens / wall, 2),
+        "prefill_compiles": eng.prefill_compiles,
+        "cache_high_water_bytes": mcfg.num_layers * hw_rows * row_bytes,
+    }, {r.request_id: r.output for r in done}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model/workload for CI")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--json", default=None,
+                    help="output path (default BENCH_serve_<mode>.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.nn.module import unbox
+
+    if args.smoke:
+        cfg = get_config(args.arch).reduced(num_layers=2, d_model=32,
+                                            d_ff=64, vocab_size=128)
+        engine_kw = dict(max_batch=4, max_len=64, page_size=8,
+                         prefill_chunk=8)
+        n_req, new_tokens, max_plen = args.requests or 10, 8, 40
+    else:
+        cfg = get_config(args.arch).reduced()
+        engine_kw = dict(max_batch=8, max_len=256, page_size=16,
+                         prefill_chunk=32)
+        n_req, new_tokens, max_plen = args.requests or 32, 32, 160
+
+    api = get_model(cfg)
+    params = unbox(api.init(jax.random.PRNGKey(args.seed)))
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(1, max_plen, (n_req,))
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)).astype(np.int32)
+               for l in lens]
+
+    results = {}
+    outputs = {}
+    print("name,us_per_call,derived")
+    for allocator in ("contiguous", "paged"):
+        res, outs = run_arm(api, params, cfg, allocator=allocator,
+                            prompts=prompts, new_tokens=new_tokens,
+                            engine_kw=engine_kw)
+        results[allocator] = res
+        outputs[allocator] = outs
+        us_per_tok = 1e6 * res["wall_s"] / max(res["tokens"], 1)
+        print(f"serve_{allocator},{us_per_tok:.1f},"
+              f"tok_per_s={res['tok_per_s']};"
+              f"compiles={res['prefill_compiles']};"
+              f"hwm_bytes={res['cache_high_water_bytes']}", flush=True)
+
+    parity = outputs["paged"] == outputs["contiguous"]
+    results["parity"] = bool(parity)
+    results["distinct_prompt_lens"] = int(len(set(map(int, lens))))
+    path = args.json or f"BENCH_serve_{'smoke' if args.smoke else 'full'}.json"
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"serve_parity,0,{'OK' if parity else 'MISMATCH'} -> {path}",
+          flush=True)
+    return 0 if parity else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,13 @@
 
   PYTHONPATH=src python examples/serve_lm.py --requests 12
 
-Shows the slot-pool engine admitting more requests than slots, recycling
-slots as requests finish at different times, and reports throughput.
-Pass --ckpt-dir to serve weights trained by train_inhibitor_lm.py.
+Shows the engine admitting more requests than slots, recycling slots as
+requests finish at different times, and reports throughput plus the
+paged KV-cache accounting (page-pool high-water mark, bucketed prefill
+compile count).  Try ``--allocator contiguous`` to compare against the
+dense per-slot baseline, or ``--sample --temperature 0.8`` for sampled
+decoding.  Pass --ckpt-dir to serve weights trained by
+train_inhibitor_lm.py.
 """
 
 from repro.launch import serve as serve_cli

@@ -4,9 +4,11 @@ behind the pluggable mechanism registry + backend planner."""
 from repro.core.attention import (  # noqa: F401
     AttentionConfig,
     KVCache,
+    PagedKVCache,
     apply_attention,
     init_attention,
     init_kv_cache,
+    init_paged_kv_cache,
 )
 from repro.core.mechanism import (  # noqa: F401
     BACKENDS,
@@ -15,6 +17,7 @@ from repro.core.mechanism import (  # noqa: F401
     ExecutionPlan,
     Mechanism,
     MechanismParams,
+    PagedLayout,
     Structural,
     available_mechanisms,
     backend_eligible,

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.mechanism import (
     DEFAULT_BLOCKED_THRESHOLD, DEFAULT_CHUNKED_THRESHOLD,
-    MASK_FREE_BACKENDS, AttnShapes, Structural, execute_plan, get_mechanism,
-    plan_attention)
+    MASK_FREE_BACKENDS, AttnShapes, PagedLayout, Structural, execute_plan,
+    get_mechanism, plan_attention)
 from repro.nn.linear import apply_dense, init_dense
 from repro.nn.module import KeyGen
 
@@ -73,6 +73,37 @@ def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), length)
 
 
+class PagedKVCache(NamedTuple):
+    """Paged decode cache: KV rows live in a shared pool of fixed-size
+    pages instead of per-row ``max_len`` strides (serve.kvcache owns the
+    host-side page accounting; this is the device half).
+
+    New tokens are *scattered* to ``block_tables[row, pos // page_size]``
+    at offset ``pos % page_size``; attention *gathers* each row's pages
+    back into a logically contiguous view (the ``paged`` backend in
+    core.mechanism).  Physical page 0 is the trash page — unmapped table
+    entries point there, so inactive batch rows in a static-shape decode
+    step scatter harmlessly.
+    """
+    k: jax.Array            # (num_pages, page_size, h_kv, d) pool
+    v: jax.Array            # (num_pages, page_size, h_kv, d) pool
+    block_tables: jax.Array  # (b, pages_per_slot) int32
+    length: jax.Array       # (b,) int32 per-slot cursors
+
+
+def init_paged_kv_cache(batch: int, max_len: int, num_kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16, *,
+                        page_size: int = 16,
+                        num_pages: Optional[int] = None) -> PagedKVCache:
+    pages_per_slot = -(-max_len // page_size)
+    if num_pages is None:
+        num_pages = batch * pages_per_slot + 1      # +1: trash page 0
+    shape = (num_pages, page_size, num_kv_heads, head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        jnp.zeros((batch, pages_per_slot), jnp.int32),
+                        jnp.zeros((batch,), jnp.int32))
+
+
 def init_attention(key, cfg: AttentionConfig, embed_dim: int, *,
                    dtype=jnp.float32) -> dict:
     kg = KeyGen(key)
@@ -107,7 +138,9 @@ def _build_mask(cfg: AttentionConfig, n_q: int, n_k: int, q_offset,
     if cfg.causal:
         masks.append(kj <= qi)
     if cfg.sliding_window is not None:
-        masks.append(kj > qi - cfg.sliding_window)
+        # a sliding window implies causality — one semantics across the
+        # fused/blocked/pallas paths (see tests/test_window_semantics.py)
+        masks.append((kj > qi - cfg.sliding_window) & (kj <= qi))
     if kv_valid_len is not None:
         kv = jnp.asarray(kv_valid_len)
         if kv.ndim == 0:
@@ -173,7 +206,24 @@ def apply_attention(
 
     new_cache = None
     kv_valid_len = None
-    if cache is not None:
+    paged_layout = None
+    if isinstance(cache, PagedKVCache):
+        # scatter new k/v into the block-table pages at the cursor(s);
+        # the 'paged' backend gathers the pages back per row
+        ps = cache.k.shape[1]
+        pos = cache.length[:, None] + jnp.arange(n_q)[None, :]     # (b, n_q)
+        rows = jnp.arange(b)[:, None]
+        pages = cache.block_tables[rows, pos // ps]                # (b, n_q)
+        offs = pos % ps
+        k_pool = cache.k.at[pages, offs].set(k.astype(cache.k.dtype))
+        v_pool = cache.v.at[pages, offs].set(v.astype(cache.v.dtype))
+        new_cache = PagedKVCache(k_pool, v_pool, cache.block_tables,
+                                 cache.length + n_q)
+        k, v = k_pool.astype(cdt), v_pool.astype(cdt)
+        kv_valid_len = cache.length + n_q
+        n_k = cache.block_tables.shape[1] * ps      # gathered logical view
+        paged_layout = PagedLayout(cache.block_tables, ps)
+    elif cache is not None:
         # append new k/v at the cache cursor(s), attend over the buffer
         if cache.length.ndim == 1:              # ragged: per-slot cursors
             upd = jax.vmap(
@@ -190,7 +240,8 @@ def apply_attention(
         k, v = k_buf.astype(cdt), v_buf.astype(cdt)
         kv_valid_len = cache.length + n_q
 
-    n_k = k.shape[1]
+    if paged_layout is None:
+        n_k = k.shape[1]
     q_offset = cache.length if cache is not None else 0
     scalar_cursor = jnp.asarray(q_offset).ndim == 0
 
@@ -200,7 +251,8 @@ def apply_attention(
         batch=b, n_q=n_q, n_k=n_k, num_heads=cfg.num_heads,
         num_kv_heads=k.shape[2], head_dim=cfg.head_dim, dtype=q.dtype,
         has_explicit_mask=attn_mask is not None, is_cross=x_kv is not None,
-        has_cache=cache is not None, scalar_cursor=bool(scalar_cursor))
+        has_cache=cache is not None, scalar_cursor=bool(scalar_cursor),
+        paged=paged_layout is not None)
     plan = plan_attention(cfg, shapes)
     mech = get_mechanism(plan.mechanism)
     mech_params = mech.make_params(
@@ -225,7 +277,8 @@ def apply_attention(
                                                                  None]
             else:
                 mask = (jnp.arange(n_k)[None, :] < kvl)[None, None, None]
-        out = execute_plan(plan, q, k, v, mask=mask, params=mech_params)
+        out = execute_plan(plan, q, k, v, mask=mask, params=mech_params,
+                           paged=paged_layout)
 
     y = apply_dense(params["wo"], out, 2, cdt)        # out: (b, n_q, h, d)
     return y, new_cache

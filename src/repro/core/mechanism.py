@@ -22,6 +22,9 @@ Backends (``BACKENDS``) are execution strategies for one mechanism:
   ``blocked``  two-level chunk scan with structural (causal/window/valid-
                length) masks computed from indices — no mask array in HBM
   ``pallas``   the Pallas TPU kernel (interpret mode on CPU hosts)
+  ``paged``    block-table gather over a paged KV pool (serving decode /
+               single-row prefill; k/v arrive as page pools plus a
+               :class:`PagedLayout`)
   ``int``      integer-lane arithmetic (paper's quantized scaling arm)
   ``fhe_sim``  the TFHE circuit simulator (numpy, per-head; forced only)
 
@@ -52,7 +55,8 @@ import jax.numpy as jnp
 log = logging.getLogger("repro.plan")
 
 BACKENDS: Tuple[str, ...] = (
-    "naive", "fused", "chunked", "blocked", "pallas", "int", "fhe_sim")
+    "naive", "fused", "chunked", "blocked", "pallas", "paged", "int",
+    "fhe_sim")
 
 #: Backends that consume a :class:`Structural` description and must never
 #: be handed a materialized (n_q, n_k) mask array.
@@ -87,6 +91,7 @@ class AttnShapes(NamedTuple):
     has_cache: bool = False
     scalar_cursor: bool = True
     platform: Optional[str] = None
+    paged: bool = False          # KV lives in a paged pool (block tables)
 
     @property
     def resolved_platform(self) -> str:
@@ -106,6 +111,17 @@ class Structural:
     window: Optional[int] = None
     q_offset: Any = 0
     kv_valid_len: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Block-table layout for the ``paged`` backend.  ``k``/``v`` arrive as
+    page pools (num_pages, page_size, h_kv, d); ``block_tables``
+    (b, pages_per_slot) int32 maps each batch row's logical page index to a
+    physical page.  Validity is expressed through the ordinary mask path
+    (the gathered view is logically contiguous per row)."""
+    block_tables: Any
+    page_size: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +231,14 @@ def backend_eligible(backend: str, cfg, shapes: AttnShapes,
     (ok, why_not) — the reason string feeds plan traces and errors."""
     if backend not in mech.backends:
         return False, f"not registered for mechanism {mech.name!r}"
+    paged = getattr(shapes, "paged", False)
+    if paged and backend != "paged":
+        return False, "KV lives in a paged pool (block-table gather required)"
+    if backend == "paged":
+        if not paged:
+            return False, "no paged KV pool at this call site"
+        if shapes.has_explicit_mask or shapes.is_cross:
+            return False, "paged pools serve cached causal self-attention"
     is_int = jnp.issubdtype(jnp.dtype(shapes.dtype), jnp.integer)
     if backend in ("int", "fhe_sim") and not is_int:
         return False, "requires integer-lane inputs"
@@ -278,12 +302,14 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
          falls back to automatic selection when the kernel cannot run
          (explicit mask / decode cache), since the legacy bool could not
          express eligibility.
-      3. ``int`` when the inputs are integer lanes.
-      4. ``pallas`` on TPU at large structural-mask shapes.
-      5. ``blocked`` at large structural-mask shapes
+      3. ``paged`` when the KV cache lives in a paged pool (serving) —
+         the only backend that understands block tables.
+      4. ``int`` when the inputs are integer lanes.
+      5. ``pallas`` on TPU at large structural-mask shapes.
+      6. ``blocked`` at large structural-mask shapes
          (``n_q·n_k ≥ cfg.blocked_threshold``).
-      6. ``chunked`` when ``n_k > cfg.chunked_threshold``.
-      7. ``fused`` (dense default), else ``naive``.
+      7. ``chunked`` when ``n_k > cfg.chunked_threshold``.
+      8. ``fused`` (dense default), else ``naive``.
     """
     global _use_kernel_warned
     name = resolve_mechanism_name(cfg)
@@ -336,7 +362,11 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
     blocked_at = getattr(cfg, "blocked_threshold", DEFAULT_BLOCKED_THRESHOLD)
     chunked_at = getattr(cfg, "chunked_threshold", DEFAULT_CHUNKED_THRESHOLD)
 
-    if eligible("int"):
+    if eligible("paged"):
+        plan = ExecutionPlan(
+            name, "paged",
+            shim_note + "paged KV pool (block-table gather/scatter)")
+    elif eligible("int"):
         plan = ExecutionPlan(name, "int", shim_note + "integer-lane inputs")
     elif (shapes.resolved_platform == "tpu" and total >= blocked_at
             and eligible("pallas")):
@@ -383,12 +413,14 @@ def choose_plan(mechanism: str, candidates) -> ExecutionPlan:
 def execute_plan(plan: ExecutionPlan, q, k, v, *,
                  params: MechanismParams,
                  mask=None,
-                 structural: Optional[Structural] = None) -> jax.Array:
+                 structural: Optional[Structural] = None,
+                 paged: Optional[PagedLayout] = None) -> jax.Array:
     """Run ``plan`` on (q, k, v): q (b, n_q, h, d); k, v (b, n_k, h_kv, d).
 
     ``mask`` is only legal for mask-consuming backends; mask-free backends
     take ``structural`` instead.  Mixing the two is a dispatch bug and
-    fails loudly.
+    fails loudly.  For the ``paged`` backend, k/v are page pools
+    (num_pages, page_size, h_kv, d) and ``paged`` carries the block tables.
     """
     mech = get_mechanism(plan.mechanism)
     fn = mech.backends.get(plan.backend)
@@ -398,6 +430,14 @@ def execute_plan(plan: ExecutionPlan, q, k, v, *,
     if plan.backend in MASK_FREE_BACKENDS and mask is not None:
         raise ValueError(f"backend {plan.backend!r} is mask-free; got an "
                          f"explicit mask array")
+    if (paged is not None) != (plan.backend == "paged"):
+        raise ValueError(
+            f"backend {plan.backend!r} and paged layout "
+            f"{'given' if paged is not None else 'missing'} — paged pools "
+            f"are only consumable by the 'paged' backend")
+    if plan.backend == "paged":
+        return fn(q, k, v, mask=mask, params=params, structural=structural,
+                  paged=paged)
     return fn(q, k, v, mask=mask, params=params, structural=structural)
 
 
@@ -508,6 +548,26 @@ def _inhibitor_pallas(q, k, v, *, mask=None, params, structural=None):
                                 params.normalize, s.causal, s.window)
 
 
+def _gather_pages(k_pool, v_pool, paged: PagedLayout):
+    """Gather per-row contiguous KV views out of the page pools.
+
+    k_pool/v_pool: (num_pages, page_size, h_kv, d); block tables (b, P).
+    Returns (b, P*page_size, h_kv, d) views — one gather per call, fused by
+    XLA into the downstream reads.  Unmapped table entries point at the
+    reserved trash page 0; those rows sit beyond the valid-length mask.
+    """
+    kt = k_pool[paged.block_tables]            # (b, P, ps, h_kv, d)
+    vt = v_pool[paged.block_tables]
+    b, npg, ps, hk, d = kt.shape
+    return (kt.reshape(b, npg * ps, hk, d), vt.reshape(b, npg * ps, hk, d))
+
+
+def _inhibitor_paged(q, k, v, *, mask=None, params, structural=None,
+                     paged=None):
+    kc, vc = _gather_pages(k, v, paged)
+    return _inhibitor_fused(q, kc, vc, mask=mask, params=params)
+
+
 def _inhibitor_int(q, k, v, *, mask=None, params, structural=None):
     from repro.quant.int_attention import int_inhibitor_attention
 
@@ -554,6 +614,12 @@ def _dotprod_pallas(q, k, v, *, mask=None, params, structural=None):
     _require_kernel_expressible(s)
     return kops.flash_attention(q, k, v, params.score_scale, s.causal,
                                 s.window)
+
+
+def _dotprod_paged(q, k, v, *, mask=None, params, structural=None,
+                   paged=None):
+    kc, vc = _gather_pages(k, v, paged)
+    return _dotprod_fused(q, kc, vc, mask=mask, params=params)
 
 
 def _dotprod_int(q, k, v, *, mask=None, params, structural=None):
@@ -615,6 +681,7 @@ def _register_builtins() -> None:
             "naive": _dotprod_naive,
             "fused": _dotprod_fused,
             "pallas": _dotprod_pallas,
+            "paged": _dotprod_paged,
             "int": _dotprod_int,
             "fhe_sim": _fhe_backend(dotprod_attention_circuit,
                                     scale_shift=2),
@@ -629,6 +696,7 @@ def _register_builtins() -> None:
         "chunked": _inhibitor_chunked,
         "blocked": _inhibitor_blocked,
         "pallas": _inhibitor_pallas,
+        "paged": _inhibitor_paged,
         "int": _inhibitor_int,
         # the paper's TFHE circuit realizes the unsigned (eq. 5 + 6) form
         # on integer lanes — registered for both variants as the

@@ -55,7 +55,8 @@ def _flash_attention_kernel(
     if causal:
         m_blk = m_blk & (k_pos <= q_pos)
     if window is not None:
-        m_blk = m_blk & (k_pos > q_pos - window)
+        # a sliding window implies causality (single semantics everywhere)
+        m_blk = m_blk & (k_pos > q_pos - window) & (k_pos <= q_pos)
 
     def do_block():
         s = jnp.einsum("gqd,kd->gqk", q, ks) * (1.0 / score_scale)
@@ -73,7 +74,7 @@ def _flash_attention_kernel(
         return acc, m_new, l_new
 
     live = True
-    if causal:
+    if causal or window is not None:
         live = (ik * block_k) <= (iq * block_q + block_q - 1)
     if isinstance(live, bool):
         acc, m_new, l_new = do_block()

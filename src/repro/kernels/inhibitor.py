@@ -93,7 +93,9 @@ def _flash_inhibitor_kernel(
         if causal:
             m = m & (k_pos <= q_pos)
         if window is not None:
-            m = m & (k_pos > q_pos - window)
+            # a sliding window implies causality (matches _build_mask,
+            # blocked._chunk_mask and core.inhibitor.sliding_window_mask)
+            m = m & (k_pos > q_pos - window) & (k_pos <= q_pos)
         mf = m.astype(jnp.float32)                          # (bq, sub_k)
 
         # ---- inhibition (masked fused forms, eq. 9 / eq. 10) ----
@@ -120,8 +122,9 @@ def _flash_inhibitor_kernel(
     cnt = cnt_ref[..., 0]
     n_sub = block_k // sub_k
 
-    if causal:
-        # skip fully-masked blocks (whole kv block strictly above diagonal)
+    if causal or window is not None:
+        # skip fully-masked blocks (whole kv block strictly above diagonal;
+        # a window implies causality, so the same skip applies)
         first_q = iq * block_q
         first_k = ik * block_k
         live = first_k <= first_q + block_q - 1

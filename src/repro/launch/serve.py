@@ -4,8 +4,10 @@ model.
     python -m repro.launch.serve --arch smollm-135m --requests 16
 
 Loads params from --ckpt-dir if given (falls back to random init), then
-drives the slot-pool engine with synthetic prompt traffic and reports
-throughput/latency percentiles.
+drives the engine with synthetic ragged prompt traffic and reports
+throughput plus the paged-cache accounting (prefill compile count,
+page-pool high-water mark).  ``--allocator contiguous`` selects the dense
+per-slot baseline; the default is the paged block-table cache.
 """
 
 from __future__ import annotations
@@ -30,6 +32,15 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--allocator", choices=("paged", "contiguous"),
+                    default="paged")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged pool size (default: full capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy decode")
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -51,28 +62,36 @@ def main(argv=None):
         from repro.checkpoint import restore
         (params, _), step = restore(args.ckpt_dir, (params, None))[0], None
 
-    # per-slot cursors for ragged continuous batching; every family's
-    # init_states accepts per_slot (recurrent families ignore it — their
-    # state is inherently per-row)
-    base_init = api.init_states
-    api = api._replace(
-        init_states=lambda b, s, **kw: base_init(b, s,
-                                                 **{"per_slot": True, **kw}))
+    # the engine owns state layout: per-slot cursors always (ragged
+    # continuous batching), paged block tables when the family supports it
     eng = Engine(api, params,
                  EngineConfig(max_batch=args.max_batch,
-                              max_len=args.max_len))
+                              max_len=args.max_len,
+                              allocator=args.allocator,
+                              page_size=args.page_size,
+                              num_pages=args.num_pages,
+                              prefill_chunk=args.prefill_chunk,
+                              greedy=not args.sample,
+                              temperature=args.temperature),
+                 seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              (args.prompt_len,)).astype(np.int32)
+        plen = max(1, min(args.prompt_len, args.max_len - 1))
+        prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
         eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens))
     done = eng.run_to_completion()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
     log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
              len(done), total_tokens, dt, total_tokens / dt)
+    log.info("prefill compiles: %d (buckets: %s)", eng.prefill_compiles,
+             sorted(eng._prefill_buckets))
+    if eng.paged:
+        log.info("page pool: high-water %d / %d pages (page_size=%d)",
+                 eng.alloc.high_water_pages, eng.alloc.num_pages - 1,
+                 eng.alloc.page_size)
     for r in done[:3]:
         log.info("req %d -> %s...", r.request_id, r.output[:8])
     return 0

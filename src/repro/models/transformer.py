@@ -30,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import (
-    AttentionConfig, KVCache, apply_attention, init_attention, init_kv_cache)
+    AttentionConfig, KVCache, PagedKVCache, apply_attention, init_attention,
+    init_kv_cache, init_paged_kv_cache)
 from repro.distributed.sharding import constrain
 from repro.nn import embedding as emb
 from repro.nn import mlp as mlpnn
@@ -269,17 +270,30 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 def init_states(cfg: ModelConfig, batch: int, max_len: int, *,
-                per_slot: bool = False) -> LayerState:
+                per_slot: bool = False, paged: bool = False,
+                page_size: int = 16,
+                num_pages: Optional[int] = None) -> LayerState:
     """Stacked (num_layers-leading) decode state for the LM.
 
     ``per_slot``: per-batch-row cache cursors (ragged continuous batching).
+    ``paged``: back the KV cache with a shared page pool + block tables
+    (serve.kvcache.PagedAllocator owns the host-side accounting); cursors
+    are always per-slot in that layout.
     """
     a = cfg.attention
-    kv = init_kv_cache(batch, max_len, a.num_kv_heads, a.head_dim,
-                       dtype=cfg.cdtype, per_slot=per_slot)
-    kv = jax.tree.map(lambda t: jnp.broadcast_to(
-        t[None], (cfg.num_layers,) + t.shape), kv)
-    kv = KVCache(kv.k, kv.v, kv.length)
+    if paged:
+        kv = init_paged_kv_cache(batch, max_len, a.num_kv_heads, a.head_dim,
+                                 dtype=cfg.cdtype, page_size=page_size,
+                                 num_pages=num_pages)
+        kv = jax.tree.map(lambda t: jnp.broadcast_to(
+            t[None], (cfg.num_layers,) + t.shape), kv)
+        kv = PagedKVCache(kv.k, kv.v, kv.block_tables, kv.length)
+    else:
+        kv = init_kv_cache(batch, max_len, a.num_kv_heads, a.head_dim,
+                           dtype=cfg.cdtype, per_slot=per_slot)
+        kv = jax.tree.map(lambda t: jnp.broadcast_to(
+            t[None], (cfg.num_layers,) + t.shape), kv)
+        kv = KVCache(kv.k, kv.v, kv.length)
     ssm = conv = None
     if cfg.family == "hybrid":
         inner = cfg.ssm.inner_dim or 2 * cfg.d_model

@@ -4,15 +4,28 @@ Design (vLLM-style scheduling on a slot pool, TPU-friendly static shapes):
 
   * A fixed pool of ``max_batch`` slots backs one layer-stacked KV cache
     with **per-slot cursors** (ragged decode is exact — each row attends
-    over its own valid prefix only).
+    over its own valid prefix only).  The cache is **paged** by default:
+    KV rows live in a shared page pool behind per-slot block tables
+    (`serve.kvcache.PagedAllocator`), so memory tracks actual tokens held
+    instead of ``max_batch * max_len`` worst case.  ``allocator=
+    "contiguous"`` keeps the dense per-slot buffers as the baseline arm.
   * Incoming requests queue; whenever a slot frees, the next request is
-    admitted and its prompt is prefilled *into that slot only* (the other
-    slots' rows are untouched because prefill uses per-slot masking).
+    admitted and its prompt is prefilled as a **single row** (batch 1 —
+    no ``max_batch``× broadcast) in fixed-size chunks.  The final partial
+    chunk is padded up to a power-of-two **bucket**, bounding jit
+    retraces to the number of buckets instead of the number of distinct
+    prompt lengths; near ``max_len`` the bucketed chunk is left-shifted
+    over already-written positions (idempotent rewrites of identical KV
+    rows) so the write window never overruns the buffer.
   * Every engine tick runs one decode step for all active slots together
     (inactive rows compute garbage that is ignored — static shapes, no
-    recompilation).
-  * A request finishes on EOS or at max_new_tokens; its slot is recycled
-    immediately (continuous batching: no global barrier at batch end).
+    recompilation; under paging their scatter lands on the reserved
+    trash page).
+  * A request finishes on EOS or at max_new_tokens — including an EOS
+    produced by prefill itself, which finishes the request at admission,
+    same tick.  Slots whose cache hits ``max_len`` are hard-stopped
+    (``Request.truncated``) instead of silently clamping writes; prompts
+    with ``prompt_len >= max_len`` are rejected at submit.
 
 The same engine drives the `serve` launcher and the serving example; on a
 mesh the step functions are jit'd with sharded params (TP) and replicated
@@ -24,16 +37,24 @@ from __future__ import annotations
 import dataclasses
 import logging
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.attention import KVCache, PagedKVCache
 from repro.models.registry import ModelApi
-from repro.serve.kvcache import SlotAllocator
+from repro.serve.kvcache import PagedAllocator, SlotAllocator
 
 log = logging.getLogger("repro.serve")
+
+# families whose decode state is entirely cursor-guarded: KV rows beyond
+# the cursor are invalid by construction, so padded prefill buckets are
+# safe.  Recurrent carries (ssm/hybrid/rwkv) would absorb pad tokens, so
+# those families prefill in exact-length chunks instead.
+_KV_FAMILIES = ("dense", "moe", "vlm")
+_PAGEABLE_FAMILIES = ("dense", "moe", "hybrid", "vlm")
 
 
 @dataclasses.dataclass
@@ -44,120 +65,372 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine:
     output: Optional[list] = None
+    truncated: bool = False        # hard-stopped at max_len / page pool dry
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8
     max_len: int = 512
-    greedy: bool = True
+    greedy: bool = True            # False: temperature sampling
+    temperature: float = 1.0
+    allocator: str = "paged"       # "paged" | "contiguous"
+    page_size: int = 16
+    num_pages: Optional[int] = None   # paged pool size (None: full capacity)
+    prefill_chunk: int = 32        # max tokens per prefill step (pow2)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
 
 
 class Engine:
-    def __init__(self, api: ModelApi, params, cfg: EngineConfig):
+    def __init__(self, api: ModelApi, params, cfg: EngineConfig, *,
+                 seed: int = 0):
+        if cfg.allocator not in ("paged", "contiguous"):
+            raise ValueError(f"unknown allocator {cfg.allocator!r}")
         self.api = api
         self.params = params
-        self.cfg = cfg
-        self.alloc = SlotAllocator(cfg.max_batch)
+        self.cfg = dataclasses.replace(
+            cfg, prefill_chunk=min(_next_pow2(cfg.prefill_chunk),
+                                   _next_pow2(cfg.max_len) >> 1 or 1))
+        fam = api.cfg.family
+        self.paged = cfg.allocator == "paged" and fam in _PAGEABLE_FAMILIES
+        if cfg.allocator == "paged" and not self.paged:
+            log.info("family %r has no pageable KV cache; using contiguous "
+                     "slots", fam)
+        if self.paged:
+            # downgrade (don't crash) when the plan could never select the
+            # paged backend: mechanism without a 'paged' entry, a config
+            # that forces another backend, integer compute lanes, ...
+            ok, why = self._paged_eligible()
+            if not ok:
+                log.info("paged cache unavailable (%s); using contiguous "
+                         "slots", why)
+                self.paged = False
+        self._bucketed = fam in _KV_FAMILIES
+        if self.paged:
+            self.alloc = PagedAllocator(cfg.max_batch, cfg.max_len,
+                                        cfg.page_size, cfg.num_pages)
+            self.states = api.init_states(
+                cfg.max_batch, cfg.max_len, per_slot=True, paged=True,
+                page_size=cfg.page_size, num_pages=self.alloc.num_pages)
+        else:
+            self.alloc = SlotAllocator(cfg.max_batch)
+            self.states = api.init_states(cfg.max_batch, cfg.max_len,
+                                          per_slot=True)
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}     # slot -> request
-        self.states = api.init_states(cfg.max_batch, cfg.max_len)
+        self._key = jax.random.PRNGKey(seed)
         self.decode_plan = self._plan_decode()
         if self.decode_plan is not None:
-            log.info("engine decode %s [max_batch=%d max_len=%d]",
+            log.info("engine decode %s [max_batch=%d max_len=%d alloc=%s]",
                      self.decode_plan.trace_line(), cfg.max_batch,
-                     cfg.max_len)
+                     cfg.max_len, "paged" if self.paged else "contiguous")
         self._jit_decode = jax.jit(self._decode_step)
-        self._jit_prefill_one = jax.jit(self._prefill_slot,
-                                        static_argnames=("slot",))
+        self._jit_prefill_chunk = jax.jit(self._prefill_chunk)
+        self._prefill_buckets: set = set()   # chunk widths handed to jit
+
+    # ---- planning / introspection ----
+    def _paged_eligible(self):
+        """(ok, why_not) for backing this model's decode with the paged
+        pool — probed up front so ineligibility degrades to contiguous
+        slots instead of raising out of plan_attention."""
+        from repro.core.mechanism import (AttnShapes, backend_eligible,
+                                          get_mechanism,
+                                          resolve_mechanism_name)
+
+        acfg = self.api.cfg.attention
+        forced = getattr(acfg, "backend", None)
+        if forced not in (None, "paged"):
+            return False, f"config forces backend={forced!r}"
+        shapes = AttnShapes(
+            batch=self.cfg.max_batch, n_q=1, n_k=self.cfg.max_len,
+            num_heads=acfg.num_heads, num_kv_heads=acfg.num_kv_heads,
+            head_dim=acfg.head_dim, dtype=self.api.cfg.cdtype,
+            has_cache=True, scalar_cursor=False, paged=True)
+        return backend_eligible("paged", acfg, shapes,
+                                get_mechanism(resolve_mechanism_name(acfg)))
 
     def _plan_decode(self):
         """Inspectable attention plan for the steady-state decode tick
-        (per-slot ragged cursors, full-pool KV buffer).  None for
-        attention-free families (rwkv)."""
+        (per-slot ragged cursors; paged pool or full-slot KV buffer).
+        None for attention-free families (rwkv)."""
         from repro.core.mechanism import AttnShapes, plan_attention
 
         mcfg = self.api.cfg
         if mcfg.family == "ssm":
             return None
         acfg = mcfg.attention
+        if self.paged:
+            n_k = self.alloc.pages_per_slot * self.cfg.page_size
+        else:
+            n_k = self.cfg.max_len
         shapes = AttnShapes(
-            batch=self.cfg.max_batch, n_q=1, n_k=self.cfg.max_len,
+            batch=self.cfg.max_batch, n_q=1, n_k=n_k,
             num_heads=acfg.num_heads, num_kv_heads=acfg.num_kv_heads,
             head_dim=acfg.head_dim, dtype=mcfg.cdtype, has_cache=True,
-            scalar_cursor=False)
+            scalar_cursor=False, paged=self.paged)
         return plan_attention(acfg, shapes)
 
+    @property
+    def prefill_compiles(self) -> int:
+        """Number of distinct prefill traces (== compiles).  Bounded by
+        the bucket count for cursor-guarded families, not by the number
+        of distinct prompt lengths."""
+        try:
+            n = self._jit_prefill_chunk._cache_size()
+            if n:
+                return n
+        except Exception:  # noqa: BLE001 — private jit API; fall back
+            pass
+        return len(self._prefill_buckets)
+
     # ---- jitted kernels ----
-    def _decode_step(self, params, tokens, states):
+    def _select(self, logits, key):
+        """(n, V) logits -> (n,) int32 next tokens (greedy or sampled)."""
+        if self.cfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = max(self.cfg.temperature, 1e-6)
+        return jax.random.categorical(key, logits / t, axis=-1).astype(
+            jnp.int32)
+
+    def _decode_step(self, params, tokens, states, key):
         logits, new_states = self.api.step(params, tokens, states, None)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        nxt = self._select(logits[:, -1], key)
         return nxt, new_states
 
-    def _prefill_slot(self, params, tokens, states, *, slot: int):
-        """Prefill one slot's row: the other rows' caches must not change.
+    def _prefill_chunk(self, params, tokens, states, last_idx, key):
+        """One single-row prefill chunk: tokens (1, cb) into batch-1 state
+        view.  ``last_idx`` (traced) points at the final *real* token —
+        bucket padding sits after it and is causally invisible to it."""
+        logits, new_states = self.api.step(params, tokens, states, None)
+        lg = jax.lax.dynamic_index_in_dim(logits[0], last_idx, axis=0,
+                                          keepdims=False)
+        nxt = self._select(lg[None], key)[0]
+        return nxt, new_states
 
-        We run the step over the full (static-shape) batch with the prompt
-        broadcast, then splice the updated row into the previous states.
-        Per-slot cursors make the attention of other rows irrelevant."""
-        b = self.cfg.max_batch
-        toks = jnp.broadcast_to(tokens[None], (b,) + tokens.shape)
-        logits, new_states = self.api.step(params, toks, states, None)
+    # ---- batch-1 state views (single-row prefill) ----
+    def _slot_view(self, slot: int):
+        st = self.states
+        from repro.models.transformer import LayerState
 
-        # splice the target slot's updated rows into the *argument* states
-        # (never a captured self.states — inside jit that would freeze a
-        # stale snapshot as a constant and clobber other slots on recycle)
-        def splice(new, old):
-            if new is None or old is None:
-                return old
-            # leaf layouts: (L, b, ...) for buffers, (L, b) or (L,) lengths
-            if new.ndim >= 2 and new.shape[1] == b:
-                return old.at[:, slot].set(new[:, slot])
-            return old  # shared scalars (not used with per-slot cursors)
+        if isinstance(st, LayerState):
+            kv = st.kv
+            if isinstance(kv, PagedKVCache):
+                # pools are shared across slots — only table/cursor narrow
+                kv_v = PagedKVCache(kv.k, kv.v,
+                                    kv.block_tables[:, slot:slot + 1],
+                                    kv.length[:, slot:slot + 1])
+            else:
+                kv_v = KVCache(kv.k[:, slot:slot + 1], kv.v[:, slot:slot + 1],
+                               kv.length[:, slot:slot + 1])
+            ssm = st.ssm[:, slot:slot + 1] if st.ssm is not None else None
+            conv = st.conv[:, slot:slot + 1] if st.conv is not None else None
+            return LayerState(kv=kv_v, ssm=ssm, conv=conv)
+        return jax.tree.map(lambda x: x[:, slot:slot + 1], st)
 
-        spliced = jax.tree.map(splice, new_states, states,
-                               is_leaf=lambda x: x is None)
-        nxt = jnp.argmax(logits[slot, -1], axis=-1).astype(jnp.int32)
-        return nxt, spliced
+    def _merge_view(self, slot: int, view):
+        st = self.states
+        from repro.models.transformer import LayerState
+
+        if isinstance(st, LayerState):
+            kv, kvv = st.kv, view.kv
+            if isinstance(kv, PagedKVCache):
+                # take the updated pools wholesale (writes landed in this
+                # slot's pages only); splice table/cursor rows back
+                kv_n = PagedKVCache(
+                    kvv.k, kvv.v,
+                    kv.block_tables.at[:, slot].set(kvv.block_tables[:, 0]),
+                    kv.length.at[:, slot].set(kvv.length[:, 0]))
+            else:
+                kv_n = KVCache(kv.k.at[:, slot].set(kvv.k[:, 0]),
+                               kv.v.at[:, slot].set(kvv.v[:, 0]),
+                               kv.length.at[:, slot].set(kvv.length[:, 0]))
+            ssm = (st.ssm.at[:, slot].set(view.ssm[:, 0])
+                   if st.ssm is not None else None)
+            conv = (st.conv.at[:, slot].set(view.conv[:, 0])
+                    if st.conv is not None else None)
+            self.states = LayerState(kv=kv_n, ssm=ssm, conv=conv)
+        else:
+            self.states = jax.tree.map(
+                lambda x, vv: x.at[:, slot].set(vv[:, 0]), st, view)
+
+    @staticmethod
+    def _set_view_cursor(view, value: int):
+        """Pin the batch-1 view's KV cursor (bucketed chunks advance it by
+        the padded width; the true position is host-known)."""
+        kv = view.kv
+        return view._replace(kv=kv._replace(
+            length=jnp.full_like(kv.length, value)))
+
+    # ---- prefill scheduling ----
+    def _prefill_schedule(self, prompt_len: int) -> List[Tuple[int, int]]:
+        """(start, width) chunks covering [0, prompt_len).  Full chunks are
+        exact; for cursor-guarded families the final partial chunk is
+        padded to a power-of-two bucket and, near max_len, left-shifted
+        over already-written positions (rewrites are idempotent)."""
+        chunk = self.cfg.prefill_chunk
+        out: List[Tuple[int, int]] = []
+        pos = 0
+        while pos < prompt_len:
+            take = min(chunk, prompt_len - pos)
+            if self._bucketed:
+                cb = _next_pow2(take)
+                start = max(0, min(pos, self.cfg.max_len - cb))
+            else:
+                cb, start = take, pos
+            out.append((start, cb))
+            pos += take
+        return out
+
+    def _prefill_extent(self, prompt_len: int) -> int:
+        return max((s + c for s, c in self._prefill_schedule(prompt_len)),
+                   default=0)
+
+    def _ensure_pages(self, slot: int, length: int) -> bool:
+        """Grow the slot's block table to cover ``length`` positions and
+        mirror the table row into device state.  False: pool exhausted."""
+        grew = self.alloc.ensure(slot, length)
+        if grew is None:
+            return False
+        if grew:
+            row = jnp.asarray(self.alloc.block_tables[slot])
+            kv = self.states.kv
+            self.states = self.states._replace(kv=kv._replace(
+                block_tables=kv.block_tables.at[:, slot].set(row)))
+        return True
+
+    def _prefill(self, slot: int, req: Request, schedule) -> int:
+        """Single-row chunked prefill of ``req`` into ``slot``.  Returns
+        the first generated token."""
+        prompt = np.asarray(req.prompt, np.int32)
+        L = len(prompt)
+        # admission pre-reserved pages for the full write extent, so the
+        # view's block-table row is already final for every chunk
+        view = self._slot_view(slot)
+        nxt = None
+        for i, (start, cb) in enumerate(schedule):
+            real = min(start + cb, L) - start
+            toks = np.zeros((1, cb), np.int32)
+            toks[0, :real] = prompt[start:start + real]
+            if self._bucketed:
+                view = self._set_view_cursor(view, start)
+            last = L - 1 - start if i == len(schedule) - 1 else real - 1
+            self._prefill_buckets.add(cb)
+            self._key, sub = jax.random.split(self._key)
+            nxt, view = self._jit_prefill_chunk(
+                self.params, jnp.asarray(toks), view, jnp.int32(last), sub)
+            if self.paged:
+                # the view's pools are now the freshest — keep the full
+                # states' pool in sync so later table growth edits stick
+                kv = self.states.kv
+                self.states = self.states._replace(
+                    kv=kv._replace(k=view.kv.k, v=view.kv.v))
+        if self._bucketed:
+            view = self._set_view_cursor(view, L)
+        self._merge_view(slot, view)
+        return int(nxt)
 
     # ---- public API ----
     def submit(self, req: Request):
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if plen >= self.cfg.max_len:
+            raise ValueError(
+                f"prompt_len={plen} >= max_len={self.cfg.max_len}: the KV "
+                f"buffer cannot hold the prompt plus one generated token")
+        if self.paged:
+            # the prefill write extent plus the first decode tick's KV row
+            need = -(-max(self._prefill_extent(plen), plen + 1)
+                     // self.cfg.page_size)
+            if need > self.alloc.num_pages - 1:
+                raise ValueError(
+                    f"prompt needs {need} pages but the pool holds "
+                    f"{self.alloc.num_pages - 1}")
         req.output = []
+        req.truncated = False
         self.queue.append(req)
 
-    def _admit(self):
+    def _admit(self) -> List[Request]:
+        finished: List[Request] = []
         while self.queue:
             slot = self.alloc.claim(self.queue[0].request_id)
             if slot is None:
-                return
-            req = self.queue.popleft()
+                break
+            req = self.queue[0]
+            schedule = self._prefill_schedule(len(req.prompt))
+            # cover the prefill write extent AND the first decode tick's
+            # KV row (the slot decodes this very tick, before the next
+            # tick's growth pass runs)
+            need = max(max(s + c for s, c in schedule), len(req.prompt) + 1)
+            if self.paged and not self._ensure_pages(slot, need):
+                # free list dry: back off, retry when a slot releases pages
+                self.alloc.release(slot)
+                break
+            self.queue.popleft()
             self.active[slot] = req
             # reset this slot's cursor/recurrent state, then prefill
             self.states = _reset_slot(self.states, slot)
-            nxt, self.states = self._jit_prefill_one(
-                self.params, jnp.asarray(req.prompt), self.states, slot=slot)
+            nxt = self._prefill(slot, req, schedule)
             self.alloc.slots[slot].length = len(req.prompt)
-            req.output.append(int(nxt))
-            log.debug("admitted request %d into slot %d", req.request_id,
-                      slot)
+            req.output.append(nxt)
+            # EOS/max_new_tokens can trigger on the very first
+            # (prefill-produced) token — finish at admission, same tick
+            done = (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and nxt == req.eos_id))
+            if done:
+                finished.append(self._finish(slot))
+                log.debug("request %d finished at admission", req.request_id)
+            else:
+                log.debug("admitted request %d into slot %d", req.request_id,
+                          slot)
+        return finished
 
     def _finish(self, slot: int):
         req = self.active.pop(slot)
         self.alloc.release(slot)
+        if self.paged:
+            # zero the device table/cursor row: the freed pages can be
+            # reacquired by other slots any tick, and this (now inactive)
+            # row keeps flowing through the static-shape decode step — its
+            # garbage scatter must land on the trash page, not on them
+            kv = self.states.kv
+            self.states = self.states._replace(kv=kv._replace(
+                block_tables=kv.block_tables.at[:, slot].set(0),
+                length=kv.length.at[:, slot].set(0)))
         return req
 
     def step(self) -> List[Request]:
         """One engine tick. Returns requests that finished this tick."""
-        self._admit()
+        # grow in-flight slots' tables for this tick's KV row BEFORE
+        # admitting — decoding requests have page priority over new
+        # admissions (an admission must never drain the free list out
+        # from under a request that only needed one more page).  Slots at
+        # max_len hard-stop: decoding past it would clamp the write
+        # offset and corrupt the newest rows.  Newly admitted slots are
+        # covered through prompt_len + 1 by the admission ensure.
+        finished: List[Request] = []
+        for slot in list(self.active):
+            req = self.active[slot]
+            if self.alloc.slots[slot].length >= self.cfg.max_len or (
+                    self.paged and not self._ensure_pages(
+                        slot, self.alloc.slots[slot].length + 1)):
+                req.truncated = True
+                finished.append(self._finish(slot))
+                log.debug("request %d hard-stopped at max_len/page cap",
+                          req.request_id)
+        finished.extend(self._admit())
         if not self.active:
-            return []
+            return finished
         last = np.zeros((self.cfg.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             last[slot, 0] = req.output[-1]
+        self._key, sub = jax.random.split(self._key)
         nxt, self.states = self._jit_decode(self.params, jnp.asarray(last),
-                                            self.states)
+                                            self.states, sub)
         nxt = np.asarray(nxt)
-        finished = []
         for slot in list(self.active):
             req = self.active[slot]
             req.output.append(int(nxt[slot]))
@@ -181,11 +454,11 @@ class Engine:
 def _reset_slot(states, slot: int):
     """Reset one slot's decode state across all layers.
 
-    Transformer family: zero the (L, b) cursor; KV buffer rows need no
-    clearing (validity is cursor-defined).  Hybrid: also zero the slot's
-    mamba ssm/conv carries.  RWKV: zero the slot's recurrent state rows.
+    Transformer family: zero the (L, b) cursor; KV buffer/pool rows need
+    no clearing (validity is cursor-defined; paged tables are rewritten at
+    admission).  Hybrid: also zero the slot's mamba ssm/conv carries.
+    RWKV: zero the slot's recurrent state rows.
     """
-    from repro.core.attention import KVCache
     from repro.models.transformer import LayerState
 
     if isinstance(states, LayerState):

@@ -1,15 +1,34 @@
-"""Serving-side KV cache management: slot-based continuous batching.
+"""Serving-side KV cache management: slot + paged block-table allocators.
 
-The engine keeps a fixed pool of ``max_batch`` slots, each owning a stride
-of the stacked (layers, batch, max_len, kv_heads, head_dim) cache buffers.
-Requests claim a free slot, prefill writes their prompt into it, decode
-steps advance all active slots together, and finished slots are recycled
-without touching the others — per-slot lengths make ragged decode exact.
+The engine keeps a fixed pool of ``max_batch`` slots it schedules against.
+Two allocators back those slots:
 
-This is the contiguous (non-paged) variant; page tables only pay off once
-prompts share prefixes or lengths vary by orders of magnitude. The slot
-abstraction is what the engine schedules against, so a paged allocator can
-replace this module without touching engine logic.
+``SlotAllocator`` (contiguous)
+    Each slot owns a full ``max_len`` stride of the stacked
+    (layers, batch, max_len, kv_heads, head_dim) cache buffers — memory for
+    the worst case is reserved up front whether or not a request uses it.
+    Kept as the baseline arm of ``benchmarks/serve_bench.py``.
+
+``PagedAllocator`` (block tables)
+    KV rows live in a shared pool of fixed-size pages
+    (layers, num_pages, page_size, kv_heads, head_dim).  Each slot holds a
+    block table mapping logical page index -> physical page; pages are
+    handed out from a free list on demand as a request's cursor grows and
+    reclaimed in O(pages-held) when the slot is released (free-list push,
+    no compaction, no copying).  ``high_water_pages`` records the peak
+    pool occupancy — the number the serving bench reports against the
+    contiguous baseline's always-fully-reserved buffer.
+
+    Physical page 0 is reserved as the *trash page*: inactive batch rows
+    still flow through the jitted decode step (static shapes), and their
+    garbage KV writes must land somewhere that no live slot owns.  Block
+    tables are zeroed on release, so stale rows scatter into page 0, which
+    is never allocated and never read (validity is cursor-defined).
+
+Both allocators expose the same scheduling surface (``claim`` /
+``release`` / ``active`` / ``lengths`` / ``slots``); the paged one adds
+``ensure(slot, length)`` for on-demand page growth and a ``block_tables``
+array the engine mirrors into device state.
 """
 
 from __future__ import annotations
@@ -17,8 +36,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -30,6 +47,8 @@ class SlotState:
 
 
 class SlotAllocator:
+    """Contiguous allocator: slot i owns rows [i] of the cache buffers."""
+
     def __init__(self, max_batch: int):
         self.slots: List[SlotState] = [SlotState() for _ in range(max_batch)]
 
@@ -41,6 +60,88 @@ class SlotAllocator:
         return None
 
     def release(self, slot: int):
+        self.slots[slot] = SlotState()
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.done]
+
+    def lengths(self) -> np.ndarray:
+        return np.array([s.length for s in self.slots], np.int32)
+
+
+class PagedAllocator:
+    """Block-table allocator over a shared page pool (vLLM-style).
+
+    ``num_pages`` counts *physical* pages including the reserved trash
+    page 0; usable capacity is ``num_pages - 1``.  The default sizing
+    (``max_batch * pages_per_slot + 1``) can always hold every slot at
+    ``max_len`` — undersize it to serve more slots than worst-case memory,
+    at the cost of admission backpressure when the free list runs dry.
+    """
+
+    def __init__(self, max_batch: int, max_len: int, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self.max_len = max_len
+        self.pages_per_slot = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = max_batch * self.pages_per_slot + 1
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.slots: List[SlotState] = [SlotState() for _ in range(max_batch)]
+        self.block_tables = np.zeros((max_batch, self.pages_per_slot),
+                                     np.int32)
+        self._pages: List[List[int]] = [[] for _ in range(max_batch)]
+        # LIFO free list (page 0 reserved as the trash page): pop from the
+        # end so recently-released pages are reused while still cache-warm
+        self.free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.high_water_pages = 0
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self.free)
+
+    def claim(self, request_id: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.done:
+                self.slots[i] = SlotState(request_id, 0, False)
+                return i
+        return None
+
+    def ensure(self, slot: int, length: int) -> Optional[bool]:
+        """Grow ``slot``'s block table to cover ``length`` positions.
+
+        Returns True if new pages were mapped, False if already covered,
+        None if the free list ran dry (caller backpressures: requeue the
+        request or hard-stop the generation).  Pages grabbed before an
+        exhaustion are kept mapped — they are reclaimed with the slot.
+        """
+        need = -(-length // self.page_size)
+        if need > self.pages_per_slot:
+            return None
+        grew = False
+        held = self._pages[slot]
+        while len(held) < need:
+            if not self.free:
+                return None
+            page = self.free.pop()
+            self.block_tables[slot, len(held)] = page
+            held.append(page)
+            grew = True
+            # inside the loop so a partial growth that then runs dry still
+            # counts toward the peak (those pages stay mapped)
+            self.high_water_pages = max(self.high_water_pages,
+                                        self.pages_in_use)
+        return grew
+
+    def release(self, slot: int):
+        # O(pages-held) reclaim: push back on the free list, zero the table
+        self.free.extend(self._pages[slot])
+        self._pages[slot] = []
+        self.block_tables[slot] = 0
         self.slots[slot] = SlotState()
 
     def active(self) -> List[int]:

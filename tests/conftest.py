@@ -12,3 +12,43 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def serve_model():
+    """Tiny transformer shared by the serving test modules."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.nn.module import unbox
+
+    cfg = get_config("smollm-135m").reduced(num_layers=2, d_model=32,
+                                            d_ff=64, vocab_size=128)
+    api = get_model(cfg)
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+    return cfg, api, params
+
+
+@pytest.fixture
+def greedy_ref(serve_model):
+    """Sequential greedy decode oracle: ref(prompt, n_new, max_len=64)."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tfm
+
+    cfg, api, params = serve_model
+
+    def ref(prompt, n_new, max_len=64):
+        states = tfm.init_states(cfg, 1, max_len, per_slot=True)
+        logits, states = api.step(params, jnp.asarray(prompt)[None],
+                                  states, None)
+        out = [int(jnp.argmax(logits[0, -1]))]
+        while len(out) < n_new:
+            logits, states = api.step(
+                params, jnp.asarray([[out[-1]]], dtype=jnp.int32), states,
+                None)
+            out.append(int(jnp.argmax(logits[0, -1])))
+        return out
+
+    return ref

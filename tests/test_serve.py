@@ -1,41 +1,23 @@
-"""Serving engine: continuous batching == sequential greedy decode."""
+"""Serving engine: continuous batching == sequential greedy decode, plus
+the admission/overflow bug regressions (EOS on the first prefill token,
+max_len hard-stop, submit-time rejection) and the greedy/sampling switch.
 
-import jax
-import jax.numpy as jnp
+Shared fixtures (``serve_model``, ``greedy_ref``) live in conftest.py.
+"""
+
 import numpy as np
+import pytest
 
-from repro.configs import get_config
-from repro.models import transformer as tfm
-from repro.models.registry import get_model
-from repro.nn.module import unbox
 from repro.serve.engine import Engine, EngineConfig, Request
 
 
-def _make(arch="smollm-135m"):
-    cfg = get_config(arch).reduced(num_layers=2, d_model=32, d_ff=64,
-                                   vocab_size=128)
-    api = get_model(cfg)
-    params = unbox(api.init(jax.random.PRNGKey(0)))
-    api = api._replace(init_states=lambda b, s, **kw: tfm.init_states(
-        cfg, b, s, per_slot=True))
-    return cfg, api, params
-
-
-def _greedy_ref(cfg, api, params, prompt, n_new, max_len=64):
-    states = tfm.init_states(cfg, 1, max_len, per_slot=True)
-    logits, states = api.step(params, jnp.asarray(prompt)[None], states,
-                              None)
-    out = [int(jnp.argmax(logits[0, -1]))]
-    while len(out) < n_new:
-        logits, states = api.step(
-            params, jnp.asarray([[out[-1]]], dtype=jnp.int32), states, None)
-        out.append(int(jnp.argmax(logits[0, -1])))
-    return out
-
-
-def test_engine_matches_sequential_greedy(rng):
-    cfg, api, params = _make()
-    eng = Engine(api, params, EngineConfig(max_batch=4, max_len=64))
+@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
+def test_engine_matches_sequential_greedy(rng, serve_model, greedy_ref,
+                                          allocator):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=4, max_len=64,
+                                           allocator=allocator,
+                                           prefill_chunk=8))
     lens = (5, 3, 7, 5, 4, 6)   # ragged + recycling (6 reqs, 4 slots)
     prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
                for l in lens]
@@ -44,16 +26,134 @@ def test_engine_matches_sequential_greedy(rng):
     done = eng.run_to_completion()
     assert len(done) == len(prompts)
     for r in done:
-        assert r.output == _greedy_ref(cfg, api, params,
-                                       prompts[r.request_id], 6)
+        assert r.output == greedy_ref(prompts[r.request_id], 6)
 
 
-def test_engine_eos_early_stop(rng):
-    cfg, api, params = _make()
+def test_engine_eos_early_stop(rng, serve_model, greedy_ref):
+    cfg, api, params = serve_model
     eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64))
     prompt = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
-    ref = _greedy_ref(cfg, api, params, prompt, 8)
-    eos = ref[2]
+    eos = greedy_ref(prompt, 8)[2]
     eng.submit(Request(0, prompt, max_new_tokens=8, eos_id=eos))
     done = eng.run_to_completion()
     assert done[0].output[-1] == eos and len(done[0].output) <= 8
+
+
+def test_eos_on_first_prefill_token_finishes_at_admission(rng, serve_model,
+                                                          greedy_ref):
+    """Regression: a request whose very first (prefill-produced) token is
+    eos_id used to sit in its slot until the next decode tick appended a
+    second token past EOS."""
+    cfg, api, params = serve_model
+    prompt = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    eos = greedy_ref(prompt, 1)[0]
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64))
+    eng.submit(Request(0, prompt, max_new_tokens=8, eos_id=eos))
+    done = eng.step()                       # one tick, admission included
+    assert [r.request_id for r in done] == [0]
+    assert done[0].output == [eos]          # nothing generated past EOS
+    assert not eng.active                   # slot freed same-tick
+    assert all(s.done for s in eng.alloc.slots)
+
+
+def test_max_new_tokens_one_finishes_at_admission(rng, serve_model,
+                                                  greedy_ref):
+    cfg, api, params = serve_model
+    prompt = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64))
+    eng.submit(Request(0, prompt, max_new_tokens=1))
+    done = eng.step()
+    assert len(done) == 1 and len(done[0].output) == 1
+    assert done[0].output == greedy_ref(prompt, 1)
+
+
+def test_submit_rejects_overlong_prompt(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=16))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size,
+                                           (16,)).astype(np.int32)))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(1, np.zeros((0,), np.int32)))
+
+
+@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
+def test_decode_hard_stops_at_max_len(rng, serve_model, greedy_ref,
+                                      allocator):
+    """Regression: generation past max_len used to clamp the KV write
+    offset and silently corrupt the newest rows; now the slot hard-stops
+    with ``truncated`` set and the prefix stays exact."""
+    cfg, api, params = serve_model
+    max_len, plen = 24, 8
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=max_len,
+                                           allocator=allocator,
+                                           prefill_chunk=8))
+    prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+    eng.submit(Request(0, prompt, max_new_tokens=64))
+    done = eng.run_to_completion()
+    assert done[0].truncated
+    # prefill emits 1 token at length plen; each decode tick consumes one
+    # KV row until length == max_len
+    assert len(done[0].output) == max_len - plen + 1
+    ref = greedy_ref(prompt, len(done[0].output), max_len=64)
+    assert done[0].output == ref            # exact prefix, no corruption
+
+
+def test_slot_recycling_with_interleaved_submits(rng, serve_model,
+                                                 greedy_ref):
+    """Slots recycled mid-run must not leak stale cursors into the next
+    request (late submits land in previously-used slots)."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           prefill_chunk=8))
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (3, 9, 5, 12, 7)]
+    for i in (0, 1):
+        eng.submit(Request(i, prompts[i], max_new_tokens=4))
+    done = []
+    for _ in range(3):
+        done.extend(eng.step())
+    for i in (2, 3, 4):                     # recycled slots, longer prompts
+        eng.submit(Request(i, prompts[i], max_new_tokens=4))
+    done.extend(eng.run_to_completion())
+    assert sorted(r.request_id for r in done) == [0, 1, 2, 3, 4]
+    for r in done:
+        assert r.output == greedy_ref(prompts[r.request_id], 4)
+
+
+def test_greedy_flag_wires_sampling(rng, serve_model, greedy_ref):
+    """EngineConfig.greedy=False routes through temperature sampling; a
+    near-zero temperature recovers the greedy outputs, a hot one runs."""
+    cfg, api, params = serve_model
+    prompt = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    ref = greedy_ref(prompt, 5)
+
+    cold = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                            greedy=False, temperature=1e-5))
+    cold.submit(Request(0, prompt, max_new_tokens=5))
+    assert cold.run_to_completion()[0].output == ref
+
+    hot = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           greedy=False, temperature=5.0))
+    hot.submit(Request(0, prompt, max_new_tokens=5))
+    out = hot.run_to_completion()[0].output
+    assert len(out) == 5
+    assert all(0 <= t < cfg.vocab_size for t in out)
+
+
+def test_paged_default_degrades_for_forced_backend(rng, serve_model,
+                                                   greedy_ref):
+    """A config that forces a non-paged backend cannot use the paged pool;
+    the engine must degrade to contiguous slots, not crash at init."""
+    import dataclasses
+
+    cfg, api, params = serve_model
+    forced = dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, backend="fused"))
+    api_forced = api._replace(cfg=forced)
+    eng = Engine(api_forced, params, EngineConfig(max_batch=2, max_len=64,
+                                                  allocator="paged"))
+    assert not eng.paged
+    prompt = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    eng.submit(Request(0, prompt, max_new_tokens=4))
+    assert eng.run_to_completion()[0].output == greedy_ref(prompt, 4)

@@ -1,0 +1,206 @@
+"""Paged KV-cache subsystem: block-table allocator accounting, paged vs
+contiguous output parity on ragged batches, bucketed single-row prefill
+compile bounds, and backpressure when the page pool runs dry.
+
+Shared fixtures (``serve_model``, ``greedy_ref``) live in conftest.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.kvcache import PagedAllocator
+
+
+# ---------------------------------------------------------------------------
+# Allocator accounting (host side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_paged_allocator_claim_ensure_release():
+    al = PagedAllocator(max_batch=2, max_len=32, page_size=8)  # 4 pages/slot
+    assert al.num_pages == 2 * 4 + 1        # +1 reserved trash page
+    assert al.pages_in_use == 0
+
+    s0 = al.claim(10)
+    assert s0 == 0 and al.ensure(s0, 12) is True      # 2 pages for 12 toks
+    assert al.pages_in_use == 2
+    assert al.ensure(s0, 16) is False                 # already covered
+    assert al.ensure(s0, 17) is True                  # crosses page boundary
+    assert al.pages_in_use == 3
+    mapped = list(al.block_tables[0, :3])
+    assert 0 not in mapped                            # trash page never used
+    assert len(set(mapped)) == 3
+
+    s1 = al.claim(11)
+    assert s1 == 1 and al.ensure(s1, 32) is True
+    assert al.pages_in_use == 7 and al.high_water_pages == 7
+    assert al.ensure(s1, 33) is None                  # beyond per-slot table
+
+    al.release(s0)                                    # O(pages) reclaim
+    assert al.pages_in_use == 4
+    assert list(al.block_tables[0]) == [0, 0, 0, 0]   # table zeroed
+    s2 = al.claim(12)
+    assert s2 == 0 and al.ensure(s2, 32) is True      # freed pages reusable
+    assert al.ensure(s2, 32) is False
+    al.release(s1)
+    al.release(s2)
+    assert al.pages_in_use == 0                       # everything reclaimed
+    assert al.high_water_pages == 8
+
+
+def test_paged_allocator_pool_exhaustion_backpressure():
+    al = PagedAllocator(max_batch=4, max_len=32, page_size=8, num_pages=5)
+    s0 = al.claim(0)
+    assert al.ensure(s0, 32) is True                  # takes all 4 pages
+    s1 = al.claim(1)
+    assert al.ensure(s1, 8) is None                   # free list dry
+    al.release(s0)
+    assert al.ensure(s1, 8) is True                   # backpressure clears
+
+
+def test_paged_allocator_partial_growth_counts_toward_high_water():
+    al = PagedAllocator(max_batch=2, max_len=32, page_size=8, num_pages=4)
+    s0 = al.claim(0)
+    assert al.ensure(s0, 32) is None      # needs 4, pool holds 3: fails...
+    assert al.pages_in_use == 3           # ...but the grabbed pages stay
+    assert al.high_water_pages == 3       # and the peak records them
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity and compile accounting
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_contiguous_mixed_ragged_batch(rng, serve_model,
+                                                     greedy_ref):
+    """Acceptance: identical greedy outputs for a mixed ragged batch under
+    both allocators, and the paged high-water mark stays below the
+    contiguous reservation."""
+    cfg, api, params = serve_model
+    lens = (5, 3, 17, 5, 4, 9, 23, 1)
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in lens]
+
+    outs = {}
+    for allocator in ("contiguous", "paged"):
+        eng = Engine(api, params, EngineConfig(max_batch=3, max_len=64,
+                                               allocator=allocator,
+                                               page_size=8,
+                                               prefill_chunk=8))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=6))
+        done = eng.run_to_completion()
+        assert len(done) == len(prompts)
+        outs[allocator] = {r.request_id: r.output for r in done}
+        if allocator == "paged":
+            # 3 slots x 64 tokens contiguous == 24 pages always reserved;
+            # paging only ever held what live requests actually used
+            assert eng.alloc.high_water_pages < 3 * (64 // 8)
+            assert eng.alloc.pages_in_use == 0        # all reclaimed
+    assert outs["paged"] == outs["contiguous"]
+    assert outs["paged"][2] == greedy_ref(prompts[2], 6)
+
+
+@pytest.mark.parametrize("allocator", ["contiguous", "paged"])
+def test_prefill_compiles_bounded_by_buckets(rng, serve_model, allocator):
+    """Acceptance: prefilling N prompts of distinct lengths triggers at
+    most #buckets compiles (power-of-two buckets up to prefill_chunk),
+    not one trace per distinct prompt length."""
+    cfg, api, params = serve_model
+    chunk = 8
+    n_buckets = chunk.bit_length()          # {1, 2, 4, 8}
+    lens = (1, 2, 3, 5, 6, 7, 9, 11, 13, 15, 19, 21)   # 12 distinct
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator=allocator,
+                                           prefill_chunk=chunk))
+    for i, l in enumerate(lens):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size,
+                                           (l,)).astype(np.int32),
+                           max_new_tokens=2))
+    done = eng.run_to_completion()
+    assert len(done) == len(lens)
+    assert eng.prefill_compiles <= n_buckets
+    assert eng._prefill_buckets <= {1, 2, 4, 8}
+
+
+def test_paged_engine_survives_undersized_pool(rng, serve_model,
+                                               greedy_ref):
+    """A pool smaller than the worst case serializes admissions instead of
+    corrupting: every request still completes with exact outputs."""
+    cfg, api, params = serve_model
+    # 5 usable pages of 8 = 40 tokens of pool for 3 slots x 64 max_len
+    eng = Engine(api, params, EngineConfig(max_batch=3, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           num_pages=6, prefill_chunk=8))
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (9, 17, 5, 11)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=4))
+    done = eng.run_to_completion()
+    assert sorted(r.request_id for r in done) == [0, 1, 2, 3]
+    for r in done:
+        assert r.output == greedy_ref(prompts[r.request_id], 4)
+    assert eng.alloc.high_water_pages <= 5
+
+
+def test_inflight_request_has_page_priority_over_admission(rng, serve_model,
+                                                           greedy_ref):
+    """Regression: an admission must not drain the free list out from
+    under a decoding request that only needed one more page — in-flight
+    slots grow their tables before new requests are admitted."""
+    cfg, api, params = serve_model
+    # 3 usable pages of 8: request A holds 1 and will need a 2nd page
+    # mid-decode; request B (2 pages) arrives while A is decoding — with
+    # admission-first ordering B would take the last 2 pages and starve A
+    # into a truncated finish
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           num_pages=4, prefill_chunk=8))
+    pa = rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+    eng.submit(Request(0, pa, max_new_tokens=6))
+    done = eng.step()                     # A admitted: 1 page, len 8
+    eng.submit(Request(1, pb, max_new_tokens=3))
+    done += eng.run_to_completion()
+    assert sorted(r.request_id for r in done) == [0, 1]
+    for r in done:
+        assert not r.truncated
+        out = greedy_ref(pa if r.request_id == 0 else pb, len(r.output))
+        assert r.output == out
+
+
+def test_paged_submit_rejects_impossible_prompt(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           num_pages=3))   # 2 usable pages
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size,
+                                           (30,)).astype(np.int32)))
+
+
+def test_paged_decode_grows_pages_on_demand(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           prefill_chunk=8))
+    prompt = rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+    eng.submit(Request(0, prompt, max_new_tokens=12))
+    eng.step()
+    after_admit = eng.alloc.pages_in_use    # covers prompt + 1st decode row
+    assert after_admit == 1
+    while eng.active:
+        eng.step()
+    # 7 prompt + 11 decoded KV rows crosses into a 3rd page before finish
+    assert eng.alloc.high_water_pages == 3
+    assert eng.alloc.pages_in_use == 0
+
+
+def test_engine_decode_plan_traces_paged_backend(serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged"))
+    assert eng.decode_plan.backend == "paged"
+    assert "block-table" in eng.decode_plan.reason
+    eng2 = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                            allocator="contiguous"))
+    assert eng2.decode_plan.backend != "paged"

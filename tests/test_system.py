@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import PipelineConfig, lm_batch_at
-from repro.models import transformer as tfm
 from repro.models.registry import get_model
 from repro.optim import AdamWConfig
 from repro.serve.engine import Engine, EngineConfig, Request
@@ -43,8 +42,7 @@ def test_train_then_serve_inhibitor(rng):
     assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
 
     params = out["params"]
-    api = api._replace(init_states=lambda b, s, **kw: tfm.init_states(
-        cfg, b, s, per_slot=True))
+    # the engine owns state layout (per-slot cursors, paged block tables)
     eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64))
     prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
     eng.submit(Request(0, prompt, max_new_tokens=4))

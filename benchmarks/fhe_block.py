@@ -1,0 +1,113 @@
+"""Full-block encrypted cost table: inhibitor vs dot-product under TFHE.
+
+Extends the paper's Tables 2/4 (attention-op circuits) to the *model
+level* the north-star demands: the whole PTQ'd ``paper_tiny`` block —
+norm surrogate, projections, attention, MLP, residuals, logits — runs
+under the TFHE simulator on both mechanism arms, bit-exactness against
+the plaintext int lane is asserted, and the per-mechanism PBS/cmul
+totals, block-level message-width high-water, selected macro-parameters
+and estimated single-thread seconds are reported.
+
+Structural claim checked on every run: the inhibitor block performs
+**zero** ciphertext×ciphertext multiplications; the dot-product block
+pays them in QKᵀ, the softmax renormalization, and S·V.
+
+  PYTHONPATH=src python benchmarks/fhe_block.py [--smoke] [--json PATH]
+
+Writes ``BENCH_fhe_block.json`` (CI artifact; serving-style trajectory
+tracking for the encrypted-inference axis).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def run(smoke: bool = False, seq_lens=None) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.lanes import get_lane
+    from repro.fhe import pbs_seconds, select_params_for_report
+    from repro.models import transformer as tfm
+    from repro.models.registry import get_model
+    from repro.nn.module import unbox
+    from repro.quant.ptq import ptq_lm
+
+    seq_lens = seq_lens or ((4,) if smoke else (4, 8, 16))
+    cfg = get_config("paper-tiny")
+    if smoke:
+        cfg = cfg.reduced(num_layers=1, d_model=32, d_ff=64,
+                          num_heads=2, num_kv_heads=2, head_dim=16)
+    params = unbox(get_model(cfg).init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+
+    out = {"config": cfg.name, "d_model": cfg.d_model, "rows": []}
+    for T in seq_lens:
+        tokens = rng.integers(0, cfg.vocab_size, (1, T))
+        per_mech = {}
+        for mech in ("inhibitor", "dotprod"):
+            qlm = ptq_lm(params, cfg.with_attention_kind(mech))
+            int_lane = get_lane("int")
+            ref = int_lane.to_numpy(
+                tfm.lm_forward_lane(qlm, int_lane, tokens))
+            fhe = get_lane("fhe_sim")
+            enc = fhe.to_numpy(tfm.lm_forward_lane(qlm, fhe, tokens))
+            if not np.array_equal(ref, enc):
+                raise AssertionError(
+                    f"{mech}@T={T}: encrypted forward diverged from the "
+                    "int lane (lane refactor bug)")
+            tot = fhe.ctx.summary()
+            sel = select_params_for_report(fhe.ctx.scope_report())
+            per_mech[mech] = {
+                "pbs": tot["pbs"],
+                "cmuls": tot["cmuls"],
+                "adds": tot["adds"],
+                "max_bits_at_pbs": tot["max_bits_at_pbs"],
+                "poly_size": sel.poly_size,
+                "lwe_dim": sel.lwe_dim,
+                "est_seconds": round(tot["pbs"] * pbs_seconds(sel), 1),
+            }
+        if per_mech["inhibitor"]["cmuls"] != 0:
+            raise AssertionError(
+                "inhibitor block performed ciphertext multiplications — "
+                "a lane/layer regression broke the paper's core property")
+        if per_mech["dotprod"]["cmuls"] <= 0:
+            raise AssertionError("dotprod block reported zero cipher muls "
+                                 "(cost accounting regression)")
+        speedup = (per_mech["dotprod"]["est_seconds"]
+                   / max(per_mech["inhibitor"]["est_seconds"], 1e-9))
+        out["rows"].append({"T": T, **{
+            f"{m}_{k}": v for m, d in per_mech.items()
+            for k, v in d.items()}, "speedup": round(speedup, 2)})
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + single T for CI")
+    ap.add_argument("--json", default="BENCH_fhe_block.json")
+    args = ap.parse_args(argv)
+    res = run(smoke=args.smoke)
+    with open(args.json, "w") as f:
+        json.dump(res, f, indent=2)
+    hdr = (f"{'T':>4} {'mechanism':>10} {'PBS':>8} {'cmuls':>7} "
+           f"{'bits':>5} {'poly':>6} {'est time':>10}   speedup")
+    print(hdr)
+    for row in res["rows"]:
+        for mech in ("inhibitor", "dotprod"):
+            sp = f"{row['speedup']:.2f}x" if mech == "dotprod" else ""
+            print(f"{row['T']:>4} {mech:>10} {row[f'{mech}_pbs']:>8} "
+                  f"{row[f'{mech}_cmuls']:>7} "
+                  f"{row[f'{mech}_max_bits_at_pbs']:>5} "
+                  f"{row[f'{mech}_poly_size']:>6} "
+                  f"{row[f'{mech}_est_seconds']:>9.1f}s   {sp}")
+    print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,38 +1,72 @@
-"""Privacy-preserving inference demo: the paper's headline use case.
+"""Privacy-preserving inference: a whole transformer under TFHE.
 
-A tiny Inhibitor attention layer is quantized to the paper's message
-space and evaluated under the TFHE circuit simulator — exact integer
-semantics with PBS/bit-width accounting — next to the dot-product arm,
-reproducing the structure of the paper's Tables 2 and 4 at one glance.
+The paper's headline use case, end to end: the ``paper_tiny`` Inhibitor
+Transformer is post-training-quantized onto the integer lanes and
+evaluated — **every layer**: LayerNorm surrogate, QKV/out projections,
+attention, ReLU MLP, residuals, logits — under the TFHE circuit
+simulator, bit-exact with the plaintext integer lane, next to the
+dot-product baseline arm.  The per-layer cost report shows the paper's
+structural claim at block scale: the inhibitor arm performs **zero
+ciphertext×ciphertext multiplications** (only the Softmax baseline pays
+them), and TFHE macro-parameters are selected from the *block-level*
+PBS message-width high-water (fhe.params.select_params_for_report).
 
   PYTHONPATH=src python examples/fhe_inference.py
 """
 
+import jax
 import numpy as np
 
-from repro.fhe import (circuit_seconds, describe, dotprod_attention_circuit,
-                       inhibitor_attention_circuit)
+from repro.configs import get_config
+from repro.core.lanes import get_lane
+from repro.fhe import pbs_seconds, select_params_for_report
+from repro.models import transformer as tfm
+from repro.models.registry import get_model
+from repro.nn.module import unbox
+from repro.quant.ptq import ptq_lm
 
+SEQ = 8
+
+cfg = get_config("paper-tiny")
+params = unbox(get_model(cfg).init(jax.random.PRNGKey(0)))
 rng = np.random.default_rng(7)
+tokens = rng.integers(0, cfg.vocab_size, (1, SEQ))
 
-print(f"{'T':>4} {'mechanism':>10} {'PBS':>6} {'bits':>5} {'poly':>6} "
-      f"{'lweDim':>7} {'est time':>9}   speedup")
-for T in (2, 4, 8, 16):
-    d = 2
-    q = rng.integers(-7, 8, (T, d))
-    k = rng.integers(-7, 8, (T, d))
-    v = rng.integers(-7, 8, (T, d))
-    h_i, s_i = inhibitor_attention_circuit(q, k, v, gamma_shift=1,
-                                           alpha_q=1)
-    h_d, s_d = dotprod_attention_circuit(q, k, v, scale_shift=2)
-    di, dd = describe(s_i), describe(s_d)
-    sp = circuit_seconds(s_d) / circuit_seconds(s_i)
-    print(f"{T:>4} {'inhibitor':>10} {di['pbs']:>6} "
-          f"{di['max_bits_at_pbs']:>5} {di['poly_size']:>6} "
-          f"{di['lwe_dim']:>7} {di['est_seconds']:>8.2f}s")
-    print(f"{'':>4} {'dotprod':>10} {dd['pbs']:>6} "
-          f"{dd['max_bits_at_pbs']:>5} {dd['poly_size']:>6} "
-          f"{dd['lwe_dim']:>7} {dd['est_seconds']:>8.2f}s   {sp:.1f}x")
+print(f"paper-tiny: {cfg.num_layers} layer(s), d_model={cfg.d_model}, "
+      f"T={SEQ} — client embeds+encrypts tokens, server computes on "
+      "ciphertexts\n")
 
-print("\npaper Table 4 speedups for reference: 3.6x / 2.6x / 4.5x / 6.5x")
-print("paper Table 2 bit gap: inhibitor needs 1-2 fewer message bits")
+for mech in ("inhibitor", "dotprod"):
+    qlm = ptq_lm(params, cfg.with_attention_kind(mech))
+
+    # plaintext integer reference (jnp int32 lane)
+    int_lane = get_lane("int")
+    ref = int_lane.to_numpy(tfm.lm_forward_lane(qlm, int_lane, tokens))
+
+    # the same forward under the TFHE simulator
+    fhe = get_lane("fhe_sim")
+    enc = fhe.to_numpy(tfm.lm_forward_lane(qlm, fhe, tokens))
+    assert np.array_equal(ref, enc), "encrypted forward must be bit-exact"
+
+    report = fhe.ctx.scope_report()
+    params_sel = select_params_for_report(report)
+    t_pbs = pbs_seconds(params_sel)
+
+    print(f"== {mech} block — encrypted forward bit-exact with int lane ==")
+    print(f"{'layer':14s} {'pbs':>8} {'cmuls':>7} {'adds':>9} "
+          f"{'bits@pbs':>8}")
+    for name, s in report.items():
+        print(f"{name:14s} {s['pbs']:>8} {s['cmuls']:>7} {s['adds']:>9} "
+              f"{s['max_bits_at_pbs']:>8}")
+    tot = fhe.ctx.summary()
+    print(f"{'total':14s} {tot['pbs']:>8} {tot['cmuls']:>7} "
+          f"{tot['adds']:>9} {tot['max_bits_at_pbs']:>8}")
+    print(f"selected params: poly={params_sel.poly_size} "
+          f"lwe={params_sel.lwe_dim} level={params_sel.level} "
+          f"(block high-water {tot['max_bits_at_pbs']} bits)")
+    print(f"estimated encrypted block time: "
+          f"{tot['pbs'] * t_pbs:,.0f}s single-thread\n")
+
+print("the inhibitor arm runs the whole block without a single "
+      "ciphertext multiplication;\nthe dot-product arm pays 2 PBS per "
+      "product in QKᵀ, softmax renorm, and S·V.")

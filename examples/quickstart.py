@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mechanism import resolve_mechanism_name
+
 from repro.configs import get_config
 from repro.core import inhibitor as I
 from repro.fhe import (describe, dotprod_attention_circuit,
@@ -31,7 +33,7 @@ for name in ("smollm-135m", "smollm-135m@inhibitor"):
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
                        dtype=jnp.int32)
     logits, _ = api.forward(params, {"tokens": toks})
-    print(f"  {name:26s} kind={cfg.attention.kind:10s} "
+    print(f"  {name:26s} mechanism={resolve_mechanism_name(cfg.attention):10s} "
           f"params={param_count(params):,} logits={tuple(logits.shape)}")
 
 # ---- 2. the paper's eq. 9 identity ------------------------------------

@@ -23,7 +23,7 @@ CONFIG = ModelConfig(
     d_ff=5504,
     vocab_size=32001,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=25, num_kv_heads=5, head_dim=64,
+        mechanism="dotprod", num_heads=25, num_kv_heads=5, head_dim=64,
         qkv_bias=False, use_rope=True, rope_base=10000.0, causal=True,
         sliding_window=1024),
     norm="rmsnorm",

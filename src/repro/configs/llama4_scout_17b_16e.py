@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
     d_ff=8192,
     vocab_size=202048,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=40, num_kv_heads=8, head_dim=128,
+        mechanism="dotprod", num_heads=40, num_kv_heads=8, head_dim=128,
         qkv_bias=False, use_rope=True, rope_base=500000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-5,

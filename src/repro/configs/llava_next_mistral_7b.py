@@ -19,7 +19,7 @@ CONFIG = ModelConfig(
     d_ff=14336,
     vocab_size=32000,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=32, num_kv_heads=8, head_dim=128,
+        mechanism="dotprod", num_heads=32, num_kv_heads=8, head_dim=128,
         qkv_bias=False, use_rope=True, rope_base=1000000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-5,

@@ -17,7 +17,7 @@ CONFIG = ModelConfig(
     d_ff=256,
     vocab_size=256,
     attention=AttentionConfig(
-        kind="inhibitor", num_heads=4, num_kv_heads=4, head_dim=32,
+        mechanism="inhibitor", num_heads=4, num_kv_heads=4, head_dim=32,
         score_shift=0.5, use_rope=False, causal=True),
     norm="layernorm",
     norm_eps=1e-5,

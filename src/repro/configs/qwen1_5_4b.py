@@ -14,7 +14,7 @@ CONFIG = ModelConfig(
     d_ff=6912,
     vocab_size=151936,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=20, num_kv_heads=20, head_dim=128,
+        mechanism="dotprod", num_heads=20, num_kv_heads=20, head_dim=128,
         qkv_bias=True, use_rope=True, rope_base=5000000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-6,

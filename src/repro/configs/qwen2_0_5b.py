@@ -14,7 +14,7 @@ CONFIG = ModelConfig(
     d_ff=4864,
     vocab_size=151936,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=14, num_kv_heads=2, head_dim=64,
+        mechanism="dotprod", num_heads=14, num_kv_heads=2, head_dim=64,
         qkv_bias=True, use_rope=True, rope_base=1000000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-6,

@@ -20,7 +20,7 @@ CONFIG = ModelConfig(
     d_ff=1408,
     vocab_size=151936,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=16, num_kv_heads=16, head_dim=128,
+        mechanism="dotprod", num_heads=16, num_kv_heads=16, head_dim=128,
         qkv_bias=True, use_rope=True, rope_base=1000000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-6,

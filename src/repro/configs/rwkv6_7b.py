@@ -18,7 +18,7 @@ CONFIG = ModelConfig(
     d_ff=14336,
     vocab_size=65536,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=64, num_kv_heads=64, head_dim=64,
+        mechanism="dotprod", num_heads=64, num_kv_heads=64, head_dim=64,
         use_rope=False, causal=True),
     norm="layernorm",
     norm_eps=1e-5,

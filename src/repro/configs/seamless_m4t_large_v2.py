@@ -20,7 +20,7 @@ CONFIG = ModelConfig(
     d_ff=8192,
     vocab_size=256206,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=16, num_kv_heads=16, head_dim=64,
+        mechanism="dotprod", num_heads=16, num_kv_heads=16, head_dim=64,
         qkv_bias=True, use_rope=False, causal=True),
     norm="layernorm",
     norm_eps=1e-5,

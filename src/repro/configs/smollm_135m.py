@@ -14,7 +14,7 @@ CONFIG = ModelConfig(
     d_ff=1536,
     vocab_size=49152,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=9, num_kv_heads=3, head_dim=64,
+        mechanism="dotprod", num_heads=9, num_kv_heads=3, head_dim=64,
         qkv_bias=False, use_rope=True, rope_base=10000.0, causal=True),
     norm="rmsnorm",
     norm_eps=1e-5,

@@ -15,7 +15,7 @@ CONFIG = ModelConfig(
     d_ff=5632,
     vocab_size=100352,
     attention=AttentionConfig(
-        kind="dotprod", num_heads=32, num_kv_heads=32, head_dim=64,
+        mechanism="dotprod", num_heads=32, num_kv_heads=32, head_dim=64,
         qkv_bias=False, use_rope=True, rope_base=10000.0, rope_pct=0.25,
         causal=True),
     norm="layernorm",

@@ -33,8 +33,8 @@ from repro.nn.module import KeyGen
 
 @dataclasses.dataclass(frozen=True)
 class AttentionConfig:
-    kind: str = "dotprod"           # legacy mechanism name; prefer
-                                    # ``mechanism`` (registry key)
+    kind: Optional[str] = None      # DEPRECATED mechanism name (warns
+                                    # once); set ``mechanism`` instead
     num_heads: int = 8
     num_kv_heads: int = 8
     head_dim: int = 64
@@ -124,6 +124,28 @@ def init_attention(key, cfg: AttentionConfig, embed_dim: int, *,
     }
 
 
+def structural_mask_predicate(causal: bool, window, qi, kj):
+    """Attendability of (query index ``qi``, key index ``kj``) under the
+    causal/sliding-window structure — the shared definition of the
+    window-implies-causal semantics for every mask-building path
+    (``_build_mask``, the blocked backend's chunk masks, the lane
+    forward's cleartext masks); the Pallas kernels keep an in-kernel
+    copy for lowering locality, locked against this one by
+    tests/test_window_semantics.py.  Works on numpy and jnp index arrays
+    alike.  Returns None when unstructured (attend all-to-all)."""
+    masks = []
+    if causal:
+        masks.append(kj <= qi)
+    if window is not None:
+        masks.append((kj > qi - window) & (kj <= qi))
+    if not masks:
+        return None
+    m = masks[0]
+    for extra in masks[1:]:
+        m = m & extra
+    return m
+
+
 def _build_mask(cfg: AttentionConfig, n_q: int, n_k: int, q_offset,
                 kv_valid_len=None) -> Optional[jax.Array]:
     """Boolean (b|1, 1, n_q, n_k) mask combining causality, sliding window
@@ -135,12 +157,10 @@ def _build_mask(cfg: AttentionConfig, n_q: int, n_k: int, q_offset,
         qoff = qoff[None]
     qi = qoff[:, None, None] + jnp.arange(n_q)[None, :, None]  # (b|1, nq, 1)
     kj = jnp.arange(n_k)[None, None, :]                        # (1, 1, nk)
-    if cfg.causal:
-        masks.append(kj <= qi)
-    if cfg.sliding_window is not None:
-        # a sliding window implies causality — one semantics across the
-        # fused/blocked/pallas paths (see tests/test_window_semantics.py)
-        masks.append((kj > qi - cfg.sliding_window) & (kj <= qi))
+    structural = structural_mask_predicate(cfg.causal, cfg.sliding_window,
+                                           qi, kj)
+    if structural is not None:
+        masks.append(structural)
     if kv_valid_len is not None:
         kv = jnp.asarray(kv_valid_len)
         if kv.ndim == 0:

@@ -74,15 +74,17 @@ def _pad_to(x, mult, axis):
 
 
 def _chunk_mask(q0, k0, cq, ck, *, causal, window, kv_len, q_offset):
-    """(cq, ck) float mask for the chunk at (query q0, key k0)."""
+    """(cq, ck) float mask for the chunk at (query q0, key k0); the
+    causal/window structure comes from the shared predicate in
+    core.attention (one window-implies-causal semantics everywhere)."""
+    from repro.core.attention import structural_mask_predicate
+
     qi = q0 + q_offset + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
     kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
     m = kj < kv_len
-    if causal:
-        m = m & (kj <= qi)
-    if window is not None:
-        # a sliding window implies causality (matches sliding_window_mask)
-        m = m & (kj > qi - window) & (kj <= qi)
+    structural = structural_mask_predicate(causal, window, qi, kj)
+    if structural is not None:
+        m = m & structural
     return m.astype(jnp.float32)
 
 

@@ -1,0 +1,592 @@
+"""Numeric execution lanes: one op set, three arithmetic domains.
+
+The paper's claim is that a whole quantized Transformer — not just the
+attention op — runs under TFHE because every layer can be expressed in
+the small op vocabulary TFHE executes cheaply: ciphertext add/sub,
+plaintext-weight matmul (levelled), multiply/shift by literals, and
+univariate table lookups (1 PBS each).  This module makes that op set a
+first-class abstraction (DESIGN.md §9): a :class:`Lane` exposes exactly
+those operations, and the nn layers / attention mechanisms / model
+forward are written once against it.
+
+Three lanes implement the protocol:
+
+  * :class:`FloatLane`   — jnp float32.  Literal shifts divide exactly and
+    LUT sites apply their *real-valued* counterpart (``float_fn``), so this
+    lane is the continuous reference the integer lanes approximate; run on
+    PTQ'd integer weights it differs from the int lane only by activation
+    rounding.
+  * :class:`IntLane`     — jnp int32.  LUTs are materialized tables
+    (gathers) built by the same numpy table functions the FHE lane uses,
+    so its results are bit-exact with ``fhe_sim``.
+  * :class:`FheSimLane`  — numpy int64 over a shared
+    :class:`~repro.fhe.tfhe_sim.FheContext`: identical integer arithmetic
+    plus per-op cost accounting (PBS / cmul / add / lit-mul and the
+    message-width high-water marks parameter selection keys on).
+    ``lane.scope(name)`` attributes costs per layer.
+
+Domain convention: every generic LUT declares its input domain
+``[lo, hi]`` and *saturates* into it — that is the declared quantized
+activation range (the clamp every integer deployment applies), and the
+bit-width recorded at the PBS is the width of the saturated input, i.e.
+what the table must cover.  Out-of-range pressure is still visible:
+the op that *produced* the value observed its raw width in
+``max_bits_any``.
+
+Ciphertext×ciphertext multiplication (:meth:`Lane.mul` and the two
+contraction helpers) exists on every lane — the dot-product baseline
+needs it — but the inhibitor family never calls it, which is exactly the
+zero-``cmuls`` line in the full-block cost report.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+Handle = Any   # lane-private tensor handle (jnp array or np.int64 array)
+
+
+def _np_int(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.int64)
+
+
+class Lane:
+    """Protocol + shared derived ops.  Concrete lanes implement the
+    primitive set; everything else (``lut2``) is written once here."""
+
+    name: str = "?"
+    is_float: bool = False
+    #: FHE cost context (None on plaintext lanes)
+    ctx = None
+
+    # ---- ingest / export -------------------------------------------------
+    def array(self, x) -> Handle:
+        raise NotImplementedError
+
+    def to_numpy(self, t: Handle) -> np.ndarray:
+        raise NotImplementedError
+
+    def shape(self, t: Handle):
+        return t.shape
+
+    # ---- structure (free: wire relabeling, no homomorphic work) ----------
+    def reshape(self, t: Handle, shape) -> Handle:
+        return t.reshape(shape)
+
+    def transpose(self, t: Handle, axes) -> Handle:
+        return t.transpose(axes)
+
+    def expand_dims(self, t: Handle, axis: int) -> Handle:
+        raise NotImplementedError
+
+    def repeat(self, t: Handle, rep: int, axis: int) -> Handle:
+        raise NotImplementedError
+
+    # ---- levelled ops ----------------------------------------------------
+    def add(self, a: Handle, b) -> Handle:
+        raise NotImplementedError
+
+    def sub(self, a: Handle, b) -> Handle:
+        raise NotImplementedError
+
+    def neg(self, t: Handle) -> Handle:
+        raise NotImplementedError
+
+    def mul_literal(self, t: Handle, c) -> Handle:
+        """Multiply by a cleartext integer scalar/array (levelled)."""
+        raise NotImplementedError
+
+    def shift_right(self, t: Handle, k: int) -> Handle:
+        """Arithmetic shift by a static amount (divide by 2^k)."""
+        raise NotImplementedError
+
+    def matmul_plain(self, t: Handle, w: np.ndarray) -> Handle:
+        """(..., d_in) × cleartext (d_in, d_out) — the levelled
+        plaintext-weight matmul every projection/MLP/logit layer uses
+        (weights stay cleartext; activations are the ciphertext)."""
+        raise NotImplementedError
+
+    def sum(self, t: Handle, axis, keepdims: bool = False) -> Handle:
+        raise NotImplementedError
+
+    def select(self, mask: np.ndarray, t: Handle, fill: int) -> Handle:
+        """Cleartext-mask select: keep ``t`` where mask, else the literal
+        ``fill`` (one literal multiply per element)."""
+        raise NotImplementedError
+
+    def clip(self, t: Handle, lo: int, hi: int) -> Handle:
+        """Declared-range saturation (the quantized activation clamp);
+        free — it is absorbed into the next table's domain."""
+        raise NotImplementedError
+
+    # ---- PBS ops ---------------------------------------------------------
+    def relu(self, t: Handle) -> Handle:
+        raise NotImplementedError
+
+    def abs(self, t: Handle) -> Handle:
+        raise NotImplementedError
+
+    def max(self, t: Handle, axis: int, keepdims: bool = False) -> Handle:
+        """Row max via the relu-tree (``max(a,b) = b + relu(a−b)``):
+        ~1 PBS per element on the FHE lane."""
+        raise NotImplementedError
+
+    def masked_max(self, t: Handle, mask, axis: int,
+                   keepdims: bool = False) -> Handle:
+        """Row max over the *attendable* subset only.  The mask is public
+        structure, so the relu-tree simply runs over the attendable wires
+        — no −inf sentinel widening the message space, and a dominant
+        masked score can never poison the max (fixed-point softmax is not
+        shift-invariant past the exp window).  Fully masked rows return
+        the ``_MASKED_ROW`` sentinel; their probabilities are zeroed by
+        the later mask select regardless."""
+        raise NotImplementedError
+
+    def lut(self, t: Handle, fn: Callable[[np.ndarray], np.ndarray],
+            lo: int, hi: int, *,
+            float_fn: Optional[Callable] = None,
+            int_fn: Optional[Callable] = None) -> Handle:
+        """Univariate table lookup over the saturated domain [lo, hi].
+        ``fn`` maps int64 numpy → int64 numpy and defines the table on
+        both integer lanes (bit-exact); ``float_fn`` is the real-valued
+        counterpart the float lane applies instead.  ``int_fn``, when
+        given, is a jnp-native expression bit-identical to ``fn`` — the
+        int lane evaluates it directly instead of materializing the
+        table (large domains, e.g. the reciprocal over row sums, would
+        otherwise bake multi-MB gather constants into the jaxpr)."""
+        raise NotImplementedError
+
+    # ---- ciphertext×ciphertext (dot-product baseline only) ---------------
+    def mul(self, a: Handle, b: Handle) -> Handle:
+        raise NotImplementedError
+
+    def dot_scores(self, q: Handle, k: Handle) -> Handle:
+        """(..., n_q, d) × (..., n_k, d) → (..., n_q, n_k) cipher–cipher
+        contraction (QKᵀ)."""
+        raise NotImplementedError
+
+    def mix_values(self, p: Handle, v: Handle) -> Handle:
+        """(..., n_q, n_k) × (..., n_k, d) → (..., n_q, d) cipher–cipher
+        contraction (S·V)."""
+        raise NotImplementedError
+
+    # ---- cost attribution ------------------------------------------------
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        """Per-layer cost attribution (no-op on plaintext lanes)."""
+        yield self
+
+    # ---- derived ops (lane-generic) --------------------------------------
+    def lut2(self, x: Handle, y: Handle,
+             fn: Callable[[np.ndarray, np.ndarray], np.ndarray],
+             *, x_lo: int, x_hi: int, y_lo: int, y_hi: int,
+             float_fn: Optional[Callable] = None) -> Handle:
+        """Bivariate LUT via operand packing — the standard TFHE trick for
+        small-operand binary functions: pack ``p = (x−x_lo) + (y−y_lo)·W``
+        with levelled ops, then one univariate PBS whose message width is
+        the *packed* width (this widening is what parameter selection must
+        see).  Both operands saturate to their declared domains.  On the
+        float lane the real-valued ``float_fn(x, y)`` applies directly
+        (to the same saturated operands)."""
+        if self.is_float:
+            return float_fn(self.clip(x, x_lo, x_hi),
+                            self.clip(y, y_lo, y_hi))
+        span = x_hi - x_lo + 1
+        xc = self.clip(x, x_lo, x_hi)
+        yc = self.clip(y, y_lo, y_hi)
+        packed = self.add(self.mul_literal(yc, span), xc)
+        base = y_lo * span + x_lo
+
+        def packed_fn(p):
+            pp = p - base
+            xx = pp % span + x_lo
+            yy = pp // span + y_lo
+            return fn(xx, yy)
+
+        return self.lut(packed, packed_fn,
+                        y_lo * span + x_lo, y_hi * span + x_hi)
+
+
+#: fill for rows with no attendable key: below every score representable
+#: in the supported int32 regime (|Σq·k| < 2^30 — wider inputs overflow
+#: the lane itself first), while s − fill ≤ 2^30 + 2^30 still fits int32
+_MASKED_ROW = -(1 << 30)
+
+
+def reciprocal_literal(n_max: int, count=None, base_bits: int = 8):
+    """``1/count`` as a cleartext fixed-point literal with ~``base_bits``
+    significant bits for ANY count up to ``n_max`` (a fixed-width
+    numerator truncates to zero past ``2^base_bits``).  Returns
+    ``(literal, fraction_bits)``; apply as ``(x · literal) >> fraction``.
+    Shared by the key-count normalization and the norm-surrogate means."""
+    f = base_bits + max(int(n_max) - 1, 1).bit_length()
+    if count is None:
+        return (1 << f) // max(int(n_max), 1), f
+    return (1 << f) // count, f
+
+
+# ---------------------------------------------------------------------------
+# Plaintext jnp lanes
+# ---------------------------------------------------------------------------
+
+class _JnpLane(Lane):
+    """Shared jnp structure/levelled ops for the float and int lanes."""
+
+    def to_numpy(self, t):
+        import jax
+
+        return np.asarray(jax.device_get(t))
+
+    def expand_dims(self, t, axis):
+        import jax.numpy as jnp
+
+        return jnp.expand_dims(t, axis)
+
+    def repeat(self, t, rep, axis):
+        import jax.numpy as jnp
+
+        return jnp.repeat(t, rep, axis=axis)
+
+    def transpose(self, t, axes):
+        import jax.numpy as jnp
+
+        return jnp.transpose(t, axes)
+
+    def reshape(self, t, shape):
+        import jax.numpy as jnp
+
+        return jnp.reshape(t, shape)
+
+    def sum(self, t, axis, keepdims=False):
+        import jax.numpy as jnp
+
+        return jnp.sum(t, axis=axis, keepdims=keepdims)
+
+    def max(self, t, axis, keepdims=False):
+        import jax.numpy as jnp
+
+        return jnp.max(t, axis=axis, keepdims=keepdims)
+
+    def masked_max(self, t, mask, axis, keepdims=False):
+        import jax.numpy as jnp
+
+        fill = _MASKED_ROW if not self.is_float else float(_MASKED_ROW)
+        return jnp.max(jnp.where(mask, t, fill), axis=axis,
+                       keepdims=keepdims)
+
+    def clip(self, t, lo, hi):
+        import jax.numpy as jnp
+
+        return jnp.clip(t, lo, hi)
+
+    def neg(self, t):
+        return -t
+
+    def mul(self, a, b):
+        return a * b
+
+    def dot_scores(self, q, k):
+        import jax.numpy as jnp
+
+        return jnp.einsum("...qd,...kd->...qk", q, k)
+
+    def mix_values(self, p, v):
+        import jax.numpy as jnp
+
+        return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+class FloatLane(_JnpLane):
+    """jnp float32 — the continuous reference the integer lanes chase."""
+
+    name = "float"
+    is_float = True
+
+    def array(self, x):
+        import jax.numpy as jnp
+
+        return jnp.asarray(x, jnp.float32)
+
+    def add(self, a, b):
+        if isinstance(b, (int, float, np.integer, np.ndarray)):
+            b = self.array(b)
+        return a + b
+
+    def sub(self, a, b):
+        if isinstance(b, (int, float, np.integer, np.ndarray)):
+            b = self.array(b)
+        return a - b
+
+    def mul_literal(self, t, c):
+        return t * self.array(c)
+
+    def shift_right(self, t, k):
+        return t / float(1 << k)            # exact divide — no rounding
+
+    def matmul_plain(self, t, w):
+        import jax.numpy as jnp
+
+        return jnp.einsum("...i,io->...o", t, self.array(w))
+
+    def select(self, mask, t, fill):
+        import jax.numpy as jnp
+
+        # mask may be a traced jnp bool (registry backends run under jit)
+        return jnp.where(mask, t, float(fill))
+
+    def relu(self, t):
+        import jax.numpy as jnp
+
+        return jnp.maximum(t, 0.0)
+
+    def abs(self, t):
+        import jax.numpy as jnp
+
+        return jnp.abs(t)
+
+    def lut(self, t, fn, lo, hi, *, float_fn=None, int_fn=None):
+        if float_fn is None:
+            raise ValueError("float lane needs the real-valued counterpart "
+                             "(float_fn) of this table")
+        return float_fn(self.clip(t, lo, hi))
+
+
+class IntLane(_JnpLane):
+    """jnp int32 — the paper's plaintext integer scaling arm.
+
+    Every nonlinearity is a materialized table built by the *same* numpy
+    table function the FHE lane applies, so int-lane results are bit-exact
+    with the TFHE simulator.  Callers own the range discipline: int32
+    arithmetic with the documented shift/clip points keeps every
+    intermediate far below 2³¹ for the supported (≤16-bit message) regime.
+    """
+
+    name = "int"
+
+    def array(self, x):
+        import jax.numpy as jnp
+
+        return jnp.asarray(x, jnp.int32)
+
+    def add(self, a, b):
+        if isinstance(b, (int, np.integer, np.ndarray)):
+            b = self.array(b)
+        return a + b
+
+    def sub(self, a, b):
+        if isinstance(b, (int, np.integer, np.ndarray)):
+            b = self.array(b)
+        return a - b
+
+    def mul_literal(self, t, c):
+        return t * self.array(c)
+
+    def shift_right(self, t, k):
+        import jax
+
+        return jax.lax.shift_right_arithmetic(t, jnp_int32(k))
+
+    def matmul_plain(self, t, w):
+        import jax.numpy as jnp
+
+        return jnp.einsum("...i,io->...o", t, self.array(w))
+
+    def select(self, mask, t, fill):
+        import jax.numpy as jnp
+
+        # mask may be a traced jnp bool (registry backends run under jit)
+        return jnp.where(mask, t, jnp.int32(fill))
+
+    def relu(self, t):
+        import jax.numpy as jnp
+
+        return jnp.maximum(t, 0)
+
+    def abs(self, t):
+        import jax.numpy as jnp
+
+        return jnp.abs(t)
+
+    def lut(self, t, fn, lo, hi, *, float_fn=None, int_fn=None):
+        import jax.numpy as jnp
+
+        if int_fn is not None:
+            return int_fn(jnp.clip(t, lo, hi))
+        table = jnp.asarray(
+            np.asarray(fn(np.arange(lo, hi + 1, dtype=np.int64)),
+                       dtype=np.int64).astype(np.int32))
+        idx = jnp.clip(t, lo, hi) - lo
+        return jnp.take(table, idx, axis=0)
+
+
+def jnp_int32(k: int):
+    import jax.numpy as jnp
+
+    return jnp.int32(k)
+
+
+# ---------------------------------------------------------------------------
+# TFHE-simulated lane
+# ---------------------------------------------------------------------------
+
+class FheSimLane(Lane):
+    """numpy int64 arithmetic + TFHE cost accounting on a shared context.
+
+    Handles are plain ``np.int64`` arrays ("ciphertexts"); the lane owns
+    the :class:`FheContext` so costs from every layer accumulate in one
+    place and :meth:`scope` attributes them per layer.
+    """
+
+    name = "fhe_sim"
+
+    def __init__(self, ctx=None):
+        from repro.fhe.tfhe_sim import FheContext
+
+        self.ctx = ctx if ctx is not None else FheContext()
+
+    # ---- ingest / export ----
+    def array(self, x):
+        return _np_int(x)                   # encryption itself is free
+
+    def to_numpy(self, t):
+        return np.asarray(t).copy()         # decryption
+
+    # ---- structure ----
+    def expand_dims(self, t, axis):
+        return np.expand_dims(t, axis)
+
+    def repeat(self, t, rep, axis):
+        return np.repeat(t, rep, axis=axis)
+
+    def transpose(self, t, axes):
+        return np.transpose(t, axes)
+
+    def reshape(self, t, shape):
+        return np.reshape(t, shape)
+
+    # ---- levelled ----
+    def add(self, a, b):
+        out = a + _np_int(b)
+        self.ctx.count_add(out)
+        return out
+
+    def sub(self, a, b):
+        out = a - _np_int(b)
+        self.ctx.count_add(out)
+        return out
+
+    def neg(self, t):
+        return -t
+
+    def mul_literal(self, t, c):
+        out = t * _np_int(c)
+        self.ctx.count_lit_mul(out)
+        return out
+
+    def shift_right(self, t, k):
+        out = t >> k
+        self.ctx.count_lit_mul(out)
+        return out
+
+    def matmul_plain(self, t, w):
+        w = _np_int(w)
+        out = t @ w
+        n_vec = int(np.prod(t.shape[:-1], dtype=np.int64))
+        d_in, d_out = w.shape
+        self.ctx.count_lit_mul(out, n=n_vec * d_in * d_out)
+        self.ctx.count_add(out, n=n_vec * max(d_in - 1, 0) * d_out)
+        return out
+
+    def sum(self, t, axis, keepdims=False):
+        out = t.sum(axis=axis, keepdims=keepdims)
+        self.ctx.count_add(out, n=max(int(t.size - out.size), 0))
+        return out
+
+    def select(self, mask, t, fill):
+        m = np.asarray(mask, bool)
+        out = np.where(m, t, np.int64(fill))
+        self.ctx.count_lit_mul(out)
+        return out
+
+    def clip(self, t, lo, hi):
+        return np.clip(t, lo, hi)
+
+    # ---- PBS ----
+    def relu(self, t):
+        self.ctx.count_pbs(t)
+        return np.maximum(t, 0)
+
+    def abs(self, t):
+        self.ctx.count_pbs(t)
+        return np.abs(t)
+
+    def max(self, t, axis, keepdims=False):
+        # relu-tree: max(a, b) = b + relu(a − b) — ~1 PBS per element
+        self.ctx.count_pbs(t)
+        return t.max(axis=axis, keepdims=keepdims)
+
+    def masked_max(self, t, mask, axis, keepdims=False):
+        m = np.broadcast_to(np.asarray(mask, bool), t.shape)
+        # the relu-tree runs over attendable wires only: PBS count and
+        # width observation cover just those elements
+        self.ctx._bump("pbs", int(m.sum()))
+        self.ctx._observe(np.where(m, t, 0), at_pbs=True)
+        return np.where(m, t, np.int64(_MASKED_ROW)).max(
+            axis=axis, keepdims=keepdims)
+
+    def lut(self, t, fn, lo, hi, *, float_fn=None, int_fn=None):
+        vals = np.clip(t, lo, hi)
+        self.ctx.count_pbs(vals)
+        return _np_int(fn(vals))
+
+    # ---- ciphertext×ciphertext ----
+    def mul(self, a, b):
+        s = a + b
+        d = a - b
+        self.ctx.count_cmul(s, d)
+        out = (s * s - d * d) // 4
+        self.ctx._observe(out, at_pbs=False)
+        return out
+
+    def dot_scores(self, q, k):
+        qe = q[..., :, None, :]
+        ke = k[..., None, :, :]
+        prod = self.mul(np.broadcast_to(qe, np.broadcast_shapes(
+            qe.shape, ke.shape)).copy(), np.broadcast_to(
+                ke, np.broadcast_shapes(qe.shape, ke.shape)).copy())
+        return self.sum(prod, axis=-1)
+
+    def mix_values(self, p, v):
+        pe = p[..., :, :, None]
+        ve = v[..., None, :, :]
+        shp = np.broadcast_shapes(pe.shape, ve.shape)
+        prod = self.mul(np.broadcast_to(pe, shp).copy(),
+                        np.broadcast_to(ve, shp).copy())
+        return self.sum(prod, axis=-2)
+
+    # ---- cost attribution ----
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        with self.ctx.scope(name):
+            yield self
+
+
+_LANES = {"float": FloatLane, "int": IntLane, "fhe_sim": FheSimLane}
+
+
+def get_lane(name: str, ctx=None) -> Lane:
+    """Lane factory: ``float`` | ``int`` | ``fhe_sim`` (the latter accepts
+    a shared :class:`FheContext` for cross-layer cost accumulation)."""
+    try:
+        cls = _LANES[name]
+    except KeyError:
+        raise ValueError(f"unknown lane {name!r}; known: "
+                         f"{sorted(_LANES)}") from None
+    return cls(ctx) if name == "fhe_sim" else cls()
+
+
+def available_lanes() -> Sequence[str]:
+    return tuple(sorted(_LANES))

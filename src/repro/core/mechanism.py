@@ -170,10 +170,14 @@ class Mechanism:
       * ``"neg_inf"``  masked logits are driven to −inf before Softmax
     ``vjp``: gradient-path hint — ``"analytic"`` (custom VJP, recompute-
     based residuals) or ``"autodiff"``.
+    ``lane_fn``: the lane-generic integer form of the mechanism
+    (``fn(lane, q, k, v, *, mask, **mechanism_kwargs)`` at (..., n, d)
+    per-head layout) — the single implementation behind the ``int`` and
+    ``fhe_sim`` backends *and* the lane-parameterized model forward
+    (DESIGN.md §9).
     ``fhe_circuit`` / ``int_reference``: the raw numpy TFHE circuit and
     raw integer-lane reference the benchmark drivers consume directly
-    (the uniform ``fhe_sim`` / ``int`` backends adapt the same functions
-    to the (b, n, h, d) layout).
+    (both are thin lane dispatches of ``lane_fn``).
     """
     name: str
     description: str
@@ -182,6 +186,7 @@ class Mechanism:
     backends: Mapping[str, BackendFn]
     param_overrides: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
+    lane_fn: Optional[Callable] = None
     fhe_circuit: Optional[Callable] = None
     int_reference: Optional[Callable] = None
 
@@ -264,6 +269,7 @@ def backend_eligible(backend: str, cfg, shapes: AttnShapes,
 
 _traced_plans: set = set()
 _use_kernel_warned = False
+_kind_warned = False
 
 
 def _trace(plan: ExecutionPlan, shapes: Optional[AttnShapes] = None) -> None:
@@ -284,12 +290,22 @@ def _trace(plan: ExecutionPlan, shapes: Optional[AttnShapes] = None) -> None:
 
 
 def resolve_mechanism_name(cfg) -> str:
-    """``cfg.mechanism`` when set, else the legacy ``cfg.kind``."""
-    name = getattr(cfg, "mechanism", None) or getattr(cfg, "kind", None)
-    if not name:
-        raise ValueError("config names no attention mechanism "
-                         "(set .mechanism, or the legacy .kind)")
-    return name
+    """``cfg.mechanism`` when set, else the deprecated ``cfg.kind`` (one
+    ``DeprecationWarning`` per process), else the ``"dotprod"`` default."""
+    global _kind_warned
+    name = getattr(cfg, "mechanism", None)
+    if name:
+        return name
+    kind = getattr(cfg, "kind", None)
+    if kind:
+        if not _kind_warned:
+            _kind_warned = True
+            warnings.warn(
+                "AttentionConfig.kind is deprecated; set mechanism="
+                f"{kind!r} (the registry key) instead",
+                DeprecationWarning, stacklevel=2)
+        return kind
+    return "dotprod"
 
 
 def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
@@ -569,15 +585,16 @@ def _inhibitor_paged(q, k, v, *, mask=None, params, structural=None,
 
 
 def _inhibitor_int(q, k, v, *, mask=None, params, structural=None):
-    from repro.quant.int_attention import int_inhibitor_attention
+    """Lane dispatch: the mechanism's lane_fn on the jnp int32 lane."""
+    from repro.core.lanes import IntLane
+    from repro.quant.int_attention import (lane_attention_heads,
+                                           lane_inhibitor_attention)
 
-    qt, kt, vt = _to_heads(q, k, v)
     gamma_shift, alpha_q = _int_shifts(params, q.shape[-1])
-    m = (jnp.broadcast_to(mask, qt.shape[:2] + (q.shape[1], k.shape[1]))
-         if mask is not None else None)
-    out = int_inhibitor_attention(qt, kt, vt, gamma_shift=gamma_shift,
-                                  alpha_q=alpha_q, mask=m)
-    return out.transpose(0, 2, 1, 3)
+    return lane_attention_heads(
+        IntLane(), lane_inhibitor_attention, q, k, v, mask=mask,
+        gamma_shift=gamma_shift, alpha_q=alpha_q, signed=params.signed,
+        normalize=params.normalize)
 
 
 # ---------------------------------------------------------------------------
@@ -623,41 +640,44 @@ def _dotprod_paged(q, k, v, *, mask=None, params, structural=None,
 
 
 def _dotprod_int(q, k, v, *, mask=None, params, structural=None):
-    from repro.quant.int_attention import int_dot_product_attention
+    """Lane dispatch: the mechanism's lane_fn on the jnp int32 lane."""
+    from repro.core.lanes import IntLane
+    from repro.quant.int_attention import (lane_attention_heads,
+                                           lane_dot_product_attention)
 
-    qt, kt, vt = _to_heads(q, k, v)
     scale_shift, _ = _int_shifts(params, q.shape[-1])
-    m = (jnp.broadcast_to(mask, qt.shape[:2] + (q.shape[1], k.shape[1]))
-         if mask is not None else None)
-    out = int_dot_product_attention(qt, kt, vt, scale_shift=scale_shift,
-                                    mask=m)
-    return out.transpose(0, 2, 1, 3)
+    return lane_attention_heads(
+        IntLane(), lane_dot_product_attention, q, k, v, mask=mask,
+        scale_shift=scale_shift)
 
 
 # ---------------------------------------------------------------------------
-# fhe_sim adapter (numpy circuit simulator; forced-backend only)
+# fhe_sim adapter (lane dispatch onto the TFHE simulator; forced only)
 # ---------------------------------------------------------------------------
 
-def _fhe_backend(circuit, **circuit_kw):
-    """Adapt a (T, d)-per-head numpy TFHE circuit to the uniform layout.
-    Runs outside jit (concrete integer arrays), looping batch × heads."""
+def _fhe_backend(lane_fn, *, use_signed=False, **lane_kw):
+    """Adapt the mechanism's lane_fn, run on a fresh :class:`FheSimLane`,
+    to the uniform (b, n, h, d) layout.  Runs outside jit (concrete
+    integer arrays)."""
     import numpy as np
 
     def fn(q, k, v, *, mask=None, params=None, structural=None):
+        from repro.core import lanes
+        from repro.quant.int_attention import lane_attention_heads
+
         if mask is not None:
             raise ValueError("fhe_sim circuits attend all-to-all; explicit "
                              "masks are unsupported")
-        qn, kn, vn = (np.asarray(jax.device_get(t), dtype=np.int64)
+        lane = lanes.FheSimLane()
+        kw = dict(lane_kw)
+        if use_signed and params is not None:
+            kw["signed"] = params.signed
+            kw["normalize"] = params.normalize
+        qn, kn, vn = (lane.array(np.asarray(jax.device_get(t),
+                                            dtype=np.int64))
                       for t in (q, k, v))
-        b, n, h, d = qn.shape
-        rep = h // kn.shape[2]
-        out = np.zeros((b, n, h, d), np.int64)
-        for bi in range(b):
-            for hi in range(h):
-                res, _ = circuit(qn[bi, :, hi], kn[bi, :, hi // rep],
-                                 vn[bi, :, hi // rep], **circuit_kw)
-                out[bi, :, hi] = res
-        return jnp.asarray(out.astype(np.int32))
+        out = lane_attention_heads(lane, lane_fn, qn, kn, vn, **kw)
+        return jnp.asarray(lane.to_numpy(out).astype(np.int32))
 
     return fn
 
@@ -670,7 +690,9 @@ def _register_builtins() -> None:
     from repro.fhe.circuits import (dotprod_attention_circuit,
                                     inhibitor_attention_circuit)
     from repro.quant.int_attention import (int_dot_product_attention,
-                                           int_inhibitor_attention)
+                                           int_inhibitor_attention,
+                                           lane_dot_product_attention,
+                                           lane_inhibitor_attention)
 
     register_mechanism(Mechanism(
         name="dotprod",
@@ -683,9 +705,10 @@ def _register_builtins() -> None:
             "pallas": _dotprod_pallas,
             "paged": _dotprod_paged,
             "int": _dotprod_int,
-            "fhe_sim": _fhe_backend(dotprod_attention_circuit,
-                                    scale_shift=2),
+            "fhe_sim": _fhe_backend(lane_dot_product_attention,
+                                    scale_shift=2, frac_bits=4),
         },
+        lane_fn=lane_dot_product_attention,
         fhe_circuit=dotprod_attention_circuit,
         int_reference=int_dot_product_attention,
     ))
@@ -698,10 +721,9 @@ def _register_builtins() -> None:
         "pallas": _inhibitor_pallas,
         "paged": _inhibitor_paged,
         "int": _inhibitor_int,
-        # the paper's TFHE circuit realizes the unsigned (eq. 5 + 6) form
-        # on integer lanes — registered for both variants as the
-        # encrypted execution arm
-        "fhe_sim": _fhe_backend(inhibitor_attention_circuit,
+        # the encrypted arm runs the same lane_fn on the TFHE simulator;
+        # ``signed`` follows the mechanism (eq. 7 doubles the ReLU LUTs)
+        "fhe_sim": _fhe_backend(lane_inhibitor_attention, use_signed=True,
                                 gamma_shift=1, alpha_q=1),
     }
     register_mechanism(Mechanism(
@@ -711,6 +733,7 @@ def _register_builtins() -> None:
         vjp="analytic",
         backends=dict(_inhibitor_backends),
         param_overrides={"signed": True},
+        lane_fn=lane_inhibitor_attention,
         fhe_circuit=inhibitor_attention_circuit,
         int_reference=int_inhibitor_attention,
     ))
@@ -721,6 +744,7 @@ def _register_builtins() -> None:
         vjp="analytic",
         backends=dict(_inhibitor_backends),
         param_overrides={"signed": False},
+        lane_fn=lane_inhibitor_attention,
         fhe_circuit=inhibitor_attention_circuit,
         int_reference=int_inhibitor_attention,
     ))

@@ -5,5 +5,9 @@ from repro.fhe.circuits import (  # noqa: F401
     inhibitor_attention_circuit,
 )
 from repro.fhe.cost import circuit_seconds, describe, pbs_seconds  # noqa: F401
-from repro.fhe.params import TfheParams, select_params  # noqa: F401
+from repro.fhe.params import (  # noqa: F401
+    TfheParams,
+    select_params,
+    select_params_for_report,
+)
 from repro.fhe.tfhe_sim import EncTensor, FheContext, decrypt, encrypt  # noqa: F401

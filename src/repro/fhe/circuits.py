@@ -1,9 +1,13 @@
-"""Both attention mechanisms as TFHE circuits over :class:`EncTensor`.
+"""Both attention mechanisms as TFHE circuits — lane dispatches.
 
 These are the encrypted counterparts of the paper's scaling experiment
-(single head, embedding dim ≤ 4, integers up to 8-bit) and of
-:mod:`repro.quant.int_attention`.  Each returns the exact integer result
-plus the per-circuit cost summary used by Tables 2 and 4.
+(single head, embedding dim ≤ 4, integers up to 8-bit).  Since the lane
+refactor (DESIGN.md §9) the circuit *is* the lane-generic mechanism from
+:mod:`repro.quant.int_attention` executed on a :class:`FheSimLane` — one
+algorithm shared with the plaintext int arm, bit-exact by construction —
+and these wrappers only keep the historical (T, d)-per-head numpy
+signature the Table 2/4 drivers and tests consume.  Each returns the
+exact integer result plus the per-circuit cost summary.
 """
 
 from __future__ import annotations
@@ -12,7 +16,11 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.fhe.tfhe_sim import EncTensor, FheContext, encrypt
+from repro.fhe.tfhe_sim import FheContext
+
+# NOTE: the lane machinery is imported inside the wrappers — this module
+# is imported by repro.core.mechanism during its builtin registration, so
+# a top-level import of repro.core.lanes would be circular.
 
 
 def inhibitor_attention_circuit(
@@ -22,35 +30,24 @@ def inhibitor_attention_circuit(
     *,
     gamma_shift: int = 0,
     alpha_q: int = 0,
+    signed: bool = False,
     ctx: Optional[FheContext] = None,
 ) -> Tuple[np.ndarray, dict]:
-    """Encrypted Inhibitor attention (paper eq. 5 + 6, integer form).
+    """Encrypted Inhibitor attention (paper eq. 5 + 6/7, integer form).
 
     PBS inventory per (T, d) single head:
       * scores:     T²·d  abs-LUTs  (+ T² shift-ReLU LUTs when α > 0)
-      * inhibition: T²·d  ReLU-LUTs
+      * inhibition: T²·d  ReLU-LUTs  (doubled when ``signed``)
     No ciphertext multiplications at all — additions are levelled.
     """
-    ctx = ctx or FheContext()
-    eq, _ = encrypt(q, ctx)
-    ek, _ = encrypt(k, ctx)
-    ev, _ = encrypt(v, ctx)
-    T, d = q.shape
+    from repro.core.lanes import FheSimLane
+    from repro.quant.int_attention import lane_inhibitor_attention
 
-    # Z[i,j] = Σ_k |q_ik − k_jk|  >> gamma_shift
-    diff = EncTensor(eq.values[:, None, :] - ek.values[None, :, :], ctx)
-    ctx.count_add(diff.values)
-    z = diff.abs().sum(axis=-1)
-    if gamma_shift:
-        z = z.shift_right(gamma_shift)
-    if alpha_q:
-        z = (z - alpha_q).relu()
-
-    # H[i,k] = Σ_j relu(V[j,k] − Z[i,j])
-    spread = EncTensor(ev.values[None, :, :] - z.values[:, :, None], ctx)
-    ctx.count_add(spread.values)
-    h = spread.relu().sum(axis=1)
-    return h.values, ctx.summary()
+    lane = FheSimLane(ctx)
+    h = lane_inhibitor_attention(
+        lane, lane.array(q), lane.array(k), lane.array(v),
+        gamma_shift=gamma_shift, alpha_q=alpha_q, signed=signed)
+    return lane.to_numpy(h), lane.ctx.summary()
 
 
 def dotprod_attention_circuit(
@@ -66,50 +63,19 @@ def dotprod_attention_circuit(
 
     PBS inventory per (T, d) single head:
       * QKᵀ:      2·T²·d  (cipher muls, 2 PBS each)
-      * softmax:  T²  exp-LUTs + T² cipher muls with the reciprocal
-                  (2 PBS each) + T reciprocal LUTs
+      * softmax:  T²  max-tree + T² exp-LUTs + T² cipher muls with the
+                  reciprocal (2 PBS each) + T reciprocal LUTs
       * S·V:      2·T²·d  (cipher muls)
-    ≈ 4·T²·d + 3·T² PBS — about twice the inhibitor, with wider messages
+    ≈ 4·T²·d + 5·T² PBS — about twice the inhibitor, with wider messages
     (the products' a±b PBS inputs add ~1 bit; accumulated scores add more).
+    The exp window is clipped to [−15, 0]: deeper scores quantize to 0
+    probability anyway at paper-scale fractional precision.
     """
-    ctx = ctx or FheContext()
-    eq, _ = encrypt(q, ctx)
-    ek, _ = encrypt(k, ctx)
-    ev, _ = encrypt(v, ctx)
-    T, d = q.shape
+    from repro.core.lanes import FheSimLane
+    from repro.quant.int_attention import lane_dot_product_attention
 
-    # scores: S[i,j] = Σ_k q_ik · k_jk  (cipher×cipher)
-    qe = EncTensor(np.broadcast_to(eq.values[:, None, :], (T, T, d)).copy(),
-                   ctx)
-    ke = EncTensor(np.broadcast_to(ek.values[None, :, :], (T, T, d)).copy(),
-                   ctx)
-    s = qe.mul_cipher(ke).sum(axis=-1)
-    if scale_shift:
-        s = s.shift_right(scale_shift)
-
-    # integer softmax surrogate: max-shifted exp2 LUT, fixed-point.
-    # The exp window is clipped to [-15, 0]: deeper scores quantize to 0
-    # probability anyway at 4 fractional bits (paper-scale message spaces).
-    m = s.values.max(axis=-1, keepdims=True)       # max tree: b + relu(a−b),
-    ctx.count_pbs(s.values)                        # ~1 PBS per element
-    dshift = np.clip(s.values - m, -15, 0)
-    ctx.count_add(dshift)
-    p = EncTensor(dshift, ctx).lut(
-        lambda x: (np.exp2(np.maximum(x, -15).astype(np.float64))
-                   * (1 << softmax_frac_bits)).astype(np.int64))
-    denom = p.sum(axis=-1)
-    # reciprocal LUT of the row sum, then cipher multiply
-    recip = denom.lut(
-        lambda x: ((1 << (2 * softmax_frac_bits))
-                   // np.maximum(x, 1)).astype(np.int64))
-    pr = p.mul_cipher(EncTensor(
-        np.broadcast_to(recip.values[:, None], p.values.shape).copy(), ctx))
-    pr = pr.shift_right(softmax_frac_bits)
-
-    # H = S·V (cipher×cipher) with fixed-point renormalization
-    pe = EncTensor(np.broadcast_to(pr.values[:, :, None], (T, T, d)).copy(),
-                   ctx)
-    ve = EncTensor(np.broadcast_to(ev.values[None, :, :], (T, T, d)).copy(),
-                   ctx)
-    h = pe.mul_cipher(ve).sum(axis=1).shift_right(softmax_frac_bits)
-    return h.values, ctx.summary()
+    lane = FheSimLane(ctx)
+    h = lane_dot_product_attention(
+        lane, lane.array(q), lane.array(k), lane.array(v),
+        scale_shift=scale_shift, frac_bits=softmax_frac_bits, exp_clip=15)
+    return lane.to_numpy(h), lane.ctx.summary()

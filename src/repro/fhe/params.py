@@ -45,3 +45,29 @@ def select_params(max_bits_at_pbs: int) -> TfheParams:
     raise ValueError(
         f"message width {max_bits_at_pbs} bits exceeds the 16-bit TFHE "
         "table-lookup ceiling (paper §Computational Efficiency)")
+
+
+def select_params_for_report(report) -> TfheParams:
+    """Parameter selection from a *full-block* per-layer cost report.
+
+    ``report`` maps layer/scope name → cost summary (the
+    :meth:`~repro.fhe.tfhe_sim.FheContext.scope_report` of an end-to-end
+    lane forward).  One parameter set must serve every PBS in the
+    circuit, so selection keys on the block-level ``max_bits_at_pbs``
+    high-water — not just the attention op's — and a width beyond the
+    supported table fails loudly *naming the offending layer*, which is
+    the actionable signal (lower that layer's fixed-point precision or
+    add a rescale before its LUT).
+    """
+    if not report:
+        raise ValueError("empty cost report: run a lane forward on the "
+                         "fhe_sim lane before selecting parameters")
+    worst_name, worst = max(report.items(),
+                            key=lambda kv: kv[1].get("max_bits_at_pbs", 0))
+    worst_bits = worst.get("max_bits_at_pbs", 0)
+    try:
+        return select_params(worst_bits)
+    except ValueError as e:
+        raise ValueError(
+            f"layer {worst_name!r} needs {worst_bits}-bit PBS messages: "
+            f"{e}") from None

@@ -10,6 +10,9 @@ while a :class:`FheContext` records, per TFHE's actual cost structure:
                    element; ciphertext×ciphertext multiplication = 2 PBS per
                    element via the paper's eq. 1–2 identity
                    ``ab = PBS(x²/4; a+b) − PBS(x²/4; a−b)``.
+  * ``cmuls``    — ciphertext×ciphertext multiplications (the op the
+                   inhibitor exists to avoid; each one also costs 2 PBS,
+                   already included in ``pbs``).
   * ``adds``     — ciphertext additions/subtractions (levelled, cheap).
   * ``lit_muls`` — literal (plaintext-constant) multiplications (cheap).
   * ``max_bits`` — the message-space bit-width high-water mark: every
@@ -22,14 +25,23 @@ product costs a (k+1)-bit table — this is exactly why the paper's dot-
 product circuits need 1–2 bits more than the inhibitor circuits (their
 last-two-column gap in Table 2), and the simulator reproduces it for free
 by tracking ranges of PBS *inputs*.
+
+Per-layer attribution: :meth:`FheContext.scope` opens a named accounting
+scope; every counter update lands in the active scope as well as the
+totals.  ``scope_report()`` returns the per-scope summaries — the data the
+full-block parameter selection (:func:`repro.fhe.params.select_params_for_report`)
+and the per-layer cost tables are built from.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
+
+_COUNTERS = ("pbs", "cmuls", "adds", "lit_muls")
 
 
 @dataclasses.dataclass
@@ -37,39 +49,84 @@ class FheContext:
     """Operation counters + message-space tracking for one circuit."""
 
     pbs: int = 0
+    cmuls: int = 0
     adds: int = 0
     lit_muls: int = 0
     max_bits: int = 0           # widest signed message seen at a PBS input
     max_bits_any: int = 0       # widest signed message anywhere
     trace: bool = False
+    per_scope: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    _scope: Optional[str] = None
 
+    # ---- scoping -----------------------------------------------------
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        """Attribute every counter update inside the block to ``name``
+        (in addition to the totals).  Scopes do not nest — the innermost
+        name wins, which is what per-layer attribution wants."""
+        prev = self._scope
+        self._scope = name
+        self.per_scope.setdefault(name, {
+            "pbs": 0, "cmuls": 0, "adds": 0, "lit_muls": 0,
+            "max_bits_at_pbs": 0, "max_bits_any": 0})
+        try:
+            yield self
+        finally:
+            self._scope = prev
+
+    def _bump(self, counter: str, n: int):
+        setattr(self, counter, getattr(self, counter) + n)
+        if self._scope is not None:
+            self.per_scope[self._scope][counter] += n
+
+    # ---- width tracking ----------------------------------------------
     def _observe(self, arr: np.ndarray, at_pbs: bool):
         amax = int(np.max(np.abs(arr))) if arr.size else 0
         bits = max(1, int(amax).bit_length()) + 1  # signed representation
         self.max_bits_any = max(self.max_bits_any, bits)
         if at_pbs:
             self.max_bits = max(self.max_bits, bits)
+        if self._scope is not None:
+            s = self.per_scope[self._scope]
+            s["max_bits_any"] = max(s["max_bits_any"], bits)
+            if at_pbs:
+                s["max_bits_at_pbs"] = max(s["max_bits_at_pbs"], bits)
 
+    # ---- counting (the only mutation API — scope attribution lives
+    # here, so EncTensor and FheSimLane both route through it) ---------
     def count_pbs(self, arr: np.ndarray, n_per_element: int = 1):
-        self.pbs += int(arr.size) * n_per_element
+        self._bump("pbs", int(arr.size) * n_per_element)
         self._observe(arr, at_pbs=True)
 
-    def count_add(self, arr: np.ndarray):
-        self.adds += int(arr.size)
+    def count_cmul(self, s: np.ndarray, d: np.ndarray):
+        """One ciphertext multiply per element: 2 PBS over the packed
+        sums/differences a±b (eq. 1), plus the surrounding adds."""
+        self._bump("cmuls", int(s.size))
+        self.count_pbs(s, 1)
+        self.count_pbs(d, 1)
+        self._bump("adds", 3 * int(s.size))
+
+    def count_add(self, arr: np.ndarray, n: Optional[int] = None):
+        self._bump("adds", int(arr.size) if n is None else int(n))
         self._observe(arr, at_pbs=False)
 
-    def count_lit_mul(self, arr: np.ndarray):
-        self.lit_muls += int(arr.size)
+    def count_lit_mul(self, arr: np.ndarray, n: Optional[int] = None):
+        self._bump("lit_muls", int(arr.size) if n is None else int(n))
         self._observe(arr, at_pbs=False)
 
     def summary(self) -> dict:
         return {
             "pbs": self.pbs,
+            "cmuls": self.cmuls,
             "adds": self.adds,
             "lit_muls": self.lit_muls,
             "max_bits_at_pbs": self.max_bits,
             "max_bits_any": self.max_bits_any,
         }
+
+    def scope_report(self) -> Dict[str, dict]:
+        """Per-scope summaries (insertion order = execution order)."""
+        return {k: dict(v) for k, v in self.per_scope.items()}
 
 
 class EncTensor:
@@ -130,8 +187,7 @@ class EncTensor:
     def sum(self, axis=None) -> "EncTensor":
         out = self.values.sum(axis=axis)
         # a tree of ciphertext additions
-        self.ctx.adds += max(int(self.values.size - out.size), 0)
-        self.ctx._observe(out, at_pbs=False)
+        self.ctx.count_add(out, n=max(int(self.values.size - out.size), 0))
         return EncTensor(out, self.ctx)
 
     # ---- PBS ops ----
@@ -164,9 +220,7 @@ class EncTensor:
         """
         s = self.values + other.values
         d = self.values - other.values
-        self.ctx.count_pbs(s, 1)
-        self.ctx.count_pbs(d, 1)
-        self.ctx.adds += 2 * int(s.size) + int(s.size)
+        self.ctx.count_cmul(s, d)
         out = (s * s - d * d) // 4
         self.ctx._observe(out, at_pbs=False)
         return EncTensor(out, self.ctx)

@@ -173,6 +173,12 @@ def _cost_vector(compiled) -> dict:
     return out
 
 
+def _mech_name(cfg):
+    from repro.core.mechanism import resolve_mechanism_name
+
+    return resolve_mechanism_name(cfg.attention)
+
+
 def build_cell(arch: str, shape_name: str, multi_pod: bool,
                attention_kind=None, *, opts=None, layer_extrapolate=True):
     """Lower+compile one cell. Returns the result record dict.
@@ -230,7 +236,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
 
     record = {
         "arch": arch,
-        "attention_kind": attention_kind or cfg.attention.kind,
+        "attention_kind": attention_kind or _mech_name(cfg),
         "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": 512 if multi_pod else 256,

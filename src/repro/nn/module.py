@@ -107,8 +107,16 @@ def split_keys(key: jax.Array, n: int) -> list:
 
 
 def fold_key(key: jax.Array, name: str) -> jax.Array:
-    """Deterministically derive a sub-key from a string name."""
-    h = hash(name) % (2**31 - 1)
+    """Deterministically derive a sub-key from a string name.
+
+    Uses a *stable* hash: python's builtin ``hash()`` is salted per
+    process (PYTHONHASHSEED), which silently made every init
+    irreproducible across runs — checkpoint-free restart exactness and
+    cross-process parity tests depend on this being process-invariant.
+    """
+    import zlib
+
+    h = zlib.crc32(name.encode("utf-8")) % (2**31 - 1)
     return jax.random.fold_in(key, h)
 
 

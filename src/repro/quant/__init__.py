@@ -10,5 +10,9 @@ from repro.quant.fake_quant import (  # noqa: F401
 from repro.quant.int_attention import (  # noqa: F401
     int_dot_product_attention,
     int_inhibitor_attention,
+    lane_attention_heads,
+    lane_dot_product_attention,
+    lane_inhibitor_attention,
     quantize_qkv,
 )
+from repro.quant.ptq import PtqConfig, QuantizedLM, ptq_lm  # noqa: F401

@@ -1,28 +1,62 @@
-"""Integer-arithmetic attention paths (paper's plaintext scaling experiment).
+"""Integer-arithmetic attention, written once against the lane op set.
 
-These mirror the paper's low-level Rust int16 implementation: both
-mechanisms run on int32 lanes with integer-only ops so the comparison is
-not biased by float-pipeline optimizations (paper §Scaling experiments).
+Both mechanisms are implemented as *lane-generic* functions
+(:func:`lane_inhibitor_attention`, :func:`lane_dot_product_attention`)
+over :mod:`repro.core.lanes`: run them on the ``int`` lane and you get
+the paper's plaintext integer scaling arm (jit-compiled jnp int32); run
+them on the ``fhe_sim`` lane and the *same* code is the TFHE circuit with
+PBS/bit-width accounting — bit-exact with the int lane by construction.
+The legacy entry points (:func:`int_inhibitor_attention`,
+:func:`int_dot_product_attention`) are thin int-lane wrappers.
 
-  * inhibitor: |q − k| sums (int add/abs), shift/ReLU (int max), value
-    inhibition (int sub/max) — *no variable×variable products at all*.
-  * dot-product: int MACs for QKᵀ and S·V plus an integer-friendly
-    Softmax surrogate (shift-normalized exp LUT as used by quantized
-    transformer deployments); products force int32 accumulators from int8/16
-    inputs — the "expansion to double precision" the paper refers to.
+  * inhibitor: |q − k| sums (add/abs), shift/ReLU, value inhibition
+    (sub/ReLU) — *no ciphertext×ciphertext products at all*.
+  * dot-product: cipher–cipher MACs for QKᵀ and S·V plus the integer
+    Softmax surrogate (max-subtract, exp2 LUT on the clamped difference,
+    reciprocal LUT of the row sum, fixed-point renormalize).  The
+    reciprocal is *multiplied back* as one more cipher–cipher product —
+    the same algorithm on every integer lane, so the encrypted circuit
+    and the plaintext int arm agree bit for bit.
 
-Used by benchmarks/table3_plaintext.py for the timing-vs-T scaling law and
-by tests for exactness against the float reference at quantized inputs.
+Fixed-point range discipline (the old per-element ``(p << frac) // denom``
+divide could overflow 32-bit lanes at large ``frac_bits``·``n_k``): with
+``p ≤ denom`` and ``recip ≤ 2^{2·frac_bits}``, every product here is
+bounded by ``2^{2·frac_bits + 1}`` and the S·V accumulation by
+``2^{frac_bits}·max|V|`` (probabilities sum to one), independent of
+``n_k``.  ``frac_bits`` is capped at 12 to keep int32 headroom.
+
+Masking is cleartext (attention structure is public): masked pairs are
+excluded from the combining sums — which also makes a *fully masked row
+yield zero* instead of the uniform average the old ``-2^30`` score
+sentinel produced.
+
+Used by benchmarks/table3_plaintext.py for the timing-vs-T scaling law,
+by :mod:`repro.fhe.circuits` (Tables 2/4), and by the lane-parameterized
+model forward in :mod:`repro.models.transformer`.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.quant.fake_quant import QuantConfig, compute_scale, quantize
+
+if TYPE_CHECKING:   # imported lazily at runtime: repro.core.mechanism
+    from repro.core.lanes import Lane      # imports this module while the
+else:                                      # core package is initializing
+    Lane = "Lane"
+
+
+def _int_lane():
+    from repro.core.lanes import IntLane
+
+    return IntLane()
+
+_COUNT_FRAC = 8     # fixed-point bits for the key-count normalization
 
 
 def quantize_qkv(q, k, v, bits: int = 8) -> Tuple:
@@ -35,51 +69,163 @@ def quantize_qkv(q, k, v, bits: int = 8) -> Tuple:
             s)
 
 
+def _count_literal(mask, n_k: int, frac_base: int):
+    """Cleartext attendable-key-count reciprocal as an adaptive fixed-
+    point literal (the mask is public, so this is a literal multiply).
+    Since the inhibition sum is bounded by ``cnt·max|V|``, the rescaled
+    product stays under ``2^frac·max|V|`` independent of the count —
+    int32-safe."""
+    from repro.core.lanes import reciprocal_literal
+
+    if mask is None:
+        return reciprocal_literal(n_k, base_bits=frac_base)
+    return reciprocal_literal(n_k, count=mask.sum(-1).clip(1),
+                              base_bits=frac_base)
+
+
+# ---------------------------------------------------------------------------
+# Lane-generic mechanisms: q (..., n_q, d); k, v (..., n_k, d);
+# mask — cleartext bool, broadcastable to (..., n_q, n_k)
+# ---------------------------------------------------------------------------
+
+def lane_inhibitor_attention(
+    lane: Lane,
+    q, k, v,
+    *,
+    gamma_shift: int = 0,     # score scale as a right-shift (γ = 2^shift)
+    alpha_q: int = 0,         # quantized score shift α (integer units)
+    signed: bool = False,     # eq. 7 (signed) vs eq. 6 (unsigned)
+    mask=None,
+    normalize: bool = False,
+):
+    """Inhibitor attention on any lane (paper eq. 5 + 6/7, integer form).
+
+    Z = (Σ|q−k|) >> gamma_shift; H = Σ_j (V − Z)⁺ [− (−V − Z)⁺ if signed],
+    masked pairs excluded.  Ops: sub, abs, add, shift, ReLU — zero
+    ciphertext×ciphertext products, which is the paper's whole point.
+    """
+    qe = lane.expand_dims(q, -2)                       # (..., n_q, 1, d)
+    ke = lane.expand_dims(k, -3)                       # (..., 1, n_k, d)
+    z = lane.sum(lane.abs(lane.sub(qe, ke)), axis=-1)  # (..., n_q, n_k)
+    if gamma_shift:
+        z = lane.shift_right(z, gamma_shift)
+    if alpha_q:
+        z = lane.relu(lane.sub(z, alpha_q))
+
+    ve = lane.expand_dims(v, -3)                       # (..., 1, n_k, d)
+    ze = lane.expand_dims(z, -1)                       # (..., n_q, n_k, 1)
+    inh = lane.relu(lane.sub(ve, ze))
+    if signed:
+        inh = lane.sub(inh, lane.relu(lane.sub(lane.neg(ve), ze)))
+    if mask is not None:
+        inh = lane.select(mask[..., None], inh, 0)
+    h = lane.sum(inh, axis=-2)                         # (..., n_q, d)
+    if normalize:
+        c, f = _count_literal(mask, lane.shape(k)[-2], _COUNT_FRAC)
+        c = c if mask is None else c[..., None]
+        # two-step rescale: pre-shifting h keeps the literal product
+        # under 2^16·max|V| regardless of n_k (one multiply at
+        # f = 8 + log2(n_k) fraction bits could wrap int32 lanes); the
+        # truncation it adds is ≤ 2^(f-16)/cnt output units
+        pre = max(0, f - 16)
+        if pre:
+            h = lane.shift_right(h, pre)
+        h = lane.shift_right(lane.mul_literal(h, c), f - pre)
+    return h
+
+
+def lane_dot_product_attention(
+    lane: Lane,
+    q, k, v,
+    *,
+    scale_shift: int = 0,
+    frac_bits: int = 8,
+    exp_clip: int = 15,
+    mask=None,
+    normalize: bool = False,   # softmax already normalizes; kept for symmetry
+):
+    """Dot-product attention on any lane (the paper's comparison arm).
+
+    QKᵀ cipher MACs → shift scale → integer softmax surrogate (max via the
+    relu-tree, exp2 LUT over the clamped difference, reciprocal LUT of the
+    row sum multiplied back) → fixed-point S·V.  With a mask, the row max
+    runs over the *attendable* subset only (the mask is public, so the
+    relu-tree simply skips masked wires): fixed-point softmax is not
+    shift-invariant past the exp window, so a dominant masked score would
+    otherwise quantize every attendable probability to zero — and a −inf
+    sentinel would widen the max/exp PBS message space.
+    """
+    del normalize
+    if frac_bits > 12:
+        raise ValueError(
+            f"frac_bits={frac_bits} > 12: fixed-point products reach "
+            "2^(2*frac_bits+1) and would overflow 32-bit integer lanes")
+    fb = frac_bits
+    s = lane.dot_scores(q, k)                          # (..., n_q, n_k)
+    if scale_shift:
+        s = lane.shift_right(s, scale_shift)
+
+    if mask is not None:
+        m = lane.masked_max(s, mask, axis=-1, keepdims=True)
+    else:
+        m = lane.max(s, axis=-1, keepdims=True)
+    d = lane.sub(s, m)
+    p = lane.lut(
+        d,
+        lambda x: (np.exp2(x.astype(np.float64)) * (1 << fb)).astype(
+            np.int64),
+        -exp_clip, 0,
+        float_fn=lambda t: jnp.exp2(t) * float(1 << fb))
+    if mask is not None:
+        p = lane.select(mask, p, 0)                    # excluded, not -inf
+    denom = lane.sum(p, axis=-1, keepdims=True)
+    n_k = lane.shape(k)[-2]
+    recip = lane.lut(
+        denom,
+        lambda x: (1 << (2 * fb)) // np.maximum(x, 1),
+        0, int(n_k) << fb,
+        float_fn=lambda x: float(1 << (2 * fb)) / jnp.maximum(x, 1e-6),
+        # the table over row sums has n_k·2^fb entries — the int lane
+        # evaluates the bit-identical division instead of baking a
+        # multi-MB gather constant into the jaxpr at large n_k
+        int_fn=lambda x: (1 << (2 * fb)) // jnp.maximum(x, 1))
+    pr = lane.shift_right(lane.mul(p, recip), fb)      # probs, fb frac bits
+    out = lane.mix_values(pr, v)
+    return lane.shift_right(out, fb)
+
+
+def lane_attention_heads(lane: Lane, lane_fn, q, k, v, *, mask=None, **kw):
+    """Adapt the uniform (b, n, h|h_kv, d) layout to the per-head lane
+    mechanisms: GQA-repeat kv heads, run at (b, h, n, d), restore layout.
+    ``mask`` (cleartext, (b|1, 1, n_q, n_k)) broadcasts over heads."""
+    rep = lane.shape(q)[2] // lane.shape(k)[2]
+    qt = lane.transpose(q, (0, 2, 1, 3))
+    kt = lane.transpose(lane.repeat(k, rep, 2) if rep > 1 else k,
+                        (0, 2, 1, 3))
+    vt = lane.transpose(lane.repeat(v, rep, 2) if rep > 1 else v,
+                        (0, 2, 1, 3))
+    out = lane_fn(lane, qt, kt, vt, mask=mask, **kw)
+    return lane.transpose(out, (0, 2, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Legacy int32 entry points (thin int-lane wrappers)
+# ---------------------------------------------------------------------------
+
 def int_inhibitor_attention(
     qi: jax.Array,        # (..., n_q, d) int32
     ki: jax.Array,        # (..., n_k, d) int32
     vi: jax.Array,        # (..., n_k, d) int32
     *,
-    gamma_shift: int = 0,     # score scale as a right-shift (γ = 2^shift·d?)
-    alpha_q: int = 0,         # quantized score shift α
+    gamma_shift: int = 0,
+    alpha_q: int = 0,
+    signed: bool = False,
     mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Integer inhibitor attention (eq. 5/6 on int lanes).
-
-    Z = (Σ|q−k|) >> gamma_shift; H = Σ_j max(V − Z, 0) with masked pairs
-    excluded. Integer ops only: sub, abs, add, shift, max.
-    """
-    z = jnp.sum(jnp.abs(qi[..., :, None, :] - ki[..., None, :, :]),
-                axis=-1)                                   # (..., n_q, n_k)
-    z = jax.lax.shift_right_arithmetic(z, gamma_shift)
-    if alpha_q:
-        z = jnp.maximum(z - alpha_q, 0)
-    if mask is not None:
-        inhibited = jnp.maximum(vi[..., None, :, :] - z[..., :, :, None], 0)
-        inhibited = inhibited * mask[..., None].astype(inhibited.dtype)
-        return jnp.sum(inhibited, axis=-2)
-    return jnp.sum(
-        jnp.maximum(vi[..., None, :, :] - z[..., :, :, None], 0), axis=-2)
-
-
-def _int_softmax_surrogate(scores: jax.Array, frac_bits: int = 8):
-    """Integer Softmax surrogate: shift-normalized exp2 LUT.
-
-    scores: int32. Returns fixed-point probabilities with ``frac_bits``
-    fractional bits (int32). This is the standard integer-only softmax
-    used in quantized deployments (max-subtract, exp2 via LUT on the
-    clamped difference, fixed-point normalize).
-    """
-    m = jnp.max(scores, axis=-1, keepdims=True)
-    d = jnp.clip(scores - m, -31, 0)
-    # exp2 LUT: 2^d in fixed point (d in [-31, 0])
-    lut = (2.0 ** jnp.arange(-31, 1, dtype=jnp.float32)
-           * (1 << frac_bits)).astype(jnp.int32)
-    p = lut[(d + 31).astype(jnp.int32)]
-    denom = jnp.sum(p, axis=-1, keepdims=True)
-    # fixed-point division
-    return ((p.astype(jnp.int64) << frac_bits)
-            // jnp.maximum(denom, 1).astype(jnp.int64)).astype(jnp.int32)
+    """Integer inhibitor attention (eq. 5/6/7 on int32 lanes)."""
+    return lane_inhibitor_attention(
+        _int_lane(), qi, ki, vi, gamma_shift=gamma_shift, alpha_q=alpha_q,
+        signed=signed, mask=mask)
 
 
 def int_dot_product_attention(
@@ -91,17 +237,7 @@ def int_dot_product_attention(
     mask: Optional[jax.Array] = None,
     frac_bits: int = 8,
 ) -> jax.Array:
-    """Integer dot-product attention baseline (paper's comparison arm).
-
-    QKᵀ int MACs -> shift scale -> integer softmax surrogate -> fixed-point
-    S·V. Output carries ``frac_bits`` fractional bits divided out at the
-    end (still integer ops).
-    """
-    s = jnp.einsum("...qd,...kd->...qk", qi, ki)           # int32 MACs
-    s = jax.lax.shift_right_arithmetic(s, scale_shift)
-    if mask is not None:
-        s = jnp.where(mask, s, jnp.int32(-(1 << 30)))
-    p = _int_softmax_surrogate(s, frac_bits)               # (..., q, k) fp
-    out = jnp.einsum("...qk,...kd->...qd", p.astype(jnp.int64),
-                     vi.astype(jnp.int64))
-    return jax.lax.shift_right_arithmetic(out, frac_bits).astype(jnp.int32)
+    """Integer dot-product attention baseline (paper's comparison arm)."""
+    return lane_dot_product_attention(
+        _int_lane(), qi, ki, vi, scale_shift=scale_shift,
+        frac_bits=frac_bits, mask=mask)

@@ -63,7 +63,7 @@ def test_train_step_smoke(rng, arch):
 def test_inhibitor_variant_smoke(rng, arch):
     """The paper's mechanism drops into every attention-bearing arch."""
     cfg = get_config(f"{arch}@inhibitor").reduced()
-    assert cfg.attention.kind == "inhibitor"
+    assert cfg.attention.mechanism == "inhibitor"
     api = get_model(cfg)
     params = unbox(api.init(jax.random.PRNGKey(0)))
     batch = _batch_for(api, cfg, rng)

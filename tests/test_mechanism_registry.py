@@ -236,6 +236,8 @@ def test_legacy_kind_still_plans():
 # ---------------------------------------------------------------------------
 
 def test_int_backend_matches_raw_reference(rng):
+    """The signed mechanism runs the *signed* integer form (the legacy
+    adapter silently dropped to unsigned — a masked sign bug)."""
     from repro.quant.int_attention import int_inhibitor_attention
 
     cfg = _cfg("inhibitor", score_scale=4.0, score_shift=1.0, causal=False)
@@ -252,9 +254,12 @@ def test_int_backend_matches_raw_reference(rng):
     qt = q.transpose(0, 2, 1, 3)
     kt = _repeat_kv(k, 2).transpose(0, 2, 1, 3)
     vt = _repeat_kv(v, 2).transpose(0, 2, 1, 3)
-    ref = int_inhibitor_attention(qt, kt, vt, gamma_shift=2, alpha_q=1)
+    ref = int_inhibitor_attention(qt, kt, vt, gamma_shift=2, alpha_q=1,
+                                  signed=True)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.asarray(ref.transpose(0, 2, 1, 3)))
+    un = int_inhibitor_attention(qt, kt, vt, gamma_shift=2, alpha_q=1)
+    assert np.any(np.asarray(out) != np.asarray(un.transpose(0, 2, 1, 3)))
 
 
 def test_fhe_sim_backend_matches_circuit():
@@ -276,9 +281,59 @@ def test_fhe_sim_backend_matches_circuit():
                                                score_shift=0.0,
                                                normalize=False,
                                                kv_chunk=256))
+    # the signed mechanism's encrypted arm runs the signed circuit
     ref, _ = inhibitor_attention_circuit(q[0, :, 0], k[0, :, 0], v[0, :, 0],
-                                         gamma_shift=1, alpha_q=1)
+                                         gamma_shift=1, alpha_q=1,
+                                         signed=True)
     np.testing.assert_array_equal(np.asarray(out)[0, :, 0], ref)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (PR 1): kind / use_kernel warn once and plan exactly
+# like their explicit replacements
+# ---------------------------------------------------------------------------
+
+def test_kind_shim_warns_once_and_plans_like_mechanism():
+    import warnings as W
+
+    import repro.core.mechanism as M
+
+    M._kind_warned = False                  # re-arm the one-shot warning
+    legacy = AttentionConfig(kind="inhibitor_unsigned")
+    explicit = AttentionConfig(mechanism="inhibitor_unsigned")
+    shapes = _shapes(explicit, 16, 16)
+    with pytest.warns(DeprecationWarning, match="kind is deprecated"):
+        plan_legacy = plan_attention(legacy, shapes)
+    plan_explicit = plan_attention(explicit, shapes)
+    assert plan_legacy == plan_explicit     # identical mechanism+backend+reason
+    # one-shot: a second legacy resolve stays silent
+    with W.catch_warnings():
+        W.simplefilter("error")
+        assert plan_attention(legacy, shapes) == plan_explicit
+
+
+def test_kind_default_is_dotprod_without_warning():
+    import warnings as W
+
+    with W.catch_warnings():
+        W.simplefilter("error")
+        cfg = AttentionConfig()             # neither mechanism nor kind
+        plan = plan_attention(cfg, _shapes(cfg, 8, 8))
+    assert plan.mechanism == "dotprod"
+
+
+def test_use_kernel_shim_plans_like_explicit_pallas():
+    import repro.core.mechanism as M
+
+    M._use_kernel_warned = False
+    shimmed_cfg = _cfg("inhibitor", use_kernel=True)
+    explicit_cfg = _cfg("inhibitor", backend="pallas")
+    shapes = _shapes(shimmed_cfg, 32, 32, platform="tpu")
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        shimmed = plan_attention(shimmed_cfg, shapes)
+    explicit = plan_attention(explicit_cfg, shapes)
+    assert (shimmed.mechanism, shimmed.backend) \
+        == (explicit.mechanism, explicit.backend) == ("inhibitor", "pallas")
 
 
 # ---------------------------------------------------------------------------

@@ -117,3 +117,85 @@ def test_compression_error_feedback(seed):
         total_true = total_true + g["w"]
     scale = float(jnp.max(jnp.abs(g["w"]))) / 127
     assert float(jnp.abs(total_comp - total_true).max()) <= scale + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Lane parity (DESIGN.md §9): one algorithm, three arithmetic domains
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(2, 6),
+       st.integers(0, 10**6))
+def test_inhibitor_int_lane_equals_float_lane_exactly(nq, nk, d, seed):
+    """The paper's 'straightforward quantization' as an exact property:
+    with no shifts, the inhibitor pipeline is sub/abs/add/relu only — all
+    integer-exact in float32 — so int and float lanes agree bit for bit
+    at quantized inputs."""
+    from repro.core.lanes import get_lane
+    from repro.quant.int_attention import lane_inhibitor_attention
+
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-31, 32, (1, nq, d))
+    k = rng.integers(-31, 32, (1, nk, d))
+    v = rng.integers(-31, 32, (1, nk, d))
+    li, lf = get_lane("int"), get_lane("float")
+    oi = li.to_numpy(lane_inhibitor_attention(
+        li, li.array(q), li.array(k), li.array(v), signed=True))
+    of = lf.to_numpy(lane_inhibitor_attention(
+        lf, lf.array(q), lf.array(k), lf.array(v), signed=True))
+    np.testing.assert_array_equal(oi, of.astype(np.int64))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(1, 3),
+       st.integers(0, 10**6))
+def test_inhibitor_int_float_lane_bounded_under_shifts(nq, nk, shift, seed):
+    """With a γ right-shift the lanes differ only by the floor rounding of
+    Z: |Z_int − Z_float| < 1, and the inhibition sum amplifies that by at
+    most n_k per channel."""
+    from repro.core.lanes import get_lane
+    from repro.quant.int_attention import lane_inhibitor_attention
+
+    rng = np.random.default_rng(seed)
+    d = 4
+    q = rng.integers(-31, 32, (1, nq, d))
+    k = rng.integers(-31, 32, (1, nk, d))
+    v = rng.integers(-31, 32, (1, nk, d))
+    li, lf = get_lane("int"), get_lane("float")
+    kw = dict(gamma_shift=shift, alpha_q=1, signed=True)
+    oi = li.to_numpy(lane_inhibitor_attention(
+        li, li.array(q), li.array(k), li.array(v), **kw)).astype(float)
+    of = lf.to_numpy(lane_inhibitor_attention(
+        lf, lf.array(q), lf.array(k), lf.array(v), **kw))
+    assert float(np.abs(oi - of).max()) <= 2.0 * nk
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 10), st.integers(0, 10**6))
+def test_lane_layers_int_fhe_bit_exact_property(nq, d, seed):
+    """Whatever the shapes/values, the int lane and the TFHE simulator
+    execute identical integer arithmetic (norm + mlp + both attention
+    mechanisms)."""
+    from repro.core.lanes import FheSimLane, get_lane
+    from repro.nn.lane_layers import lane_norm
+    from repro.quant.int_attention import (lane_dot_product_attention,
+                                           lane_inhibitor_attention)
+    from repro.quant.ptq import PtqConfig
+
+    rng = np.random.default_rng(seed)
+    ptq = PtqConfig()
+    x = rng.integers(-ptq.act_clip, ptq.act_clip + 1, (1, nq, d))
+    p = {"scale": rng.integers(32, 96, d)}
+    li, lh = get_lane("int"), FheSimLane()
+    np.testing.assert_array_equal(
+        li.to_numpy(lane_norm(li, li.array(x), p, ptq=ptq)),
+        lh.to_numpy(lane_norm(lh, lh.array(x), p, ptq=ptq)))
+    for fn, kw in ((lane_inhibitor_attention,
+                    dict(gamma_shift=1, alpha_q=2, signed=True)),
+                   (lane_dot_product_attention,
+                    dict(scale_shift=3, frac_bits=6))):
+        np.testing.assert_array_equal(
+            li.to_numpy(fn(li, li.array(x), li.array(x), li.array(x),
+                           **kw)),
+            lh.to_numpy(fn(lh, lh.array(x), lh.array(x), lh.array(x),
+                           **kw)))

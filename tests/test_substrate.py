@@ -95,3 +95,22 @@ def test_lm_tokens_learnable_structure():
     toks, labels = lm_tokens(4, 32, 64, 0)
     # labels are next-token shifted inputs
     np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])
+
+
+def test_fold_key_is_process_invariant():
+    """Param-init sub-keys must not depend on python's per-process hash
+    salt (the old ``hash(name)`` derivation made every init different in
+    every process — irreproducible restarts and cross-process parity).
+    Pins the crc32 derivation itself, not jax's fold_in internals, so a
+    JAX upgrade cannot fail this spuriously."""
+    import zlib
+
+    import jax
+
+    from repro.nn.module import fold_key
+
+    folded = zlib.crc32(b"wq") % (2 ** 31 - 1)
+    assert folded == 111524964               # process/version invariant
+    np.testing.assert_array_equal(
+        jax.device_get(fold_key(jax.random.PRNGKey(0), "wq")),
+        jax.device_get(jax.random.fold_in(jax.random.PRNGKey(0), folded)))

@@ -1,4 +1,5 @@
-"""Serving benchmark: paged vs contiguous KV-cache allocators.
+"""Serving benchmark: paged vs contiguous KV-cache allocators, plus the
+decode-tick kernel-vs-gather arm.
 
 Drives the continuous-batching engine over the same synthetic ragged
 workload under both allocators and reports, per arm:
@@ -9,9 +10,20 @@ workload under both allocators and reports, per arm:
   * cache-memory high-water mark in bytes (pages actually held for the
     paged arm; the full up-front reservation for the contiguous arm)
 
-and asserts greedy-output parity between the arms.  Results are printed
-as CSV rows (same shape as benchmarks.run) and written to a
-``BENCH_serve_*.json`` so CI records the serving perf trajectory.
+and asserts greedy-output parity between the arms.  A second,
+attention-level microbench times one paged decode tick under the
+``paged`` backend (contiguous block-table gather) against the
+``paged_pallas`` backend (block-table-native kernel, DESIGN.md §10) over
+the same ragged pool, asserts numerical parity, and reports wall time
+plus the analytic per-tick KV HBM traffic of each arm
+(``BENCH_serve_decode.json``).  On CPU hosts the kernel arm runs in
+Pallas interpret mode — its wall time is not meaningful (the JSON says
+so via ``"interpret": true``); the HBM-traffic model is platform-
+independent.
+
+Results are printed as CSV rows (same shape as benchmarks.run) and
+written to ``BENCH_serve_*.json`` so CI records the serving perf
+trajectory.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 """
@@ -62,6 +74,114 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
         "prefill_compiles": eng.prefill_compiles,
         "cache_high_water_bytes": mcfg.num_layers * hw_rows * row_bytes,
     }, {r.request_id: r.output for r in done}
+
+
+def decode_kernel_bench(*, batch, page_size, pages_per_slot, num_heads,
+                        num_kv_heads, head_dim, iters, seed=0):
+    """One paged decode tick: block-table gather vs block-table-native
+    kernel over the same ragged page pool.  Returns the result dict
+    (parity-gated) for ``BENCH_serve_decode.json``."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.mechanism import (AttnShapes, MechanismParams,
+                                      PagedLayout, Structural, execute_plan,
+                                      plan_attention)
+    from repro.kernels.ops import registry
+
+    rng = np.random.default_rng(seed)
+    num_pages = batch * pages_per_slot + 1
+    pool_shape = (num_pages, page_size, num_kv_heads, head_dim)
+    k_pool = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+    v_pool = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+    q = jnp.asarray(rng.normal(
+        size=(batch, 1, num_heads, head_dim)).astype(np.float32))
+    # ragged cursors over a shared pool: distinct physical pages per row,
+    # unmapped tail entries on the trash page 0 (exactly the engine layout)
+    max_len = pages_per_slot * page_size
+    lengths = rng.integers(1, max_len + 1, (batch,)).astype(np.int32)
+    perm = rng.permutation(np.arange(1, num_pages))
+    tables = np.zeros((batch, pages_per_slot), np.int32)
+    nxt = 0
+    for b in range(batch):
+        used = -(-int(lengths[b]) // page_size)
+        tables[b, :used] = perm[nxt:nxt + used]
+        nxt += used
+    tables = jnp.asarray(tables)
+    lengths = jnp.asarray(lengths)
+
+    class _Cfg:
+        mechanism = "inhibitor"
+        causal = True
+        sliding_window = None
+
+    shapes = AttnShapes(
+        batch=batch, n_q=1, n_k=pages_per_slot * page_size,
+        num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
+        has_cache=True, scalar_cursor=False, paged=True)
+    params = MechanismParams(signed=True)
+    layout = PagedLayout(tables, page_size)
+
+    def arm(backend):
+        cfg = _Cfg()
+        cfg.backend = backend
+        plan = plan_attention(cfg, shapes)
+        structural = Structural(causal=True, window=None,
+                                q_offset=lengths - 1, kv_valid_len=lengths)
+        if backend == "paged_pallas":
+            def tick(q_, kp, vp):
+                return execute_plan(plan, q_, kp, vp, params=params,
+                                    structural=structural, paged=layout)
+        else:
+            kj = jnp.arange(pages_per_slot * page_size)[None, :]
+            mask = (kj < lengths[:, None])[:, None, None, :]
+
+            def tick(q_, kp, vp):
+                return execute_plan(plan, q_, kp, vp, params=params,
+                                    mask=mask, paged=layout)
+        # eager (un-jitted) warmup with concrete operands: on TPU this is
+        # what triggers the kernel registry's per-shape autotune pass
+        jax.block_until_ready(tick(q, k_pool, v_pool))
+        fn = jax.jit(tick)
+        out = jax.block_until_ready(fn(q, k_pool, v_pool))   # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(q, k_pool, v_pool))
+        wall = (time.perf_counter() - t0) / iters
+        return plan, out, wall
+
+    plan_g, out_g, wall_g = arm("paged")
+    plan_k, out_k, wall_k = arm("paged_pallas")
+    parity = bool(np.allclose(np.asarray(out_g), np.asarray(out_k),
+                              rtol=1e-4, atol=1e-5))
+
+    # analytic per-tick KV-read HBM traffic (k + v, all kv heads):
+    # the gather touches every block-table entry incl. the trash-page
+    # tail; the kernel walks only pages below each row's cursor
+    row_bytes = 2 * num_kv_heads * head_dim * 4      # f32 k + v per KV row
+    gather_rows = batch * pages_per_slot * page_size
+    kernel_rows = int(sum(-(-int(l) // page_size) * page_size
+                          for l in np.asarray(lengths)))
+    return {
+        "batch": batch,
+        "page_size": page_size,
+        "pages_per_slot": pages_per_slot,
+        "interpret": bool(registry.interpret),
+        "parity": parity,
+        "gather": {
+            "plan": plan_g.backend, "reason": plan_g.reason,
+            "tick_us": round(1e6 * wall_g, 1),
+            "tok_per_s": round(batch / wall_g, 1),
+            "kv_hbm_bytes_per_tick": gather_rows * row_bytes,
+        },
+        "kernel": {
+            "plan": plan_k.backend, "reason": plan_k.reason,
+            "tick_us": round(1e6 * wall_k, 1),
+            "tok_per_s": round(batch / wall_k, 1),
+            "kv_hbm_bytes_per_tick": kernel_rows * row_bytes,
+        },
+    }
 
 
 def main(argv=None) -> int:
@@ -124,7 +244,27 @@ def main(argv=None) -> int:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"serve_parity,0,{'OK' if parity else 'MISMATCH'} -> {path}",
           flush=True)
-    return 0 if parity else 1
+
+    # ---- decode-tick kernel-vs-gather arm (attention-level microbench) ----
+    a = cfg.attention
+    if args.smoke:
+        decode_kw = dict(batch=4, page_size=8, pages_per_slot=8, iters=3)
+    else:
+        decode_kw = dict(batch=8, page_size=16, pages_per_slot=16, iters=20)
+    decode = decode_kernel_bench(
+        num_heads=a.num_heads, num_kv_heads=a.num_kv_heads,
+        head_dim=a.head_dim, seed=args.seed, **decode_kw)
+    with open("BENCH_serve_decode.json", "w") as f:
+        json.dump(decode, f, indent=2, sort_keys=True)
+    for armname in ("gather", "kernel"):
+        r = decode[armname]
+        print(f"serve_decode_{armname},{r['tick_us']:.1f},"
+              f"tok_per_s={r['tok_per_s']};"
+              f"kv_hbm_bytes={r['kv_hbm_bytes_per_tick']}", flush=True)
+    print(f"serve_decode_parity,0,"
+          f"{'OK' if decode['parity'] else 'MISMATCH'} -> "
+          f"BENCH_serve_decode.json", flush=True)
+    return 0 if (parity and decode["parity"]) else 1
 
 
 if __name__ == "__main__":

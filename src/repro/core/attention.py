@@ -52,6 +52,12 @@ class AttentionConfig:
     backend: Optional[str] = None   # force a backend; None = planner auto
     use_kernel: bool = False        # DEPRECATED: shim for backend="pallas"
     kv_chunk: int = 256             # chunk size for streaming/blocked forms
+    # Pallas kernel block-size overrides (None = the kernel registry's
+    # tuned/default selection — repro.kernels.ops, DESIGN.md §10)
+    kernel_block_q: Optional[int] = None
+    kernel_block_k: Optional[int] = None
+    kernel_sub_k: Optional[int] = None
+    kernel_pages_per_step: Optional[int] = None
     # planner thresholds (single source of truth: core.mechanism defaults)
     chunked_threshold: int = DEFAULT_CHUNKED_THRESHOLD   # n_k > this ->
                                                          # streaming form
@@ -277,15 +283,18 @@ def apply_attention(
     mech = get_mechanism(plan.mechanism)
     mech_params = mech.make_params(
         score_scale=cfg.score_scale, score_shift=cfg.score_shift,
-        normalize=cfg.normalize, kv_chunk=cfg.kv_chunk)
+        normalize=cfg.normalize, kv_chunk=cfg.kv_chunk,
+        kernel_block_q=cfg.kernel_block_q, kernel_block_k=cfg.kernel_block_k,
+        kernel_sub_k=cfg.kernel_sub_k,
+        kernel_pages_per_step=cfg.kernel_pages_per_step)
 
     if plan.backend in MASK_FREE_BACKENDS:
-        # blocked/pallas compute causality/window/valid-length from indices
-        # inside their chunk loops — no (n_q, n_k) mask array in HBM
+        # blocked/pallas/paged_pallas compute causality/window/valid-length
+        # from indices inside their loops — no (n_q, n_k) mask array in HBM
         structural = Structural(causal=cfg.causal, window=cfg.sliding_window,
                                 q_offset=q_offset, kv_valid_len=kv_valid_len)
         out = execute_plan(plan, q, k, v, params=mech_params,
-                           structural=structural)
+                           structural=structural, paged=paged_layout)
     else:
         mask = attn_mask
         if mask is None and x_kv is None:

@@ -21,18 +21,24 @@ Backends (``BACKENDS``) are execution strategies for one mechanism:
                normalizer to rescale for the inhibitor family)
   ``blocked``  two-level chunk scan with structural (causal/window/valid-
                length) masks computed from indices — no mask array in HBM
-  ``pallas``   the Pallas TPU kernel (interpret mode on CPU hosts)
+  ``pallas``   the Pallas TPU kernel (interpret mode on CPU hosts); since
+               the kernels carry scalar-prefetched ``q_offset`` /
+               ``kv_valid_len`` cursor operands it is eligible at
+               decode-cache sites, including ragged per-slot cursors
   ``paged``    block-table gather over a paged KV pool (serving decode /
                single-row prefill; k/v arrive as page pools plus a
-               :class:`PagedLayout`)
+               :class:`PagedLayout`) — the non-TPU / prefill fallback
+  ``paged_pallas``  block-table-native Pallas decode kernel: the grid
+               walks each row's block table, staging K/V pages
+               VMEM-resident — no contiguous gather (DESIGN.md §10)
   ``int``      integer-lane arithmetic (paper's quantized scaling arm)
   ``fhe_sim``  the TFHE circuit simulator (numpy, per-head; forced only)
 
-``blocked`` and ``pallas`` never receive a materialized mask array — they
-are listed in :data:`MASK_FREE_BACKENDS` and take a :class:`Structural`
-description instead.  The planner only selects backends whose
-eligibility predicate passes for the given shapes, so "registered" and
-"selectable here" stay distinct, inspectable facts.
+``blocked``, ``pallas`` and ``paged_pallas`` never receive a materialized
+mask array — they are listed in :data:`MASK_FREE_BACKENDS` and take a
+:class:`Structural` description instead.  The planner only selects
+backends whose eligibility predicate passes for the given shapes, so
+"registered" and "selectable here" stay distinct, inspectable facts.
 
 Config duck-typing: :func:`plan_attention` reads ``mechanism`` (falling
 back to the legacy ``kind``), ``backend``, ``use_kernel`` (deprecated
@@ -55,12 +61,16 @@ import jax.numpy as jnp
 log = logging.getLogger("repro.plan")
 
 BACKENDS: Tuple[str, ...] = (
-    "naive", "fused", "chunked", "blocked", "pallas", "paged", "int",
-    "fhe_sim")
+    "naive", "fused", "chunked", "blocked", "pallas", "paged",
+    "paged_pallas", "int", "fhe_sim")
 
 #: Backends that consume a :class:`Structural` description and must never
 #: be handed a materialized (n_q, n_k) mask array.
-MASK_FREE_BACKENDS = frozenset({"blocked", "pallas"})
+MASK_FREE_BACKENDS = frozenset({"blocked", "pallas", "paged_pallas"})
+
+#: Backends that consume a page pool + :class:`PagedLayout` instead of
+#: contiguous (b, n_k, h_kv, d) key/value tensors.
+PAGED_BACKENDS = frozenset({"paged", "paged_pallas"})
 
 DEFAULT_BLOCKED_THRESHOLD = 1 << 20   # n_q·n_k above which dense masks are
                                       # unreasonable (formerly inline in
@@ -128,12 +138,18 @@ class PagedLayout:
 class MechanismParams:
     """Union of per-call mechanism hyper-parameters.  Each backend reads
     the fields it understands (``signed`` is fixed per mechanism via
-    :attr:`Mechanism.param_overrides`; dot-product ignores the shift)."""
+    :attr:`Mechanism.param_overrides`; dot-product ignores the shift).
+    The ``kernel_*`` fields override the kernel registry's tuned block
+    sizes (``None`` = registry decides — DESIGN.md §10)."""
     score_scale: Optional[float] = None
     score_shift: float = 0.0
     signed: bool = True
     normalize: bool = True
     kv_chunk: int = 256
+    kernel_block_q: Optional[int] = None
+    kernel_block_k: Optional[int] = None
+    kernel_sub_k: Optional[int] = None
+    kernel_pages_per_step: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,13 +253,17 @@ def backend_eligible(backend: str, cfg, shapes: AttnShapes,
     if backend not in mech.backends:
         return False, f"not registered for mechanism {mech.name!r}"
     paged = getattr(shapes, "paged", False)
-    if paged and backend != "paged":
-        return False, "KV lives in a paged pool (block-table gather required)"
-    if backend == "paged":
+    if paged and backend not in PAGED_BACKENDS:
+        return False, "KV lives in a paged pool (block-table backends only)"
+    if backend in PAGED_BACKENDS:
         if not paged:
             return False, "no paged KV pool at this call site"
         if shapes.has_explicit_mask or shapes.is_cross:
             return False, "paged pools serve cached causal self-attention"
+    if backend == "paged_pallas" and shapes.n_q != 1:
+        return False, (f"paged decode kernel is single-query (n_q=1); "
+                       f"n_q={shapes.n_q} prefill goes through the gather "
+                       f"path")
     is_int = jnp.issubdtype(jnp.dtype(shapes.dtype), jnp.integer)
     if backend in ("int", "fhe_sim") and not is_int:
         return False, "requires integer-lane inputs"
@@ -254,10 +274,9 @@ def backend_eligible(backend: str, cfg, shapes: AttnShapes,
             return False, "explicit mask array given (structural masks only)"
         if shapes.is_cross:
             return False, "cross-attention has no structural mask"
-        if not shapes.scalar_cursor:
-            return False, "ragged per-slot cursors (no shared query offset)"
-    if backend == "pallas" and shapes.has_cache:
-        return False, "kernel has no KV-valid-length support (decode cache)"
+    if backend == "blocked" and not shapes.scalar_cursor:
+        # the flash kernels take per-row cursor operands; blocked does not
+        return False, "ragged per-slot cursors (no shared query offset)"
     if backend == "fhe_sim":
         if shapes.has_explicit_mask or shapes.is_cross or shapes.has_cache:
             return False, "circuit is self-attention without masking"
@@ -316,16 +335,19 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
       1. ``cfg.backend`` — forced; ineligibility is an error.
       2. ``cfg.use_kernel`` — deprecated shim for ``backend="pallas"``;
          falls back to automatic selection when the kernel cannot run
-         (explicit mask / decode cache), since the legacy bool could not
-         express eligibility.
-      3. ``paged`` when the KV cache lives in a paged pool (serving) —
-         the only backend that understands block tables.
-      4. ``int`` when the inputs are integer lanes.
-      5. ``pallas`` on TPU at large structural-mask shapes.
-      6. ``blocked`` at large structural-mask shapes
+         (explicit mask), since the legacy bool could not express
+         eligibility.
+      3. ``paged_pallas`` on TPU when the KV cache lives in a paged pool
+         and this is a single-query decode tick — the block-table-native
+         kernel (DESIGN.md §10).
+      4. ``paged`` for the remaining paged-pool sites (non-TPU hosts,
+         chunked prefill) — the clamped block-table gather.
+      5. ``int`` when the inputs are integer lanes.
+      6. ``pallas`` on TPU at large structural-mask shapes.
+      7. ``blocked`` at large structural-mask shapes
          (``n_q·n_k ≥ cfg.blocked_threshold``).
-      7. ``chunked`` when ``n_k > cfg.chunked_threshold``.
-      8. ``fused`` (dense default), else ``naive``.
+      8. ``chunked`` when ``n_k > cfg.chunked_threshold``.
+      9. ``fused`` (dense default), else ``naive``.
     """
     global _use_kernel_warned
     name = resolve_mechanism_name(cfg)
@@ -378,10 +400,19 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
     blocked_at = getattr(cfg, "blocked_threshold", DEFAULT_BLOCKED_THRESHOLD)
     chunked_at = getattr(cfg, "chunked_threshold", DEFAULT_CHUNKED_THRESHOLD)
 
-    if eligible("paged"):
+    if (shapes.resolved_platform == "tpu" and eligible("paged_pallas")):
+        plan = ExecutionPlan(
+            name, "paged_pallas",
+            shim_note + "paged KV pool on TPU, single-query decode "
+            "(block-table-native kernel)")
+    elif eligible("paged"):
+        if getattr(shapes, "paged", False) and shapes.n_q != 1:
+            why = f"chunked prefill n_q={shapes.n_q}"
+        else:
+            why = f"host platform {shapes.resolved_platform!r}"
         plan = ExecutionPlan(
             name, "paged",
-            shim_note + "paged KV pool (block-table gather/scatter)")
+            shim_note + f"paged KV pool (block-table gather: {why})")
     elif eligible("int"):
         plan = ExecutionPlan(name, "int", shim_note + "integer-lane inputs")
     elif (shapes.resolved_platform == "tpu" and total >= blocked_at
@@ -446,12 +477,12 @@ def execute_plan(plan: ExecutionPlan, q, k, v, *,
     if plan.backend in MASK_FREE_BACKENDS and mask is not None:
         raise ValueError(f"backend {plan.backend!r} is mask-free; got an "
                          f"explicit mask array")
-    if (paged is not None) != (plan.backend == "paged"):
+    if (paged is not None) != (plan.backend in PAGED_BACKENDS):
         raise ValueError(
             f"backend {plan.backend!r} and paged layout "
             f"{'given' if paged is not None else 'missing'} — paged pools "
-            f"are only consumable by the 'paged' backend")
-    if plan.backend == "paged":
+            f"are only consumable by {sorted(PAGED_BACKENDS)}")
+    if plan.backend in PAGED_BACKENDS:
         return fn(q, k, v, mask=mask, params=params, structural=structural,
                   paged=paged)
     return fn(q, k, v, mask=mask, params=params, structural=structural)
@@ -542,26 +573,42 @@ def _inhibitor_blocked(q, k, v, *, mask=None, params, structural=None):
         chunk_k=params.kv_chunk, chunk_q=min(params.kv_chunk, 512))
 
 
-def _require_kernel_expressible(s: Structural) -> None:
-    """The flash kernels have no q_offset / KV-valid-length operands; a
-    Structural carrying either must fail loudly, never silently attend
-    from offset 0 over stale cache rows."""
-    static_zero_offset = isinstance(s.q_offset, int) and s.q_offset == 0
-    if s.kv_valid_len is not None or not static_zero_offset:
-        raise ValueError(
-            "pallas kernel supports causal/window structure only — "
-            "q_offset/kv_valid_len (decode cache) cannot be expressed; "
-            "plan a cache-capable backend (blocked/chunked/fused) instead")
+def _kernel_choice(params: MechanismParams):
+    """Config block-size overrides -> a :class:`repro.kernels.ops.
+    KernelChoice` (or None, letting the kernel registry tune)."""
+    if (params.kernel_block_q is None and params.kernel_block_k is None
+            and params.kernel_sub_k is None
+            and params.kernel_pages_per_step is None):
+        return None
+    from repro.kernels.ops import KernelChoice
+
+    return KernelChoice(params.kernel_block_q, params.kernel_block_k,
+                        params.kernel_sub_k, params.kernel_pages_per_step)
+
+
+def _structural_is_plain(s: Structural) -> bool:
+    """True when the Structural carries no decode-cache cursors — the
+    custom-VJP training kernel applies; otherwise the cursor-carrying
+    (inference-only) entry point is used."""
+    return (s.kv_valid_len is None
+            and isinstance(s.q_offset, int) and s.q_offset == 0)
 
 
 def _inhibitor_pallas(q, k, v, *, mask=None, params, structural=None):
     from repro.kernels import ops as kops
 
     s = structural or Structural()
-    _require_kernel_expressible(s)
-    return kops.flash_inhibitor(q, k, v, params.score_scale,
-                                params.score_shift, params.signed,
-                                params.normalize, s.causal, s.window)
+    choice = _kernel_choice(params)
+    if _structural_is_plain(s):
+        return kops.flash_inhibitor(q, k, v, params.score_scale,
+                                    params.score_shift, params.signed,
+                                    params.normalize, s.causal, s.window,
+                                    choice)
+    return kops.flash_inhibitor_cached(
+        q, k, v, s.q_offset, s.kv_valid_len, score_scale=params.score_scale,
+        score_shift=params.score_shift, signed=params.signed,
+        normalize=params.normalize, causal=s.causal, window=s.window,
+        choice=choice)
 
 
 def _gather_pages(k_pool, v_pool, paged: PagedLayout):
@@ -571,6 +618,12 @@ def _gather_pages(k_pool, v_pool, paged: PagedLayout):
     Returns (b, P*page_size, h_kv, d) views — one gather per call, fused by
     XLA into the downstream reads.  Unmapped table entries point at the
     reserved trash page 0; those rows sit beyond the valid-length mask.
+
+    This is the non-TPU / prefill fallback: the serve engine clamps the
+    table width handed in here to the bucketed batch high-water page
+    count, so the gather is O(pages actually held), not O(pool) — and on
+    TPU single-query decode the planner selects ``paged_pallas`` instead,
+    which never materializes this view at all (DESIGN.md §10).
     """
     kt = k_pool[paged.block_tables]            # (b, P, ps, h_kv, d)
     vt = v_pool[paged.block_tables]
@@ -578,10 +631,34 @@ def _gather_pages(k_pool, v_pool, paged: PagedLayout):
     return (kt.reshape(b, npg * ps, hk, d), vt.reshape(b, npg * ps, hk, d))
 
 
+def _paged_lengths(q, s: Structural):
+    """Per-row valid-length cursors for the paged decode kernels."""
+    if s.kv_valid_len is None:
+        raise ValueError(
+            "paged_pallas needs per-row kv_valid_len cursors (the paged "
+            "cache always carries them); got Structural(kv_valid_len=None)")
+    lengths = jnp.asarray(s.kv_valid_len, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(lengths), (q.shape[0],))
+
+
 def _inhibitor_paged(q, k, v, *, mask=None, params, structural=None,
                      paged=None):
     kc, vc = _gather_pages(k, v, paged)
     return _inhibitor_fused(q, kc, vc, mask=mask, params=params)
+
+
+def _inhibitor_paged_pallas(q, k, v, *, mask=None, params, structural=None,
+                            paged=None):
+    """Block-table-native decode: k/v are page pools; the kernel grid
+    walks each row's block table (no contiguous gather)."""
+    from repro.kernels import ops as kops
+
+    s = structural or Structural()
+    return kops.paged_flash_inhibitor(
+        q, k, v, paged.block_tables, _paged_lengths(q, s),
+        score_scale=params.score_scale, score_shift=params.score_shift,
+        signed=params.signed, normalize=params.normalize, window=s.window,
+        choice=_kernel_choice(params))
 
 
 def _inhibitor_int(q, k, v, *, mask=None, params, structural=None):
@@ -628,15 +705,30 @@ def _dotprod_pallas(q, k, v, *, mask=None, params, structural=None):
     from repro.kernels import ops as kops
 
     s = structural or Structural()
-    _require_kernel_expressible(s)
-    return kops.flash_attention(q, k, v, params.score_scale, s.causal,
-                                s.window)
+    choice = _kernel_choice(params)
+    if _structural_is_plain(s):
+        return kops.flash_attention(q, k, v, params.score_scale, s.causal,
+                                    s.window, choice)
+    return kops.flash_attention_cached(
+        q, k, v, s.q_offset, s.kv_valid_len, score_scale=params.score_scale,
+        causal=s.causal, window=s.window, choice=choice)
 
 
 def _dotprod_paged(q, k, v, *, mask=None, params, structural=None,
                    paged=None):
     kc, vc = _gather_pages(k, v, paged)
     return _dotprod_fused(q, kc, vc, mask=mask, params=params)
+
+
+def _dotprod_paged_pallas(q, k, v, *, mask=None, params, structural=None,
+                          paged=None):
+    from repro.kernels import ops as kops
+
+    s = structural or Structural()
+    return kops.paged_flash_attention(
+        q, k, v, paged.block_tables, _paged_lengths(q, s),
+        score_scale=params.score_scale, window=s.window,
+        choice=_kernel_choice(params))
 
 
 def _dotprod_int(q, k, v, *, mask=None, params, structural=None):
@@ -704,6 +796,7 @@ def _register_builtins() -> None:
             "fused": _dotprod_fused,
             "pallas": _dotprod_pallas,
             "paged": _dotprod_paged,
+            "paged_pallas": _dotprod_paged_pallas,
             "int": _dotprod_int,
             "fhe_sim": _fhe_backend(lane_dot_product_attention,
                                     scale_shift=2, frac_bits=4),
@@ -720,6 +813,7 @@ def _register_builtins() -> None:
         "blocked": _inhibitor_blocked,
         "pallas": _inhibitor_pallas,
         "paged": _inhibitor_paged,
+        "paged_pallas": _inhibitor_paged_pallas,
         "int": _inhibitor_int,
         # the encrypted arm runs the same lane_fn on the TFHE simulator;
         # ``signed`` follows the mechanism (eq. 7 doubles the ReLU LUTs)

@@ -19,22 +19,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.inhibitor import launch_prefill_kernel, pack_cursors
+
 DEFAULT_BLOCK_Q = 64
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
 def _flash_attention_kernel(
-    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-    *,
+    # refs: [cursors_ref,] q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref
+    *refs,
     score_scale: float,
     causal: bool,
     window: Optional[int],
     kv_len: int,
+    kv_heads: int,
     block_q: int,
     block_k: int,
     n_kv_blocks: int,
+    cached: bool,
 ):
+    if cached:
+        cur_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        cur_ref = None
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -49,9 +58,18 @@ def _flash_attention_kernel(
     ks = k_ref[0].astype(jnp.float32)         # (bk, d)
     vs = v_ref[0].astype(jnp.float32)
 
-    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+    if cur_ref is not None:
+        # per-row decode cursors (scalar-prefetched; see inhibitor kernel)
+        row = pl.program_id(0) // kv_heads
+        q_off = cur_ref[0, row]
+        kv_valid = jnp.minimum(kv_len, cur_ref[1, row])
+    else:
+        q_off = 0
+        kv_valid = kv_len
+    q_pos = (q_off + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0))
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
-    m_blk = k_pos < kv_len
+    m_blk = k_pos < kv_valid
     if causal:
         m_blk = m_blk & (k_pos <= q_pos)
     if window is not None:
@@ -75,7 +93,10 @@ def _flash_attention_kernel(
 
     live = True
     if causal or window is not None:
-        live = (ik * block_k) <= (iq * block_q + block_q - 1)
+        live = (ik * block_k) <= (q_off + iq * block_q + block_q - 1)
+    if cur_ref is not None:
+        # skip blocks wholly past the row's valid-length cursor
+        live = jnp.logical_and(live, (ik * block_k) < kv_valid)
     if isinstance(live, bool):
         acc, m_new, l_new = do_block()
     else:
@@ -103,9 +124,15 @@ def flash_attention_fwd(
     window: Optional[int] = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
+    q_offset=None,
+    kv_valid_len=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """q: (b, n_q, h, d); k, v: (b, n_k, h_kv, d) -> (b, n_q, h, d)."""
+    """q: (b, n_q, h, d); k, v: (b, n_k, h_kv, d) -> (b, n_q, h, d).
+
+    ``q_offset`` / ``kv_valid_len`` (int, scalar array, or per-row (b,)
+    arrays) express decode-cache structure — see
+    :func:`repro.kernels.inhibitor.flash_inhibitor_fwd`."""
     batch, n_q, heads, d = q.shape
     n_k, kv_heads = k.shape[1], k.shape[2]
     assert heads % kv_heads == 0
@@ -130,23 +157,18 @@ def flash_attention_fwd(
     n_q_blocks = (n_q + nq_pad) // block_q
     n_kv_blocks = (n_k + nk_pad) // block_k
     grid = (batch * kv_heads, n_q_blocks, n_kv_blocks)
+    cached = q_offset is not None or kv_valid_len is not None
 
     kernel = functools.partial(
         _flash_attention_kernel,
         score_scale=scale, causal=causal, window=window, kv_len=n_k,
-        block_q=block_q, block_k=block_k, n_kv_blocks=n_kv_blocks,
+        kv_heads=kv_heads, block_q=block_q, block_k=block_k,
+        n_kv_blocks=n_kv_blocks, cached=cached,
     )
 
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, group, block_q, d), lambda b, i, j: (b, 0, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, group, block_q, d),
-                               lambda b, i, j: (b, 0, i, 0)),
+    out = launch_prefill_kernel(
+        kernel, qg, kg, vg, grid=grid, group=group, block_q=block_q,
+        block_k=block_k, d=d,
         out_shape=jax.ShapeDtypeStruct(
             (batch * kv_heads, group, n_q + nq_pad, d), q.dtype),
         scratch_shapes=[
@@ -155,7 +177,8 @@ def flash_attention_fwd(
             pltpu.VMEM((group, block_q), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, kg, vg)
+        cursors=(pack_cursors(batch, q_offset, kv_valid_len, n_k)
+                 if cached else None))
 
     out = out[:, :, :n_q, :]
     out = out.reshape(batch, kv_heads, group, n_q, d).transpose(0, 3, 1, 2, 4)

@@ -46,10 +46,50 @@ DEFAULT_BLOCK_K = 128
 DEFAULT_SUB_K = 16
 
 
+def pack_cursors(batch: int, q_offset, kv_valid_len, n_k: int) -> jax.Array:
+    """Pack per-row decode cursors into the (2, batch) int32 scalar-prefetch
+    operand: row 0 = query offsets, row 1 = KV valid lengths.  Scalars (a
+    shared cursor) broadcast; ``None`` means offset 0 / whole buffer."""
+    off = jnp.asarray(q_offset if q_offset is not None else 0, jnp.int32)
+    val = jnp.asarray(kv_valid_len if kv_valid_len is not None else n_k,
+                      jnp.int32)
+    off = jnp.broadcast_to(jnp.atleast_1d(off), (batch,))
+    val = jnp.broadcast_to(jnp.atleast_1d(val), (batch,))
+    return jnp.stack([off, val])
+
+
+def launch_prefill_kernel(kernel, qg, kg, vg, *, grid, group, block_q,
+                          block_k, d, out_shape, scratch_shapes, interpret,
+                          cursors=None):
+    """Shared launcher for the prefill-layout kernels (flash inhibitor and
+    flash attention use identical grids/BlockSpecs).  ``cursors`` selects
+    the scalar-prefetch (decode-cache) launch; the plain launch keeps the
+    static-skip training path untouched."""
+    if cursors is not None:
+        qmap = lambda b, i, j, cur: (b, 0, i, 0)     # noqa: E731
+        kvmap = lambda b, i, j, cur: (b, j, 0)       # noqa: E731
+    else:
+        qmap = lambda b, i, j: (b, 0, i, 0)          # noqa: E731
+        kvmap = lambda b, i, j: (b, j, 0)            # noqa: E731
+    q_spec = pl.BlockSpec((1, group, block_q, d), qmap)
+    in_specs = [q_spec, pl.BlockSpec((1, block_k, d), kvmap),
+                pl.BlockSpec((1, block_k, d), kvmap)]
+    if cursors is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=q_spec, scratch_shapes=scratch_shapes)
+        return pl.pallas_call(kernel, grid_spec=grid_spec,
+                              out_shape=out_shape,
+                              interpret=interpret)(cursors, qg, kg, vg)
+    return pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                          out_specs=q_spec, out_shape=out_shape,
+                          scratch_shapes=scratch_shapes,
+                          interpret=interpret)(qg, kg, vg)
+
+
 def _flash_inhibitor_kernel(
-    # refs
-    q_ref, k_ref, v_ref, o_ref, acc_ref, cnt_ref,
-    *,
+    # refs: [cursors_ref,] q_ref, k_ref, v_ref, o_ref, acc_ref, cnt_ref
+    *refs,
     score_scale: float,
     score_shift: float,
     signed: bool,
@@ -57,11 +97,18 @@ def _flash_inhibitor_kernel(
     causal: bool,
     window: Optional[int],
     kv_len: int,
+    kv_heads: int,
     block_q: int,
     block_k: int,
     sub_k: int,
     n_kv_blocks: int,
+    cached: bool,
 ):
+    if cached:
+        cur_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, cnt_ref = refs
+    else:
+        cur_ref = None
+        q_ref, k_ref, v_ref, o_ref, acc_ref, cnt_ref = refs
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -73,7 +120,17 @@ def _flash_inhibitor_kernel(
     q = q_ref[0].astype(jnp.float32)          # (group, block_q, d)
     group, bq, d = q.shape
 
-    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, sub_k), 0)
+    if cur_ref is not None:
+        # per-row decode cursors (scalar-prefetched): queries start at
+        # q_offset and only the first kv_valid rows of the buffer are live
+        row = pl.program_id(0) // kv_heads
+        q_off = cur_ref[0, row]
+        kv_valid = jnp.minimum(kv_len, cur_ref[1, row])
+    else:
+        q_off = 0
+        kv_valid = kv_len
+    q_pos = (q_off + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (bq, sub_k), 0))
 
     def process_sub(s, carry):
         acc, cnt = carry
@@ -89,7 +146,7 @@ def _flash_inhibitor_kernel(
         # ---- block mask from positions (True = attend) ----
         k_pos = (ik * block_k + s * sub_k
                  + jax.lax.broadcasted_iota(jnp.int32, (bq, sub_k), 1))
-        m = k_pos < kv_len
+        m = k_pos < kv_valid
         if causal:
             m = m & (k_pos <= q_pos)
         if window is not None:
@@ -122,14 +179,16 @@ def _flash_inhibitor_kernel(
     cnt = cnt_ref[..., 0]
     n_sub = block_k // sub_k
 
+    first_k = ik * block_k
     if causal or window is not None:
         # skip fully-masked blocks (whole kv block strictly above diagonal;
         # a window implies causality, so the same skip applies)
-        first_q = iq * block_q
-        first_k = ik * block_k
-        live = first_k <= first_q + block_q - 1
+        live = first_k <= q_off + iq * block_q + block_q - 1
     else:
         live = True
+    if cur_ref is not None:
+        # skip blocks wholly past the row's valid-length cursor
+        live = jnp.logical_and(live, first_k < kv_valid)
 
     def do_block():
         return jax.lax.fori_loop(0, n_sub, process_sub, (acc, cnt))
@@ -164,12 +223,18 @@ def flash_inhibitor_fwd(
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     sub_k: int = DEFAULT_SUB_K,
+    q_offset=None,
+    kv_valid_len=None,
     interpret: bool = False,
 ) -> jax.Array:
     """Pallas flash-inhibitor forward pass. Returns (batch, n_q, heads, d).
 
     Sequences are padded to block multiples internally; the pad tail is
-    excluded via the kv_len mask.
+    excluded via the kv_len mask.  ``q_offset`` / ``kv_valid_len`` (int,
+    scalar array, or per-row (b,) arrays) express decode-cache structure:
+    queries sit at absolute positions ``q_offset + i`` and only the first
+    ``kv_valid_len`` buffer rows are attendable — scalar-prefetched, so
+    masks stay index-computed (no HBM mask array).
     """
     batch, n_q, heads, d = q.shape
     n_k, kv_heads = k.shape[1], k.shape[2]
@@ -201,25 +266,19 @@ def flash_inhibitor_fwd(
     n_q_blocks = (n_q + nq_pad) // block_q
     n_kv_blocks = (n_k + nk_pad) // block_k
     grid = (batch * kv_heads, n_q_blocks, n_kv_blocks)
+    cached = q_offset is not None or kv_valid_len is not None
 
     kernel = functools.partial(
         _flash_inhibitor_kernel,
         score_scale=scale, score_shift=score_shift, signed=signed,
         normalize=normalize, causal=causal, window=window, kv_len=n_k,
-        block_q=block_q, block_k=block_k, sub_k=sub_k,
-        n_kv_blocks=n_kv_blocks,
+        kv_heads=kv_heads, block_q=block_q, block_k=block_k, sub_k=sub_k,
+        n_kv_blocks=n_kv_blocks, cached=cached,
     )
 
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, group, block_q, d), lambda b, i, j: (b, 0, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, group, block_q, d),
-                               lambda b, i, j: (b, 0, i, 0)),
+    out = launch_prefill_kernel(
+        kernel, qg, kg, vg, grid=grid, group=group, block_q=block_q,
+        block_k=block_k, d=d,
         out_shape=jax.ShapeDtypeStruct(
             (batch * kv_heads, group, n_q + nq_pad, d), q.dtype),
         scratch_shapes=[
@@ -227,7 +286,8 @@ def flash_inhibitor_fwd(
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, kg, vg)
+        cursors=(pack_cursors(batch, q_offset, kv_valid_len, n_k)
+                 if cached else None))
 
     out = out[:, :, :n_q, :]
     out = out.reshape(batch, kv_heads, group, n_q, d).transpose(0, 3, 1, 2, 4)

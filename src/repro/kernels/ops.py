@@ -1,16 +1,37 @@
-"""Jit'd public wrappers for the Pallas kernels, with CPU-fallback dispatch
-and a recompute-based custom VJP so the kernels are usable in training.
+"""Kernel registry: jit'd public wrappers for the Pallas kernels, with one
+host-platform decision, per-shape block-size autotuning, and recompute-based
+custom VJPs so the training-path kernels are usable under autodiff.
 
-On a CPU-only host (this container, CI) the wrappers run the kernels in
-``interpret=True`` mode — the kernel body executes as XLA ops, which keeps
-a single code path for tests and the multi-pod dry-run.  On TPU the same
-calls compile to Mosaic.
+Registry responsibilities (DESIGN.md §10):
+
+  * **One interpret decision.**  ``registry.interpret`` is computed once
+    per process (CPU-only hosts run the kernel bodies as XLA ops in
+    ``interpret=True`` mode; TPU compiles to Mosaic) — call sites no
+    longer carry their own ``not _on_tpu()`` checks.
+  * **Per-shape tuning.**  Every wrapper resolves a :class:`KernelChoice`
+    — ``(block_q, block_k, sub_k, pages_per_step)`` — through
+    ``registry.choose``: an explicit override (from
+    ``AttentionConfig.kernel_*``) wins; otherwise the cached per-shape
+    selection is used.  On TPU with *concrete* operands (an eager warmup
+    call, e.g. ``benchmarks/serve_bench.py``'s un-jitted first tick) the
+    candidate set is timed once and the winner cached; a jit trace
+    resolves to the default *without* pinning the cache (so a later
+    eager call can still tune), and interpret mode caches the default —
+    timing a traced or interpreted call would measure nothing real.
+  * **Kernel families.**  ``flash_inhibitor`` / ``flash_attention``
+    (training prefill; custom VJP via the jnp references),
+    ``*_cached`` variants carrying per-row ``q_offset`` /
+    ``kv_valid_len`` decode cursors (inference-only — no VJP), the
+    block-table-native ``paged_*`` decode kernels, and the RWKV6 WKV
+    chunk kernel.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +39,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels.flash import flash_attention_fwd
 from repro.kernels.inhibitor import flash_inhibitor_fwd
+from repro.kernels.paged import (paged_flash_attention_fwd,
+                                 paged_flash_inhibitor_fwd)
 from repro.kernels.rwkv6 import wkv6_chunked
 
 
@@ -29,34 +52,178 @@ def _on_tpu() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# KernelChoice + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    """Block-size selection for one kernel launch.  ``None`` fields fall
+    back to the tuned/default value — a partial override (say, just
+    ``block_k``) leaves the rest to the registry.  Hashable, so it rides
+    through ``jax.custom_vjp`` nondiff argnums."""
+    block_q: Optional[int] = None
+    block_k: Optional[int] = None
+    sub_k: Optional[int] = None
+    pages_per_step: Optional[int] = None
+
+    def merge_onto(self, base: "KernelChoice") -> "KernelChoice":
+        return KernelChoice(
+            self.block_q if self.block_q is not None else base.block_q,
+            self.block_k if self.block_k is not None else base.block_k,
+            self.sub_k if self.sub_k is not None else base.sub_k,
+            (self.pages_per_step if self.pages_per_step is not None
+             else base.pages_per_step))
+
+    @property
+    def empty(self) -> bool:
+        return self == KernelChoice()
+
+
+#: Candidate grids per kernel family — first entry is the default.
+CANDIDATES: Dict[str, Tuple[KernelChoice, ...]] = {
+    "inhibitor": (
+        KernelChoice(64, 128, 16), KernelChoice(32, 128, 16),
+        KernelChoice(128, 128, 16), KernelChoice(64, 256, 32),
+        KernelChoice(64, 128, 8),
+    ),
+    "flash": (
+        KernelChoice(64, 128), KernelChoice(32, 128),
+        KernelChoice(128, 128), KernelChoice(64, 256),
+    ),
+    "paged": (
+        KernelChoice(pages_per_step=4), KernelChoice(pages_per_step=1),
+        KernelChoice(pages_per_step=2), KernelChoice(pages_per_step=8),
+    ),
+}
+
+
+class KernelRegistry:
+    """Process-wide kernel dispatch state: the single interpret decision
+    and the per-(family, shape) tuned :class:`KernelChoice` cache."""
+
+    def __init__(self):
+        self._interpret: Optional[bool] = None
+        self.tuned: Dict[tuple, KernelChoice] = {}
+
+    @property
+    def interpret(self) -> bool:
+        if self._interpret is None:
+            self._interpret = not _on_tpu()
+        return self._interpret
+
+    def reset(self) -> None:
+        """Drop cached decisions (tests / device topology changes)."""
+        self._interpret = None
+        self.tuned.clear()
+
+    def choose(self, family: str, shape_key: tuple,
+               override: Optional[KernelChoice] = None,
+               timer: Optional[Callable[[KernelChoice], float]] = None,
+               ) -> KernelChoice:
+        """Resolve the launch configuration for ``family`` at ``shape_key``.
+
+        ``override`` (non-empty) short-circuits tuning — explicit config
+        wins.  ``timer`` runs one candidate and returns seconds; it is
+        only consulted on TPU with concrete operands, and the winner is
+        cached per shape so tuning cost is paid once.
+        """
+        candidates = CANDIDATES[family]
+        default = candidates[0]
+        key = (family,) + shape_key
+        if override is not None and not override.empty:
+            # partial overrides fill their None fields from the tuned
+            # per-shape choice when one exists, else the default
+            return override.merge_onto(self.tuned.get(key, default))
+        hit = self.tuned.get(key)
+        if hit is not None:
+            return hit
+        if timer is None:
+            # trace-time resolution: use the default but do NOT pin the
+            # cache — a later concrete-operand (eager warmup) call for the
+            # same shape must still be able to tune
+            return default
+        choice = default
+        if not self.interpret:
+            best_t = float("inf")
+            for cand in candidates:
+                try:
+                    t = timer(cand)
+                except Exception:  # noqa: BLE001 — an invalid candidate
+                    continue       # (VMEM overflow, …) just drops out
+                if t < best_t:
+                    best_t, choice = t, cand
+        self.tuned[key] = choice
+        return choice
+
+
+registry = KernelRegistry()
+
+
+def _concrete(*arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _timer(fn: Callable[[KernelChoice], jax.Array]):
+    """best-of-3 wall-clock timer for one candidate (TPU autotune only)."""
+    def run(choice: KernelChoice) -> float:
+        jax.block_until_ready(fn(choice))       # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(choice))
+            best = min(best, time.perf_counter() - t0)
+        return best
+    return run
+
+
+# ---------------------------------------------------------------------------
 # flash inhibitor (paper's mechanism)
 # ---------------------------------------------------------------------------
 
+def _prefill_choice(family, q, k, causal, window, cached,
+                    override: Optional[KernelChoice], runner):
+    """Shared choice resolution for the prefill-layout kernel families
+    ("inhibitor" / "flash"): same shape key, same concrete-operand
+    timing gate."""
+    shape_key = (q.shape[1], k.shape[1], q.shape[2], k.shape[2], q.shape[3],
+                 causal, window, cached)
+    timer = None
+    if (override is None or override.empty) and _concrete(q, k):
+        timer = _timer(runner)
+    return registry.choose(family, shape_key, override, timer)
+
+
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(3, 4, 5, 6, 7, 8))
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_inhibitor(q, k, v, score_scale=None, score_shift=0.5, signed=True,
-                    normalize=True, causal=True, window=None):
+                    normalize=True, causal=True, window=None, choice=None):
     """Flash-inhibitor attention with recompute-based backward.
 
     Forward runs the Pallas kernel; backward recomputes via the jnp
     reference (activation-checkpoint style — no score matrix is saved).
+    ``choice`` (a :class:`KernelChoice`) overrides the tuned block sizes.
     """
-    return flash_inhibitor_fwd(
-        q, k, v, score_scale=score_scale, score_shift=score_shift,
-        signed=signed, normalize=normalize, causal=causal, window=window,
-        interpret=not _on_tpu())
+    def run(c: KernelChoice):
+        return flash_inhibitor_fwd(
+            q, k, v, score_scale=score_scale, score_shift=score_shift,
+            signed=signed, normalize=normalize, causal=causal, window=window,
+            block_q=c.block_q, block_k=c.block_k, sub_k=c.sub_k,
+            interpret=registry.interpret)
+
+    return run(_prefill_choice("inhibitor", q, k, causal, window, False,
+                               choice, run))
 
 
 def _fi_fwd(q, k, v, score_scale, score_shift, signed, normalize, causal,
-            window):
+            window, choice):
     out = flash_inhibitor(q, k, v, score_scale, score_shift, signed,
-                          normalize, causal, window)
+                          normalize, causal, window, choice)
     return out, (q, k, v)
 
 
 def _fi_bwd(score_scale, score_shift, signed, normalize, causal, window,
-            res, g):
+            choice, res, g):
     q, k, v = res
 
     def f(q_, k_, v_):
@@ -71,23 +238,48 @@ def _fi_bwd(score_scale, score_shift, signed, normalize, causal, window,
 flash_inhibitor.defvjp(_fi_fwd, _fi_bwd)
 
 
+def flash_inhibitor_cached(q, k, v, q_offset, kv_valid_len, *,
+                           score_scale=None, score_shift=0.5, signed=True,
+                           normalize=True, causal=True, window=None,
+                           choice=None):
+    """Decode-cache flash inhibitor: per-row ``q_offset`` / ``kv_valid_len``
+    cursors (traced int32 scalars or (b,) arrays).  Inference-only — no
+    custom VJP is registered for the cursor-carrying form."""
+    def run(c: KernelChoice):
+        return flash_inhibitor_fwd(
+            q, k, v, score_scale=score_scale, score_shift=score_shift,
+            signed=signed, normalize=normalize, causal=causal, window=window,
+            block_q=c.block_q, block_k=c.block_k, sub_k=c.sub_k,
+            q_offset=q_offset, kv_valid_len=kv_valid_len,
+            interpret=registry.interpret)
+
+    return run(_prefill_choice("inhibitor", q, k, causal, window, True,
+                               choice, run))
+
+
 # ---------------------------------------------------------------------------
 # flash attention (baseline mechanism)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention(q, k, v, score_scale=None, causal=True, window=None):
-    return flash_attention_fwd(
-        q, k, v, score_scale=score_scale, causal=causal, window=window,
-        interpret=not _on_tpu())
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, score_scale=None, causal=True, window=None,
+                    choice=None):
+    def run(c: KernelChoice):
+        return flash_attention_fwd(
+            q, k, v, score_scale=score_scale, causal=causal, window=window,
+            block_q=c.block_q, block_k=c.block_k,
+            interpret=registry.interpret)
+
+    return run(_prefill_choice("flash", q, k, causal, window, False,
+                               choice, run))
 
 
-def _fa_fwd(q, k, v, score_scale, causal, window):
-    out = flash_attention(q, k, v, score_scale, causal, window)
+def _fa_fwd(q, k, v, score_scale, causal, window, choice):
+    out = flash_attention(q, k, v, score_scale, causal, window, choice)
     return out, (q, k, v)
 
 
-def _fa_bwd(score_scale, causal, window, res, g):
+def _fa_bwd(score_scale, causal, window, choice, res, g):
     q, k, v = res
 
     def f(q_, k_, v_):
@@ -99,6 +291,63 @@ def _fa_bwd(score_scale, causal, window, res, g):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_cached(q, k, v, q_offset, kv_valid_len, *,
+                           score_scale=None, causal=True, window=None,
+                           choice=None):
+    """Decode-cache flash attention (see :func:`flash_inhibitor_cached`)."""
+    def run(c: KernelChoice):
+        return flash_attention_fwd(
+            q, k, v, score_scale=score_scale, causal=causal, window=window,
+            block_q=c.block_q, block_k=c.block_k,
+            q_offset=q_offset, kv_valid_len=kv_valid_len,
+            interpret=registry.interpret)
+
+    return run(_prefill_choice("flash", q, k, causal, window, True,
+                               choice, run))
+
+
+# ---------------------------------------------------------------------------
+# paged decode kernels (block-table-native serving decode)
+# ---------------------------------------------------------------------------
+
+def _paged_choice(family_key, q, k_pool, block_tables,
+                  override: Optional[KernelChoice], runner):
+    shape_key = (family_key, block_tables.shape[1], k_pool.shape[1],
+                 q.shape[2], k_pool.shape[2], q.shape[3])
+    timer = None
+    if (override is None or override.empty) and _concrete(
+            q, k_pool, block_tables):
+        timer = _timer(runner)
+    return registry.choose("paged", shape_key, override, timer)
+
+
+def paged_flash_inhibitor(q, k_pool, v_pool, block_tables, lengths, *,
+                          score_scale=None, score_shift=0.5, signed=True,
+                          normalize=True, window=None, choice=None):
+    """Block-table-native paged inhibitor decode (inference-only)."""
+    def run(c: KernelChoice):
+        return paged_flash_inhibitor_fwd(
+            q, k_pool, v_pool, block_tables, lengths,
+            score_scale=score_scale, score_shift=score_shift, signed=signed,
+            normalize=normalize, window=window,
+            pages_per_step=c.pages_per_step, interpret=registry.interpret)
+
+    return run(_paged_choice("inhibitor", q, k_pool, block_tables, choice,
+                             run))
+
+
+def paged_flash_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                          score_scale=None, window=None, choice=None):
+    """Block-table-native paged Softmax decode (inference-only)."""
+    def run(c: KernelChoice):
+        return paged_flash_attention_fwd(
+            q, k_pool, v_pool, block_tables, lengths,
+            score_scale=score_scale, window=window,
+            pages_per_step=c.pages_per_step, interpret=registry.interpret)
+
+    return run(_paged_choice("flash", q, k_pool, block_tables, choice, run))
 
 
 # ---------------------------------------------------------------------------
@@ -114,4 +363,4 @@ def wkv6(r, k, v, w, u, state=None, *, chunk: int = 32):
     if state is not None:
         return kref.wkv6_ref(r, k, v, w, u, state)
     return wkv6_chunked(r, k, v, w, u, chunk=chunk,
-                        interpret=not _on_tpu())
+                        interpret=registry.interpret)

@@ -53,3 +53,43 @@ def flash_attention_ref(q, k, v, *, score_scale=None, causal=True,
 def wkv6_ref(r, k, v, w, u, state=None):
     """Oracle for kernels.rwkv6.wkv6_chunked (exact lax.scan recurrence)."""
     return wkv6_scan_ref(r, k, v, w, u, state)
+
+
+def _gather_paged(k_pool, v_pool, block_tables):
+    """(num_pages, ps, h_kv, d) pools + (b, P) tables -> contiguous
+    (b, P*ps, h_kv, d) views — the gather the paged kernels replace."""
+    kt = k_pool[block_tables]
+    vt = v_pool[block_tables]
+    b, npg, ps, hk, d = kt.shape
+    return (kt.reshape(b, npg * ps, hk, d), vt.reshape(b, npg * ps, hk, d))
+
+
+def _decode_mask(n_k: int, lengths, window: Optional[int]):
+    """(b, 1, 1, n_k) attendability of each gathered position for the
+    single decode query at position lengths[row]-1."""
+    kj = jnp.arange(n_k)[None, :]
+    m = kj < lengths[:, None]
+    if window is not None:
+        m = m & (kj > (lengths[:, None] - 1) - window)
+    return m[:, None, None, :]
+
+
+def paged_flash_inhibitor_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                              score_scale=None, score_shift=0.5, signed=True,
+                              normalize=True, window=None):
+    """Oracle for kernels.paged.paged_flash_inhibitor_fwd (gather + fused)."""
+    kc, vc = _gather_paged(k_pool, v_pool, block_tables)
+    mask = _decode_mask(kc.shape[1], lengths, window)
+    return inhibitor_attention(
+        q, kc.astype(q.dtype), vc.astype(q.dtype), mask=mask,
+        score_scale=score_scale, score_shift=score_shift, signed=signed,
+        normalize=normalize)
+
+
+def paged_flash_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                              score_scale=None, window=None):
+    """Oracle for kernels.paged.paged_flash_attention_fwd (gather + fused)."""
+    kc, vc = _gather_paged(k_pool, v_pool, block_tables)
+    mask = _decode_mask(kc.shape[1], lengths, window)
+    return dot_product_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                 mask=mask, score_scale=score_scale)

@@ -99,6 +99,17 @@ class Engine:
         if cfg.allocator == "paged" and not self.paged:
             log.info("family %r has no pageable KV cache; using contiguous "
                      "slots", fam)
+        forced = getattr(api.cfg.attention, "backend", None)
+        if forced == "paged_pallas":
+            # the paged decode kernel is single-query; prefill chunks are
+            # multi-query, so an engine-wide force can never run — fail at
+            # construction, not deep inside the first admission
+            raise ValueError(
+                "backend='paged_pallas' cannot be forced engine-wide: "
+                "prefill chunks are multi-query and the paged decode "
+                "kernel is single-query (n_q=1).  Leave backend=None — "
+                "the planner selects paged_pallas for TPU decode ticks "
+                "automatically")
         if self.paged:
             # downgrade (don't crash) when the plan could never select the
             # paged backend: mechanism without a 'paged' entry, a config
@@ -108,6 +119,12 @@ class Engine:
                 log.info("paged cache unavailable (%s); using contiguous "
                          "slots", why)
                 self.paged = False
+        if forced == "paged" and not self.paged:
+            raise ValueError(
+                f"backend='paged' forced but the engine is backed by "
+                f"contiguous slots (allocator={cfg.allocator!r}, family "
+                f"{fam!r}) — it needs allocator='paged' and a pageable "
+                f"family")
         self._bucketed = fam in _KV_FAMILIES
         if self.paged:
             self.alloc = PagedAllocator(cfg.max_batch, cfg.max_len,
@@ -130,6 +147,7 @@ class Engine:
         self._jit_decode = jax.jit(self._decode_step)
         self._jit_prefill_chunk = jax.jit(self._prefill_chunk)
         self._prefill_buckets: set = set()   # chunk widths handed to jit
+        self._decode_table_buckets: set = set()  # high-water table widths
 
     # ---- planning / introspection ----
     def _paged_eligible(self):
@@ -428,8 +446,29 @@ class Engine:
         for slot, req in self.active.items():
             last[slot, 0] = req.output[-1]
         self._key, sub = jax.random.split(self._key)
-        nxt, self.states = self._jit_decode(self.params, jnp.asarray(last),
-                                            self.states, sub)
+        # clamp the decode tick's block-table width to the bucketed batch
+        # high-water page count: attention (gather or paged kernel) then
+        # only walks pages some active row can actually hold, instead of
+        # the full pool-capacity table.  Power-of-two buckets bound the
+        # decode retraces by log2(pages_per_slot); tables are restored
+        # afterwards (the decode step never rewrites them).
+        states_in, full_tables = self.states, None
+        if self.paged:
+            hw = self._decode_table_width()
+            kv = self.states.kv
+            full_tables = kv.block_tables
+            states_in = self.states._replace(
+                kv=kv._replace(block_tables=full_tables[:, :, :hw]))
+            if hw not in self._decode_table_buckets:
+                self._decode_table_buckets.add(hw)
+                self._tune_decode_bucket(jnp.asarray(last), states_in, sub)
+        nxt, new_states = self._jit_decode(self.params, jnp.asarray(last),
+                                           states_in, sub)
+        if full_tables is not None:
+            kv = new_states.kv
+            new_states = new_states._replace(
+                kv=kv._replace(block_tables=full_tables))
+        self.states = new_states
         nxt = np.asarray(nxt)
         for slot in list(self.active):
             req = self.active[slot]
@@ -441,6 +480,26 @@ class Engine:
             if done:
                 finished.append(self._finish(slot))
         return finished
+
+    def _tune_decode_bucket(self, last, states_in, key) -> None:
+        """One eager (un-jitted) decode step the first time a table-width
+        bucket appears, on TPU only: concrete operands let the kernel
+        registry time its paged-kernel candidates for this shape *before*
+        the jitted tick traces — the trace then bakes the tuned winner
+        instead of the default (kernels/ops.py, DESIGN.md §10)."""
+        from repro.kernels.ops import registry as kernel_registry
+
+        if kernel_registry.interpret:
+            return                     # nothing real to time on this host
+        self._decode_step(self.params, last, states_in, key)
+
+    def _decode_table_width(self) -> int:
+        """Bucketed high-water page count across active slots: the widest
+        block table any row needs for this tick's read + one written KV
+        row, rounded up to a power of two (bounds decode retraces)."""
+        longest = max(self.alloc.slots[s].length for s in self.active) + 1
+        need = -(-longest // self.cfg.page_size)
+        return min(self.alloc.pages_per_slot, _next_pow2(max(need, 1)))
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []

@@ -91,6 +91,68 @@ def test_wkv6_extreme_decay_stability(rng):
     assert bool(jnp.isfinite(o_k).all()) and bool(jnp.isfinite(s_k).all())
 
 
+@pytest.mark.parametrize("window", [None, 6])
+def test_flash_inhibitor_cached_ragged_cursors(rng, window):
+    """Decode-cache operands: per-row q_offset/kv_valid_len ≡ the masked
+    reference over each row's valid prefix."""
+    from repro.core.inhibitor import inhibitor_attention
+
+    b, h, hk, d, max_len = 3, 4, 2, 16, 40
+    k = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    v = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    q = _mk(rng, (b, 1, h, d), jnp.float32)
+    offs = np.asarray([13, 7, 0], np.int32)
+    valids = offs + 1
+    out = flash_inhibitor_fwd(q, k, v, q_offset=jnp.asarray(offs),
+                              kv_valid_len=jnp.asarray(valids),
+                              window=window, block_q=16, block_k=16,
+                              sub_k=8, interpret=True)
+    qi = offs[:, None, None]
+    kj = np.arange(max_len)[None, None, :]
+    m = (kj <= qi) & (kj < valids[:, None, None])
+    if window is not None:
+        m &= kj > qi - window
+    ref = inhibitor_attention(q, k, v, mask=jnp.asarray(m[:, None]))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_cached_scalar_cursor(rng):
+    """Shared-cursor prefill-with-cache: scalar q_offset/kv_valid_len."""
+    from repro.core.dotprod import dot_product_attention
+
+    b, h, hk, d, max_len = 2, 4, 2, 16, 32
+    k = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    v = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    q = _mk(rng, (b, 5, h, d), jnp.float32)
+    out = flash_attention_fwd(q, k, v, q_offset=jnp.int32(3),
+                              kv_valid_len=jnp.int32(8), block_q=4,
+                              block_k=8, interpret=True)
+    qi = 3 + np.arange(5)[None, :, None]
+    kj = np.arange(max_len)[None, None, :]
+    m = np.broadcast_to((kj <= qi) & (kj < 8), (b, 5, max_len))
+    ref = dot_product_attention(q, k, v, mask=jnp.asarray(m[:, None]))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_cached_cursors_exclude_stale_rows(rng):
+    """Rows past kv_valid_len must contribute nothing — poison them."""
+    b, h, hk, d, max_len = 2, 2, 2, 8, 24
+    k = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    v = _mk(rng, (b, max_len, hk, d), jnp.float32)
+    q = _mk(rng, (b, 1, h, d), jnp.float32)
+    valids = jnp.asarray([9, 3], jnp.int32)
+    offs = valids - 1
+    clean = flash_inhibitor_fwd(q, k, v, q_offset=offs, kv_valid_len=valids,
+                                block_q=8, block_k=8, sub_k=4,
+                                interpret=True)
+    k_bad = k.at[0, 9:].set(1e9).at[1, 3:].set(1e9)
+    v_bad = v.at[0, 9:].set(-1e9).at[1, 3:].set(-1e9)
+    poisoned = flash_inhibitor_fwd(q, k_bad, v_bad, q_offset=offs,
+                                   kv_valid_len=valids, block_q=8,
+                                   block_k=8, sub_k=4, interpret=True)
+    np.testing.assert_allclose(poisoned, clean, rtol=1e-6, atol=1e-6)
+
+
 def test_ops_grads_match_ref(rng):
     q = _mk(rng, (2, 24, 4, 16), jnp.float32)
     k = _mk(rng, (2, 24, 2, 16), jnp.float32)

@@ -173,6 +173,22 @@ def test_plan_tpu_prefers_pallas_at_scale():
     assert plan.backend == "pallas"
 
 
+def test_plan_paged_pool_prefers_kernel_on_tpu():
+    """Paged decode plans the block-table-native kernel on TPU, the
+    clamped gather elsewhere — and prefill chunks always gather."""
+    cfg = _cfg("inhibitor")
+    decode = _shapes(cfg, 1, 512, has_cache=True, scalar_cursor=False,
+                     paged=True)
+    plan_tpu = plan_attention(cfg, decode._replace(platform="tpu"))
+    assert plan_tpu.backend == "paged_pallas"
+    assert "block-table-native" in plan_tpu.reason
+    plan_cpu = plan_attention(cfg, decode._replace(platform="cpu"))
+    assert plan_cpu.backend == "paged"
+    assert "gather" in plan_cpu.reason
+    prefill = decode._replace(platform="tpu", n_q=8)
+    assert plan_attention(cfg, prefill).backend == "paged"
+
+
 def test_plan_integer_lanes_go_int():
     cfg = _cfg("inhibitor")
     plan = plan_attention(cfg, _shapes(cfg, 16, 16, dtype=jnp.int32))
@@ -202,27 +218,52 @@ def test_use_kernel_shim_forces_pallas_and_falls_back():
     assert (plan4.backend, plan4.reason) == ("fused", "dense default")
 
 
-def test_pallas_backend_rejects_inexpressible_structure(rng):
-    """The flash kernels have no q_offset/valid-length operands — handing
-    them decode-cache structure must fail loudly, not silently attend
-    over stale rows."""
+def test_pallas_backend_honors_decode_structure(rng):
+    """The flash kernels carry scalar-prefetched q_offset/kv_valid_len
+    operands: a Structural with decode-cache cursors must attend over
+    exactly the valid prefix (not silently from offset 0 over stale
+    rows)."""
     from repro.core.mechanism import Structural
 
-    q = jnp.asarray(rng.normal(size=(1, 4, 2, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, 1, 2, 8)).astype(np.float32))
+    kv = jnp.asarray(rng.normal(size=(1, 8, 2, 8)).astype(np.float32))
     plan = ExecutionPlan("inhibitor", "pallas", "test")
     mech = get_mechanism("inhibitor")
-    with pytest.raises(ValueError, match="kv_valid_len"):
+    params = mech.make_params(score_scale=None, score_shift=0.5,
+                              normalize=True, kv_chunk=64)
+    out = execute_plan(plan, q, kv, kv, params=params,
+                       structural=Structural(q_offset=jnp.int32(2),
+                                             kv_valid_len=jnp.int32(3)))
+    # oracle: naive backend over only the 3 valid rows
+    ref = execute_plan(ExecutionPlan("inhibitor", "naive", "test"),
+                       q, kv[:, :3], kv[:, :3], params=params)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_paged_pallas_requires_paged_layout(rng):
+    """paged_pallas consumes a page pool + PagedLayout; executing it
+    without one is a dispatch bug and fails loudly."""
+    q = jnp.asarray(rng.normal(size=(1, 1, 2, 8)).astype(np.float32))
+    plan = ExecutionPlan("inhibitor", "paged_pallas", "test")
+    mech = get_mechanism("inhibitor")
+    with pytest.raises(ValueError, match="paged"):
         execute_plan(plan, q, q, q,
                      params=mech.make_params(score_scale=None,
                                              score_shift=0.5,
-                                             normalize=True, kv_chunk=64),
-                     structural=Structural(kv_valid_len=jnp.int32(3)))
+                                             normalize=True, kv_chunk=64))
 
 
 def test_forced_ineligible_backend_raises():
-    cfg = _cfg("inhibitor", backend="pallas")
+    # a paged backend forced at a site with no page pool can never run
+    cfg = _cfg("inhibitor", backend="paged")
     with pytest.raises(ValueError, match="ineligible"):
         plan_attention(cfg, _shapes(cfg, 1, 16, has_cache=True))
+    # and the paged kernel is decode-only: n_q > 1 is ineligible even
+    # with a pool present
+    cfg2 = _cfg("inhibitor", backend="paged_pallas")
+    with pytest.raises(ValueError, match="ineligible"):
+        plan_attention(cfg2, _shapes(cfg2, 8, 64, has_cache=True,
+                                     scalar_cursor=False, paged=True))
 
 
 def test_legacy_kind_still_plans():

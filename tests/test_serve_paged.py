@@ -195,6 +195,53 @@ def test_paged_decode_grows_pages_on_demand(rng, serve_model):
     assert eng.alloc.pages_in_use == 0
 
 
+def test_decode_clamps_tables_to_high_water_buckets(rng, serve_model,
+                                                    greedy_ref):
+    """The decode tick narrows block tables to the bucketed batch
+    high-water page count (never the full pool-capacity width for short
+    requests), restores the full tables afterwards, and stays
+    output-exact."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           page_size=4, prefill_chunk=8))
+    prompts = [np.asarray([3, 5, 7], np.int32),
+               np.asarray([2, 4, 6, 8, 1], np.int32)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=6))
+    done = {r.request_id: r.output for r in eng.run_to_completion()}
+    full_width = eng.alloc.pages_per_slot               # 16 pages
+    assert eng._decode_table_buckets, "decode never narrowed the tables"
+    # short requests (≤ 11 tokens) need at most 3 pages -> bucket 4
+    assert max(eng._decode_table_buckets) < full_width
+    # device tables were restored to full width after each tick
+    assert eng.states.kv.block_tables.shape[-1] == full_width
+    # and the outputs are exactly the single-request references
+    for i, p in enumerate(prompts):
+        assert done[i] == greedy_ref(p, 6, 64)
+
+
+def test_forced_paged_backends_fail_loudly_at_construction(serve_model):
+    """backend='paged_pallas' can never run engine-wide (prefill chunks
+    are multi-query) and backend='paged' cannot run on contiguous slots
+    — both must raise a clear error at Engine construction, not crash
+    deep inside the first admission."""
+    import dataclasses as dc
+
+    cfg, api, params = serve_model
+
+    def force(backend):
+        acfg = dc.replace(cfg.attention, backend=backend)
+        return api._replace(cfg=dc.replace(cfg, attention=acfg))
+
+    with pytest.raises(ValueError, match="single-query"):
+        Engine(force("paged_pallas"), params,
+               EngineConfig(max_batch=2, max_len=64))
+    with pytest.raises(ValueError, match="contiguous slots"):
+        Engine(force("paged"), params,
+               EngineConfig(max_batch=2, max_len=64,
+                            allocator="contiguous"))
+
+
 def test_engine_decode_plan_traces_paged_backend(serve_model):
     cfg, api, params = serve_model
     eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,

@@ -1,5 +1,5 @@
-"""Serving benchmark: paged vs contiguous KV-cache allocators, plus the
-decode-tick kernel-vs-gather arm.
+"""Serving benchmark: paged vs contiguous KV-cache allocators, the
+shared-prefix radix-cache arm, plus the decode-tick kernel-vs-gather arm.
 
 Drives the continuous-batching engine over the same synthetic ragged
 workload under both allocators and reports, per arm:
@@ -10,7 +10,15 @@ workload under both allocators and reports, per arm:
   * cache-memory high-water mark in bytes (pages actually held for the
     paged arm; the full up-front reservation for the contiguous arm)
 
-and asserts greedy-output parity between the arms.  A second,
+and asserts greedy-output parity between the arms.  The **shared-prefix
+arm** re-runs a workload where most prompt tokens are a common prefix
+(system-prompt traffic) under prefix-cache on / off / contiguous
+(which can never hit) and gates on: identical outputs across all three,
+``prefix_hit_tokens > 0``, strictly fewer prefill tokens computed with
+the cache on, a prefill compile count no higher than cache-off, and
+leak-free page accounting (``pages_in_use`` returns to exactly the
+resident cached pages, and to zero after ``PrefixIndex.clear``) —
+written to ``BENCH_serve_prefix.json``.  A second,
 attention-level microbench times one paged decode tick under the
 ``paged`` backend (contiguous block-table gather) against the
 ``paged_pallas`` backend (block-table-native kernel, DESIGN.md §10) over
@@ -37,10 +45,12 @@ import time
 
 
 def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
-            engine_kw):
+            engine_kw, prefix_cache=False):
     from repro.serve.engine import Engine, EngineConfig, Request
 
-    eng = Engine(api, params, EngineConfig(allocator=allocator, **engine_kw))
+    eng = Engine(api, params, EngineConfig(allocator=allocator,
+                                           prefix_cache=prefix_cache,
+                                           **engine_kw))
     t0 = time.perf_counter()
     for i, p in enumerate(prompts):
         eng.submit(Request(i, p, max_new_tokens=new_tokens))
@@ -64,6 +74,7 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
     else:
         hw_rows = engine_kw["max_batch"] * engine_kw["max_len"]
     tokens = sum(len(r.output) for r in done)
+    stats = eng.stats()
     return {
         "allocator": allocator,
         "requests": len(done),
@@ -73,7 +84,78 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
         "tok_per_s": round(tokens / wall, 2),
         "prefill_compiles": eng.prefill_compiles,
         "cache_high_water_bytes": mcfg.num_layers * hw_rows * row_bytes,
+        "prefill_tokens": stats["prefill_tokens"],
+        "prefix_hit_tokens": stats["prefix_hit_tokens"],
+        "forked_pages": stats["forked_pages"],
+        "evictions": stats["evictions"],
+        "cached_pages": stats["cached_pages"],
+        "pages_in_use_after_drain": stats.get("pages_in_use", 0),
     }, {r.request_id: r.output for r in done}
+
+
+def prefix_workload(cfg, rng, *, n_req, shared_len, max_suffix):
+    """Prompts dominated by one shared prefix: every request is
+    ``prefix ++ private_suffix`` with ``len(suffix) <= max_suffix <=
+    shared_len`` — at least half of all prompt tokens are shared."""
+    import numpy as np
+
+    prefix = rng.integers(0, cfg.vocab_size, (shared_len,)).astype(np.int32)
+    prompts = []
+    for _ in range(n_req):
+        sl = int(rng.integers(1, max_suffix + 1))
+        prompts.append(np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size, (sl,)).astype(np.int32)]))
+    return prompts
+
+
+def run_prefix_bench(api, params, cfg, *, rng, n_req, shared_len,
+                     max_suffix, new_tokens, engine_kw):
+    """Shared-prefix workload under cache-on / cache-off / contiguous.
+
+    Returns the (gated) result dict for ``BENCH_serve_prefix.json``.
+    The contiguous arm simply never hits — it is the no-paging baseline
+    the parity assert extends over.
+    """
+    prompts = prefix_workload(cfg, rng, n_req=n_req, shared_len=shared_len,
+                              max_suffix=max_suffix)
+    shared_tokens = n_req * shared_len
+    total_tokens = sum(len(p) for p in prompts)
+
+    arms, outputs = {}, {}
+    for name, allocator, cache in (("cache_on", "paged", True),
+                                   ("cache_off", "paged", False),
+                                   ("contiguous", "contiguous", False)):
+        res, outs = run_arm(api, params, cfg, allocator=allocator,
+                            prompts=prompts, new_tokens=new_tokens,
+                            engine_kw=engine_kw, prefix_cache=cache)
+        arms[name] = res
+        outputs[name] = outs
+
+    on, off = arms["cache_on"], arms["cache_off"]
+    gates = {
+        # exactness: cached-prefix reuse must not change a single token
+        "parity": (outputs["cache_on"] == outputs["cache_off"]
+                   == outputs["contiguous"]),
+        # the cache actually fired and saved prefill compute
+        "hit_tokens_positive": on["prefix_hit_tokens"] > 0,
+        "fewer_prefill_tokens": on["prefill_tokens"] < off["prefill_tokens"],
+        # suffix buckets are a subset of the cold buckets (chunk | page)
+        "compiles_no_higher": (on["prefill_compiles"]
+                               <= off["prefill_compiles"]),
+        # refcounted release: everything not cached went back to the free
+        # list (cache-off must drain to zero)
+        "no_leak_on": (on["pages_in_use_after_drain"] == on["cached_pages"]),
+        "no_leak_off": off["pages_in_use_after_drain"] == 0,
+    }
+    return {
+        "requests": n_req,
+        "shared_prefix_len": shared_len,
+        "shared_token_fraction": round(shared_tokens / total_tokens, 3),
+        "prompt_tokens_total": total_tokens,
+        "arms": arms,
+        "gates": gates,
+        "ok": all(gates.values()),
+    }
 
 
 def decode_kernel_bench(*, batch, page_size, pages_per_slot, num_heads,
@@ -245,6 +327,33 @@ def main(argv=None) -> int:
     print(f"serve_parity,0,{'OK' if parity else 'MISMATCH'} -> {path}",
           flush=True)
 
+    # ---- shared-prefix radix-cache arm (DESIGN.md §11) ----
+    if args.smoke:
+        prefix_kw = dict(n_req=8, shared_len=24, max_suffix=12, new_tokens=6,
+                         engine_kw=engine_kw)
+    else:
+        # page_size == prefill_chunk so suffix buckets are a subset of the
+        # cold buckets (the compile-count gate)
+        prefix_kw = dict(n_req=24, shared_len=96, max_suffix=48,
+                         new_tokens=16,
+                         engine_kw={**engine_kw, "page_size": 32})
+    prefix_res = run_prefix_bench(api, params, cfg,
+                                  rng=np.random.default_rng(args.seed + 1),
+                                  **prefix_kw)
+    with open("BENCH_serve_prefix.json", "w") as f:
+        json.dump(prefix_res, f, indent=2, sort_keys=True)
+    for name in ("cache_on", "cache_off", "contiguous"):
+        r = prefix_res["arms"][name]
+        us_per_tok = 1e6 * r["wall_s"] / max(r["tokens"], 1)
+        print(f"serve_prefix_{name},{us_per_tok:.1f},"
+              f"tok_per_s={r['tok_per_s']};"
+              f"prefill_tokens={r['prefill_tokens']};"
+              f"hit_tokens={r['prefix_hit_tokens']};"
+              f"compiles={r['prefill_compiles']}", flush=True)
+    print(f"serve_prefix_gates,0,"
+          f"{'OK' if prefix_res['ok'] else 'FAIL ' + str(prefix_res['gates'])}"
+          f" -> BENCH_serve_prefix.json", flush=True)
+
     # ---- decode-tick kernel-vs-gather arm (attention-level microbench) ----
     a = cfg.attention
     if args.smoke:
@@ -264,7 +373,7 @@ def main(argv=None) -> int:
     print(f"serve_decode_parity,0,"
           f"{'OK' if decode['parity'] else 'MISMATCH'} -> "
           f"BENCH_serve_decode.json", flush=True)
-    return 0 if (parity and decode["parity"]) else 1
+    return 0 if (parity and decode["parity"] and prefix_res["ok"]) else 1
 
 
 if __name__ == "__main__":

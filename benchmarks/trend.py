@@ -1,0 +1,117 @@
+"""Benchmark trend: delta table between this run's ``BENCH_serve_*.json``
+and the previous CI run's artifacts.
+
+CI downloads the last successful run's serve-bench artifacts into a
+directory and calls
+
+  python benchmarks/trend.py --current . --previous prev/
+
+which prints one row per tracked metric (tokens/s per allocator arm,
+prefill compile counts, decode-tick wall time, prefix-hit rate) with the
+old/new values and the percent delta.  Regressions beyond ``--warn-pct``
+(default 10%) emit GitHub ``::warning::`` annotations — the step **never
+fails**: CI-runner timing noise would make a hard gate flaky, but the
+printed trajectory makes a real regression visible in every PR.  Missing
+files (first run, renamed artifacts) are reported and skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (file, json-path, label, higher_is_better) — json-path is dot-separated
+METRICS = [
+    ("BENCH_serve_smoke.json", "paged.tok_per_s",
+     "serve paged tok/s", True),
+    ("BENCH_serve_smoke.json", "contiguous.tok_per_s",
+     "serve contiguous tok/s", True),
+    ("BENCH_serve_smoke.json", "paged.prefill_compiles",
+     "serve paged prefill compiles", False),
+    ("BENCH_serve_decode.json", "gather.tick_us",
+     "decode gather tick us", False),
+    ("BENCH_serve_decode.json", "kernel.tick_us",
+     "decode kernel tick us", False),
+    ("BENCH_serve_prefix.json", "arms.cache_on.tok_per_s",
+     "prefix cache-on tok/s", True),
+    ("BENCH_serve_prefix.json", "arms.cache_on.prefill_compiles",
+     "prefix cache-on compiles", False),
+    ("BENCH_serve_prefix.json", "_hit_rate",
+     "prefix hit rate", True),
+]
+
+
+def _lookup(doc, path):
+    if path == "_hit_rate":            # derived: hit / total prompt tokens
+        arm = doc["arms"]["cache_on"]
+        total = arm["prefix_hit_tokens"] + arm["prefill_tokens"]
+        return arm["prefix_hit_tokens"] / total if total else 0.0
+    cur = doc
+    for key in path.split("."):
+        cur = cur[key]
+    return cur
+
+
+def _load(root, fname):
+    path = os.path.join(root, fname)
+    # artifact downloads sometimes nest one directory deep
+    if not os.path.exists(path):
+        nested = os.path.join(root, os.path.splitext(fname)[0], fname)
+        path = nested if os.path.exists(nested) else path
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=".",
+                    help="directory with this run's BENCH_serve_*.json")
+    ap.add_argument("--previous", default="prev",
+                    help="directory with the last run's artifacts")
+    ap.add_argument("--warn-pct", type=float, default=10.0,
+                    help="regression threshold for ::warning:: lines")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.previous):
+        print(f"trend: no previous artifacts at {args.previous!r} — "
+              f"nothing to compare (first run?)")
+        return 0
+
+    rows, warned = [], 0
+    for fname, path, label, higher_better in METRICS:
+        try:
+            cur = float(_lookup(_load(args.current, fname), path))
+        except (OSError, KeyError, TypeError, ValueError) as e:
+            print(f"trend: current {label}: unavailable ({e!r})")
+            continue
+        try:
+            prev = float(_lookup(_load(args.previous, fname), path))
+        except (OSError, KeyError, TypeError, ValueError):
+            rows.append((label, None, cur, None, ""))
+            continue
+        delta = 100.0 * (cur - prev) / prev if prev else 0.0
+        regressed = (delta < -args.warn_pct if higher_better
+                     else delta > args.warn_pct)
+        flag = "REGRESSED" if regressed else ""
+        if regressed:
+            warned += 1
+            print(f"::warning::{label} regressed "
+                  f"{abs(delta):.1f}% ({prev:g} -> {cur:g})")
+        rows.append((label, prev, cur, delta, flag))
+
+    width = max((len(r[0]) for r in rows), default=10)
+    print(f"{'metric':<{width}}  {'previous':>10}  {'current':>10}  "
+          f"{'delta':>8}")
+    for label, prev, cur, delta, flag in rows:
+        pv = f"{prev:g}" if prev is not None else "-"
+        dv = f"{delta:+.1f}%" if delta is not None else "new"
+        print(f"{label:<{width}}  {pv:>10}  {cur:>10g}  {dv:>8}  {flag}")
+    print(f"trend: {warned} regression(s) beyond {args.warn_pct:.0f}% "
+          f"(warn-only, never failing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,13 @@ model.
 Loads params from --ckpt-dir if given (falls back to random init), then
 drives the engine with synthetic ragged prompt traffic and reports
 throughput plus the paged-cache accounting (prefill compile count,
-page-pool high-water mark).  ``--allocator contiguous`` selects the dense
-per-slot baseline; the default is the paged block-table cache.
+page-pool high-water mark) and the shared-prefix cache counters
+(hit tokens, CoW forks, evictions).  ``--allocator contiguous`` selects
+the dense per-slot baseline; the default is the paged block-table cache
+with the radix prefix index on.  ``--shared-prefix N`` makes every
+synthetic prompt share an N-token prefix (system-prompt traffic) so the
+cache has something to hit; ``--scheduler prefix`` admits
+resident-prefix requests first.
 """
 
 from __future__ import annotations
@@ -38,6 +43,13 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged pool size (default: full capacity)")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--scheduler", choices=("fifo", "priority", "prefix"),
+                    default="fifo", help="admission policy")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable the shared-prefix radix KV cache")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of common prompt prefix across requests")
     ap.add_argument("--sample", action="store_true",
                     help="temperature sampling instead of greedy decode")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -71,15 +83,21 @@ def main(argv=None):
                               page_size=args.page_size,
                               num_pages=args.num_pages,
                               prefill_chunk=args.prefill_chunk,
+                              prefix_cache=args.prefix_cache,
+                              scheduler=args.scheduler,
                               greedy=not args.sample,
                               temperature=args.temperature),
                  seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
+    plen = max(1, min(args.prompt_len, args.max_len - 1))
+    shared_len = max(0, min(args.shared_prefix, plen - 1))
+    shared = rng.integers(0, cfg.vocab_size, (shared_len,)).astype(np.int32)
     t0 = time.perf_counter()
     for i in range(args.requests):
-        plen = max(1, min(args.prompt_len, args.max_len - 1))
-        prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        tail = rng.integers(0, cfg.vocab_size,
+                            (plen - shared_len,)).astype(np.int32)
+        prompt = np.concatenate([shared, tail])
         eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens))
     done = eng.run_to_completion()
     dt = time.perf_counter() - t0
@@ -92,6 +110,13 @@ def main(argv=None):
         log.info("page pool: high-water %d / %d pages (page_size=%d)",
                  eng.alloc.high_water_pages, eng.alloc.num_pages - 1,
                  eng.alloc.page_size)
+    stats = eng.stats()
+    log.info("scheduler=%s prefill_tokens=%d prefix_hit_tokens=%d "
+             "(%d request hits) forked_pages=%d evictions=%d "
+             "cached_pages=%d", stats["scheduler"], stats["prefill_tokens"],
+             stats["prefix_hit_tokens"], stats["prefix_hit_requests"],
+             stats["forked_pages"], stats["evictions"],
+             stats["cached_pages"])
     for r in done[:3]:
         log.info("req %d -> %s...", r.request_id, r.output[:8])
     return 0

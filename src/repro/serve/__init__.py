@@ -1,4 +1,11 @@
-"""Serving: slot-pool continuous batching engine + KV cache management."""
+"""Serving: slot-pool continuous batching engine + KV cache management,
+shared-prefix radix cache, and pluggable admission scheduling."""
 
 from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401
-from repro.serve.kvcache import SlotAllocator, SlotState  # noqa: F401
+from repro.serve.kvcache import (PagedAllocator, SlotAllocator,  # noqa: F401
+                                 SlotState)
+from repro.serve.prefix import PrefixIndex  # noqa: F401
+from repro.serve.scheduler import (FIFOScheduler,  # noqa: F401
+                                   PrefixAffinityScheduler,
+                                   PriorityScheduler, Scheduler,
+                                   make_scheduler, register_scheduler)

@@ -26,6 +26,17 @@ Design (vLLM-style scheduling on a slot pool, TPU-friendly static shapes):
     same tick.  Slots whose cache hits ``max_len`` are hard-stopped
     (``Request.truncated``) instead of silently clamping writes; prompts
     with ``prompt_len >= max_len`` are rejected at submit.
+  * Under paging, finished requests feed a **shared-prefix radix index**
+    (`serve.prefix.PrefixIndex`, DESIGN.md §11): admission mounts the
+    longest page-aligned cached prefix into the new slot's block table
+    (refcount++, no copy) and prefills only the uncached suffix.  Pages
+    are copy-on-write — the only engine write that can land below the
+    mounted prefix (a near-``max_len`` bucketed chunk left-shifting over
+    already-written positions) forks the touched shared pages first.
+    Admission order is a pluggable ``Scheduler`` policy (fifo /
+    priority / prefix-affinity — serve.scheduler); per-token streaming
+    callbacks and prefix/fork/eviction counters surface through
+    ``Request.on_token`` and ``Engine.stats()``.
 
 The same engine drives the `serve` launcher and the serving example; on a
 mesh the step functions are jit'd with sharded params (TP) and replicated
@@ -35,9 +46,9 @@ small decode batches.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
-from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +57,8 @@ import numpy as np
 from repro.core.attention import KVCache, PagedKVCache
 from repro.models.registry import ModelApi
 from repro.serve.kvcache import PagedAllocator, SlotAllocator
+from repro.serve.prefix import PrefixIndex
+from repro.serve.scheduler import make_scheduler
 
 log = logging.getLogger("repro.serve")
 
@@ -57,15 +70,23 @@ _KV_FAMILIES = ("dense", "moe", "vlm")
 _PAGEABLE_FAMILIES = ("dense", "moe", "hybrid", "vlm")
 
 
-@dataclasses.dataclass
+# eq=False: requests are identity objects (schedulers remove them from
+# queues by identity; a generated __eq__ would tuple-compare the ndarray
+# prompt and raise on same-id requests)
+@dataclasses.dataclass(eq=False)
 class Request:
     request_id: int
     prompt: np.ndarray             # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    priority: int = 0              # larger admits first (priority policy)
+    # streaming: called as on_token(request, token) for every generated
+    # token, the prefill-produced first token included, in order
+    on_token: Optional[Callable[["Request", int], None]] = None
     # filled by the engine:
     output: Optional[list] = None
     truncated: bool = False        # hard-stopped at max_len / page pool dry
+    arrival: int = -1              # submit order (scheduler tiebreak)
 
 
 @dataclasses.dataclass
@@ -78,10 +99,25 @@ class EngineConfig:
     page_size: int = 16
     num_pages: Optional[int] = None   # paged pool size (None: full capacity)
     prefill_chunk: int = 32        # max tokens per prefill step (pow2)
+    prefix_cache: bool = True      # shared-prefix radix index over the
+                                   # paged pool (DESIGN.md §11); no-op for
+                                   # contiguous slots / recurrent carries
+    scheduler: Any = "fifo"        # admission policy name or Scheduler
+                                   # instance ("fifo"|"priority"|"prefix")
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _jit_pool_page_copy(k_pool, v_pool, old, new):
+    """Copy physical page ``old`` -> ``new`` in the stacked
+    (L, num_pages, page_size, h_kv, d) K/V pools.  The pools are donated,
+    so XLA aliases the buffers and the copy is O(page), not a fresh
+    pool-sized allocation (the CoW fork path — Engine._copy_page)."""
+    return (k_pool.at[:, new].set(k_pool[:, old]),
+            v_pool.at[:, new].set(v_pool[:, old]))
 
 
 class Engine:
@@ -136,8 +172,26 @@ class Engine:
             self.alloc = SlotAllocator(cfg.max_batch)
             self.states = api.init_states(cfg.max_batch, cfg.max_len,
                                           per_slot=True)
-        self.queue: deque = deque()
+        # shared-prefix radix cache: page-aligned prefixes of finished
+        # requests stay resident and are mounted at admission.  Recurrent
+        # carries (hybrid mamba) cannot skip prefix compute — their state
+        # at the suffix depends on running the whole prefix — so the
+        # index is KV-pure families only.
+        self.prefix: Optional[PrefixIndex] = None
+        if self.paged and cfg.prefix_cache and fam in _KV_FAMILIES:
+            self.prefix = PrefixIndex(self.alloc)
+            self.alloc.attach_reclaimer(self.prefix.evict)
+        elif cfg.prefix_cache and self.paged:
+            log.info("prefix cache unavailable for family %r (recurrent "
+                     "carries cannot skip prefill)", fam)
+        self.scheduler = make_scheduler(cfg.scheduler)
         self.active: Dict[int, Request] = {}     # slot -> request
+        self.counters: Dict[str, int] = {
+            "prefix_hit_tokens": 0, "prefix_hit_requests": 0,
+            "forked_pages": 0, "prefill_tokens": 0,
+            "generated_tokens": 0, "finished_requests": 0}
+        self._arrival = 0
+        self._admission_backoff = False
         self._key = jax.random.PRNGKey(seed)
         self.decode_plan = self._plan_decode()
         if self.decode_plan is not None:
@@ -150,6 +204,35 @@ class Engine:
         self._decode_table_buckets: set = set()  # high-water table widths
 
     # ---- planning / introspection ----
+    @property
+    def queue(self):
+        """The scheduler, exposed under the old attribute name (len() /
+        truthiness keep meaning 'requests waiting for admission')."""
+        return self.scheduler
+
+    def stats(self) -> Dict[str, int]:
+        """Engine-level serving counters: prefix-cache effectiveness
+        (``prefix_hit_tokens`` — prompt tokens served from cached pages
+        instead of prefill), copy-on-write activity (``forked_pages``),
+        cache churn (``evictions``, pages LRU-evicted under pool
+        pressure), plus throughput/compile accounting."""
+        s = dict(self.counters)
+        s["prefill_compiles"] = self.prefill_compiles
+        s["scheduler"] = getattr(self.scheduler, "name",
+                                 type(self.scheduler).__name__)
+        if self.prefix is not None:
+            s["evictions"] = self.prefix.evictions
+            s["cached_pages"] = self.prefix.cached_pages
+            s["prefix_lookups_hit"] = self.prefix.hits
+            s["prefix_lookups_miss"] = self.prefix.misses
+        else:
+            s["evictions"] = 0
+            s["cached_pages"] = 0
+        if self.paged:
+            s["pages_in_use"] = self.alloc.pages_in_use
+            s["high_water_pages"] = self.alloc.high_water_pages
+        return s
+
     def _paged_eligible(self):
         """(ok, why_not) for backing this model's decode with the paged
         pool — probed up front so ineligibility degrades to contiguous
@@ -283,14 +366,19 @@ class Engine:
             length=jnp.full_like(kv.length, value)))
 
     # ---- prefill scheduling ----
-    def _prefill_schedule(self, prompt_len: int) -> List[Tuple[int, int]]:
-        """(start, width) chunks covering [0, prompt_len).  Full chunks are
-        exact; for cursor-guarded families the final partial chunk is
-        padded to a power-of-two bucket and, near max_len, left-shifted
-        over already-written positions (rewrites are idempotent)."""
+    def _prefill_schedule(self, prompt_len: int,
+                          start: int = 0) -> List[Tuple[int, int]]:
+        """(start, width) chunks covering [start, prompt_len).  Full
+        chunks are exact; for cursor-guarded families the final partial
+        chunk is padded to a power-of-two bucket and, near max_len,
+        left-shifted over already-written positions (rewrites are
+        idempotent — and when ``start`` is a prefix-cache credit, a
+        left shift below it lands on shared pages, which admission forks
+        first: DESIGN.md §11).  ``start > 0`` requires cached KV rows at
+        [0, start) — the prefix credit."""
         chunk = self.cfg.prefill_chunk
         out: List[Tuple[int, int]] = []
-        pos = 0
+        pos = start
         while pos < prompt_len:
             take = min(chunk, prompt_len - pos)
             if self._bucketed:
@@ -313,10 +401,7 @@ class Engine:
         if grew is None:
             return False
         if grew:
-            row = jnp.asarray(self.alloc.block_tables[slot])
-            kv = self.states.kv
-            self.states = self.states._replace(kv=kv._replace(
-                block_tables=kv.block_tables.at[:, slot].set(row)))
+            self._mirror_table(slot)
         return True
 
     def _prefill(self, slot: int, req: Request, schedule) -> int:
@@ -352,6 +437,17 @@ class Engine:
 
     # ---- public API ----
     def submit(self, req: Request):
+        # validate + defensively copy: a float array would silently turn
+        # into garbage token ids inside the jitted prefill, and a caller
+        # mutating its array after submit would corrupt queued prompts
+        arr = np.asarray(req.prompt)
+        if arr.ndim != 1:
+            raise ValueError(
+                f"prompt must be 1-D (token ids), got shape {arr.shape}")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"prompt must be an integer array, got dtype {arr.dtype}")
+        req.prompt = arr.astype(np.int32, copy=True)
         plen = len(req.prompt)
         if plen < 1:
             raise ValueError("empty prompt")
@@ -360,7 +456,12 @@ class Engine:
                 f"prompt_len={plen} >= max_len={self.cfg.max_len}: the KV "
                 f"buffer cannot hold the prompt plus one generated token")
         if self.paged:
-            # the prefill write extent plus the first decode tick's KV row
+            # the prefill write extent plus the first decode tick's KV
+            # row.  Deliberately credit-free: a slot referencing N pages
+            # needs N physical pages whether or not some are shared, and
+            # cached credit can shrink (eviction) between submit and
+            # admission — this check must reject only prompts the pool
+            # could never hold
             need = -(-max(self._prefill_extent(plen), plen + 1)
                      // self.cfg.page_size)
             if need > self.alloc.num_pages - 1:
@@ -369,31 +470,158 @@ class Engine:
                     f"{self.alloc.num_pages - 1}")
         req.output = []
         req.truncated = False
-        self.queue.append(req)
+        req.arrival = self._arrival
+        self._arrival += 1
+        self.scheduler.add(req)
+
+    def _prefix_credit(self, req: Request) -> Tuple[int, List[int]]:
+        """(tokens, pages) of the longest usable cached prefix of the
+        request's prompt: page-aligned by construction, and capped so at
+        least one prompt token is always prefilled (the engine needs the
+        last prompt token's logits to generate)."""
+        if self.prefix is None:
+            return 0, []
+        m, pages = self.prefix.match(req.prompt)
+        ps = self.cfg.page_size
+        cap = ((len(req.prompt) - 1) // ps) * ps
+        m = min(m, cap)
+        return m, pages[:m // ps]
+
+    def _copy_page(self, old: int, new: int):
+        """Device half of a CoW fork: copy pool page ``old`` -> ``new``
+        across all layers (the forked page must carry the shared rows the
+        slot is NOT about to rewrite).  Jitted with donated pools so XLA
+        updates the buffers in place — O(page) work, not a fresh
+        pool-sized array per fork; page ids are traced scalars, so every
+        fork reuses one trace."""
+        kv = self.states.kv
+        k, v = _jit_pool_page_copy(kv.k, kv.v, jnp.int32(old),
+                                   jnp.int32(new))
+        self.states = self.states._replace(kv=kv._replace(k=k, v=v))
+
+    def _mirror_table(self, slot: int):
+        """Push the slot's host block-table row into device state."""
+        row = jnp.asarray(self.alloc.block_tables[slot])
+        kv = self.states.kv
+        self.states = self.states._replace(kv=kv._replace(
+            block_tables=kv.block_tables.at[:, slot].set(row)))
+
+    def _scrub_slot_device(self, slot: int):
+        """Zero the slot's device table/cursor row: an inactive row keeps
+        flowing through the static-shape decode step, and its garbage
+        scatter must land on the trash page — never on pages the row's
+        previous mapping pointed at (they may be cached/reallocated)."""
+        kv = self.states.kv
+        self.states = self.states._replace(kv=kv._replace(
+            block_tables=kv.block_tables.at[:, slot].set(0),
+            length=kv.length.at[:, slot].set(0)))
+
+    def _stage_slot(self, slot: int, req: Request, credit: int,
+                    pages: List[int]) -> Optional[List[Tuple[int, int]]]:
+        """Mount the prefix credit, grow the block table over the prefill
+        write extent + first decode row, and CoW-fork any shared page the
+        bucketed schedule would rewrite.  Returns the prefill schedule
+        the fork analysis covered (the caller must prefill exactly it),
+        or None when the page pool ran dry (caller scrubs the slot and
+        backs off or retries uncached)."""
+        if credit:
+            self.alloc.map_shared(slot, pages)
+        schedule = self._prefill_schedule(len(req.prompt), start=credit)
+        # cover the prefill write extent AND the first decode tick's
+        # KV row (the slot decodes this very tick, before the next
+        # tick's growth pass runs)
+        need = max(max(s + c for s, c in schedule), len(req.prompt) + 1)
+        if self.paged and not self._ensure_pages(slot, need):
+            return None
+        if credit:
+            # copy-on-write: the only engine writes below the credit are
+            # near-max_len bucketed chunks left-shifting over already-
+            # written positions.  The rewrite is idempotent (same tokens,
+            # same positions) but must not scatter into pages the index /
+            # other slots still reference — fork those first.
+            ps = self.cfg.page_size
+            for start, cb in schedule:
+                if start >= credit:
+                    continue
+                lo = start // ps
+                hi = -(-min(start + cb, credit) // ps)
+                for lp in range(lo, hi):
+                    if self.alloc.writable(slot, lp):
+                        continue
+                    fork = self.alloc.fork(slot, lp)
+                    if fork is None:
+                        return None
+                    self._copy_page(*fork)
+                    self.counters["forked_pages"] += 1
+                    log.debug("CoW fork: slot %d logical page %d "
+                              "(%d -> %d)", slot, lp, *fork)
+        return schedule
+
+    def _append_token(self, req: Request, tok: int):
+        """Record a generated token and fire the streaming callback."""
+        tok = int(tok)
+        req.output.append(tok)
+        self.counters["generated_tokens"] += 1
+        if req.on_token is not None:
+            try:
+                req.on_token(req, tok)
+            except Exception:   # noqa: BLE001 — user callback must not
+                log.exception(  # kill the serving loop
+                    "on_token callback failed for request %d",
+                    req.request_id)
 
     def _admit(self) -> List[Request]:
         finished: List[Request] = []
-        while self.queue:
-            slot = self.alloc.claim(self.queue[0].request_id)
-            if slot is None:
+        # distinguishes "admission failed on an offered request" (a stuck
+        # engine if nothing is active) from "the scheduler deferred"
+        # (next() -> None — a policy choice, keep ticking)
+        self._admission_backoff = False
+        while len(self.scheduler):
+            req = self.scheduler.next(self)
+            if req is None:
                 break
-            req = self.queue[0]
-            schedule = self._prefill_schedule(len(req.prompt))
-            # cover the prefill write extent AND the first decode tick's
-            # KV row (the slot decodes this very tick, before the next
-            # tick's growth pass runs)
-            need = max(max(s + c for s, c in schedule), len(req.prompt) + 1)
-            if self.paged and not self._ensure_pages(slot, need):
+            slot = self.alloc.claim(req.request_id)
+            if slot is None:
+                self._admission_backoff = True
+                break
+            credit, pages = self._prefix_credit(req)
+            schedule = self._stage_slot(slot, req, credit, pages)
+            if schedule is None and credit:
+                # pool dry with the credit mounted (fresh suffix pages or
+                # CoW forks short): the cache must never block an
+                # admission an empty cache would allow — scrub the slot
+                # and retry uncached (eviction freed what it could).  The
+                # failed attempt may already have mirrored its table row
+                # into device state — zero it, or this (inactive) row's
+                # decode scatter would corrupt the mounted shared pages
+                self.alloc.release(slot)
+                if self.paged:
+                    self._scrub_slot_device(slot)
+                slot = self.alloc.claim(req.request_id)
+                credit, pages = 0, []
+                schedule = self._stage_slot(slot, req, credit, pages)
+            if schedule is None:
                 # free list dry: back off, retry when a slot releases pages
                 self.alloc.release(slot)
+                if self.paged:
+                    self._scrub_slot_device(slot)
+                self._admission_backoff = True
                 break
-            self.queue.popleft()
+            self.scheduler.remove(req)
             self.active[slot] = req
-            # reset this slot's cursor/recurrent state, then prefill
+            # reset this slot's cursor/recurrent state, then prefill the
+            # uncached suffix (device table row = shared + fresh + forks)
             self.states = _reset_slot(self.states, slot)
+            if self.paged:
+                self._mirror_table(slot)
+            # the schedule the fork analysis covered — prefill exactly it
             nxt = self._prefill(slot, req, schedule)
             self.alloc.slots[slot].length = len(req.prompt)
-            req.output.append(nxt)
+            self.counters["prefill_tokens"] += len(req.prompt) - credit
+            if credit:
+                self.counters["prefix_hit_tokens"] += credit
+                self.counters["prefix_hit_requests"] += 1
+            self._append_token(req, nxt)
             # EOS/max_new_tokens can trigger on the very first
             # (prefill-produced) token — finish at admission, same tick
             done = (len(req.output) >= req.max_new_tokens
@@ -402,22 +630,29 @@ class Engine:
                 finished.append(self._finish(slot))
                 log.debug("request %d finished at admission", req.request_id)
             else:
-                log.debug("admitted request %d into slot %d", req.request_id,
-                          slot)
+                log.debug("admitted request %d into slot %d (prefix credit "
+                          "%d tokens)", req.request_id, slot, credit)
         return finished
 
     def _finish(self, slot: int):
         req = self.active.pop(slot)
+        self.counters["finished_requests"] += 1
+        if self.prefix is not None:
+            # cache the finished sequence: every written KV row is valid
+            # (prompt + all-but-the-last generated token have rows), and
+            # the index takes references on the page-aligned prefix — the
+            # release below then frees only what nothing else holds
+            rows = self.alloc.slots[slot].length
+            toks = np.concatenate([
+                req.prompt,
+                np.asarray(req.output[:max(0, rows - len(req.prompt))],
+                           np.int32)])
+            self.prefix.insert(toks[:rows], self.alloc.held(slot))
         self.alloc.release(slot)
         if self.paged:
-            # zero the device table/cursor row: the freed pages can be
-            # reacquired by other slots any tick, and this (now inactive)
-            # row keeps flowing through the static-shape decode step — its
-            # garbage scatter must land on the trash page, not on them
-            kv = self.states.kv
-            self.states = self.states._replace(kv=kv._replace(
-                block_tables=kv.block_tables.at[:, slot].set(0),
-                length=kv.length.at[:, slot].set(0)))
+            # the freed pages can be reacquired by other slots (or stay
+            # cached in the index) any tick — scrub the device row
+            self._scrub_slot_device(slot)
         return req
 
     def step(self) -> List[Request]:
@@ -472,7 +707,7 @@ class Engine:
         nxt = np.asarray(nxt)
         for slot in list(self.active):
             req = self.active[slot]
-            req.output.append(int(nxt[slot]))
+            self._append_token(req, nxt[slot])
             self.alloc.slots[slot].length += 1
             done = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None
@@ -504,9 +739,35 @@ class Engine:
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
-            done.extend(self.step())
-            if not self.active and not self.queue:
+            was_idle = not self.active
+            out = self.step()
+            done.extend(out)
+            if not self.active and not len(self.scheduler):
                 break
+            if (was_idle and not self.active and not out
+                    and self._admission_backoff):
+                # the tick changed nothing: no active slot to free pages,
+                # nothing finished, and admission failed on a request the
+                # scheduler actually offered — every later tick would be
+                # identical, so raise instead of silently burning
+                # max_ticks (this state means a leak or an externally
+                # held resource; healthy admission always makes progress
+                # from an idle engine, since the prefix cache is fully
+                # evictable and submit() rejects prompts the pool could
+                # never hold).  A scheduler that merely deferred
+                # (next() -> None) keeps ticking: deferral is a policy
+                # choice, not a stuck engine.
+                head = self.scheduler.next(self)
+                head_desc = (f"id={head.request_id}, "
+                             f"prompt_len={len(head.prompt)}"
+                             if head is not None else "deferred")
+                raise RuntimeError(
+                    f"engine cannot make progress: {len(self.scheduler)} "
+                    f"request(s) queued (head: {head_desc}), no active "
+                    f"slots, and admission backed off"
+                    + (f" [pages_in_use={self.alloc.pages_in_use}/"
+                       f"{self.alloc.num_pages - 1}]" if self.paged else
+                       ""))
         return done
 
 

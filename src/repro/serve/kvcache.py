@@ -25,6 +25,18 @@ Two allocators back those slots:
     tables are zeroed on release, so stale rows scatter into page 0, which
     is never allocated and never read (validity is cursor-defined).
 
+    Pages are **reference counted** (DESIGN.md §11): the shared-prefix
+    radix index (`serve.prefix.PrefixIndex`) and any number of slots may
+    reference the same physical page.  ``map_shared`` points a slot's
+    block table at already-populated pages (refcount++), ``release``
+    decrements instead of freeing, and a page returns to the free list
+    only when its count hits zero.  A slot may write into a mapped page
+    only while it is the sole owner (``writable``); ``fork`` implements
+    the copy-on-write half — a fresh page replaces the shared one in the
+    slot's table and the *caller* copies the device pool rows.  When the
+    free list runs dry, an attached reclaimer (the prefix index's LRU
+    eviction) is asked to give pages back before allocation fails.
+
 Both allocators expose the same scheduling surface (``claim`` /
 ``release`` / ``active`` / ``lengths`` / ``slots``); the paged one adds
 ``ensure(slot, length)`` for on-demand page growth and a ``block_tables``
@@ -34,7 +46,7 @@ array the engine mirrors into device state.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -70,7 +82,8 @@ class SlotAllocator:
 
 
 class PagedAllocator:
-    """Block-table allocator over a shared page pool (vLLM-style).
+    """Block-table allocator over a shared, ref-counted page pool
+    (vLLM-style).
 
     ``num_pages`` counts *physical* pages including the reserved trash
     page 0; usable capacity is ``num_pages - 1``.  The default sizing
@@ -98,12 +111,54 @@ class PagedAllocator:
         # LIFO free list (page 0 reserved as the trash page): pop from the
         # end so recently-released pages are reused while still cache-warm
         self.free: List[int] = list(range(num_pages - 1, 0, -1))
+        # per-physical-page reference count: slots and the prefix index
+        # each hold one reference per mapping (page 0 never counted)
+        self.ref = np.zeros(num_pages, np.int32)
         self.high_water_pages = 0
+        self._reclaim: Optional[Callable[[int], int]] = None
 
     @property
     def pages_in_use(self) -> int:
         return (self.num_pages - 1) - len(self.free)
 
+    def attach_reclaimer(self, fn: Callable[[int], int]):
+        """``fn(n)`` is asked to return >= ``n`` pages to the free list
+        (by dropping its own references) when allocation runs dry — the
+        prefix index's LRU eviction.  Best effort: it returns how many
+        pages it actually freed."""
+        self._reclaim = fn
+
+    # ---- reference counting ----
+    def addref(self, page: int):
+        if page == 0:
+            raise ValueError("page 0 is the reserved trash page")
+        self.ref[page] += 1
+
+    def decref(self, page: int) -> int:
+        """Drop one reference; returns 1 if the page went back to the
+        free list, 0 if other references keep it alive."""
+        if self.ref[page] <= 0:
+            raise RuntimeError(
+                f"page {page} double-freed (refcount already 0)")
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            self.free.append(page)
+            return 1
+        return 0
+
+    def _alloc_page(self, still_needed: int) -> Optional[int]:
+        """Pop a fresh page (refcount 1), asking the reclaimer to evict
+        cached pages when the free list is dry.  ``still_needed`` is a
+        hint for how many more pages the current operation wants."""
+        if not self.free and self._reclaim is not None:
+            self._reclaim(max(still_needed, 1))
+        if not self.free:
+            return None
+        page = self.free.pop()
+        self.ref[page] = 1
+        return page
+
+    # ---- slot lifecycle ----
     def claim(self, request_id: int) -> Optional[int]:
         for i, s in enumerate(self.slots):
             if s.done:
@@ -111,13 +166,34 @@ class PagedAllocator:
                 return i
         return None
 
+    def held(self, slot: int) -> List[int]:
+        """Physical pages mapped by ``slot`` in logical order."""
+        return list(self._pages[slot])
+
+    def map_shared(self, slot: int, pages: List[int]):
+        """Point the slot's leading block-table entries at already-
+        populated shared pages (prefix-cache hit): refcount++ each, no
+        free-list traffic.  Must be called on a freshly claimed slot,
+        before any ``ensure`` growth."""
+        if self._pages[slot]:
+            raise RuntimeError(
+                f"map_shared on slot {slot} with {len(self._pages[slot])} "
+                f"pages already mapped — shared prefixes mount at logical 0")
+        if len(pages) > self.pages_per_slot:
+            raise ValueError("shared prefix exceeds the per-slot table")
+        for i, page in enumerate(pages):
+            self.addref(page)
+            self.block_tables[slot, i] = page
+            self._pages[slot].append(page)
+
     def ensure(self, slot: int, length: int) -> Optional[bool]:
         """Grow ``slot``'s block table to cover ``length`` positions.
 
         Returns True if new pages were mapped, False if already covered,
-        None if the free list ran dry (caller backpressures: requeue the
-        request or hard-stop the generation).  Pages grabbed before an
-        exhaustion are kept mapped — they are reclaimed with the slot.
+        None if the free list ran dry — even after asking the reclaimer
+        to evict (caller backpressures: requeue the request or hard-stop
+        the generation).  Pages grabbed before an exhaustion are kept
+        mapped — they are reclaimed with the slot.
         """
         need = -(-length // self.page_size)
         if need > self.pages_per_slot:
@@ -125,9 +201,9 @@ class PagedAllocator:
         grew = False
         held = self._pages[slot]
         while len(held) < need:
-            if not self.free:
+            page = self._alloc_page(need - len(held))
+            if page is None:
                 return None
-            page = self.free.pop()
             self.block_tables[slot, len(held)] = page
             held.append(page)
             grew = True
@@ -137,9 +213,34 @@ class PagedAllocator:
                                         self.pages_in_use)
         return grew
 
+    # ---- copy-on-write ----
+    def writable(self, slot: int, logical: int) -> bool:
+        """True when the slot is the sole owner of its ``logical``-th
+        page — i.e. scattering KV rows into it cannot corrupt another
+        slot's view or the prefix index's cached content."""
+        return int(self.ref[self._pages[slot][logical]]) == 1
+
+    def fork(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fork: replace the shared ``logical``-th page of
+        ``slot`` with a fresh page (refcount 1) and drop the slot's
+        reference on the shared one.  Returns ``(old, new)`` physical ids
+        so the caller can copy the device pool rows (the allocator only
+        does the accounting), or None if no page could be allocated."""
+        old = self._pages[slot][logical]
+        new = self._alloc_page(1)
+        if new is None:
+            return None
+        self.decref(old)            # shared owners keep it alive
+        self._pages[slot][logical] = new
+        self.block_tables[slot, logical] = new
+        self.high_water_pages = max(self.high_water_pages, self.pages_in_use)
+        return old, new
+
     def release(self, slot: int):
-        # O(pages-held) reclaim: push back on the free list, zero the table
-        self.free.extend(self._pages[slot])
+        # O(pages-held) reclaim: drop one reference per mapped page (the
+        # free-list push happens at refcount 0), zero the table
+        for page in self._pages[slot]:
+            self.decref(page)
         self._pages[slot] = []
         self.block_tables[slot] = 0
         self.slots[slot] = SlotState()

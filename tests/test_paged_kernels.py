@@ -259,3 +259,62 @@ def test_kernel_choice_merge_semantics():
     assert dataclasses.astuple(merged) == (64, 256, 16, 4)
     assert kops.KernelChoice().empty
     assert not partial.empty
+
+
+def test_shared_pages_across_rows_read_identically(rng):
+    """Prefix-cache invariant (DESIGN.md §11): two rows whose block
+    tables reference the *same* physical pages (a mounted shared prefix)
+    must read them identically — the paged kernels and the gather
+    backend tolerate multiply-referenced table entries, because a table
+    entry is just an index into the pool.
+
+    Construction: rows 0 and 1 share their first two physical pages
+    (16 tokens of common prefix) and diverge afterwards; row 2 is
+    unrelated.  The check is against a dense per-row gather of each
+    row's logical view — if any path special-cased "pages are disjoint",
+    the shared rows would read garbage.
+    """
+    heads, kv_heads, d, ps = 4, 2, 16, 8
+    batch, pages_per_slot = 3, 4
+    num_pages = batch * pages_per_slot + 1
+    kp = rng.normal(size=(num_pages, ps, kv_heads, d)).astype(np.float32)
+    vp = rng.normal(size=(num_pages, ps, kv_heads, d)).astype(np.float32)
+    lengths = np.asarray([21, 18, 13], np.int32)
+    tables = np.zeros((batch, pages_per_slot), np.int32)
+    tables[0, :3] = [1, 2, 3]       # rows 0/1 share physical pages 1, 2
+    tables[1, :3] = [1, 2, 4]       # (the mounted prefix), then diverge
+    tables[2, :2] = [5, 6]
+    kp, vp = jnp.asarray(kp), jnp.asarray(vp)
+    tables_j, lengths_j = jnp.asarray(tables), jnp.asarray(lengths)
+    q = jnp.asarray(rng.normal(size=(batch, 1, heads, d)).astype(np.float32))
+
+    # dense oracle: gather each row's logical view and run the reference
+    def dense_view(pool):
+        arr = np.asarray(pool)
+        out = np.stack([arr[tables[b]].reshape(-1, kv_heads, d)
+                        for b in range(batch)])
+        return jnp.asarray(out)
+
+    kd, vd = dense_view(kp), dense_view(vp)
+    kj = jnp.arange(pages_per_slot * ps)[None, :]
+    mask = (kj < lengths_j[:, None])[:, None, None, :]
+
+    m = get_mechanism("inhibitor")
+    params = m.make_params(score_scale=None, score_shift=0.5,
+                           normalize=True, kv_chunk=64)
+    oracle = execute_plan(ExecutionPlan("inhibitor", "fused", "test"),
+                          q, kd, vd, params=params, mask=mask)
+
+    layout = PagedLayout(tables_j, ps)
+    structural = Structural(causal=True, window=None,
+                            q_offset=lengths_j - 1, kv_valid_len=lengths_j)
+    out_kernel = execute_plan(
+        ExecutionPlan("inhibitor", "paged_pallas", "test"),
+        q, kp, vp, params=params, structural=structural, paged=layout)
+    out_gather = execute_plan(
+        ExecutionPlan("inhibitor", "paged", "test"),
+        q, kp, vp, params=params, mask=mask, paged=layout)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(oracle),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(out_gather), np.asarray(oracle),
+                               **TOL)

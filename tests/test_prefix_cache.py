@@ -1,0 +1,413 @@
+"""Shared-prefix radix KV cache (DESIGN.md §11): radix-index matching /
+splitting / LRU eviction, allocator refcount + copy-on-write accounting,
+and engine-level behavior — prefix hits with exact outputs, CoW forks
+under near-max_len bucketed prefill, refcount-driven eviction under pool
+pressure, and leak-free release.
+
+Shared fixtures (``serve_model``, ``greedy_ref``) live in conftest.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.kvcache import PagedAllocator
+from repro.serve.prefix import PrefixIndex
+
+
+def _take_pages(al, request_id, n_tokens):
+    """Claim a slot, grow it over ``n_tokens``, return (slot, pages)."""
+    slot = al.claim(request_id)
+    assert al.ensure(slot, n_tokens) is True
+    return slot, al.held(slot)
+
+
+def _assert_pool_consistent(al):
+    """Free list and refcounts partition the usable pool exactly."""
+    free = list(al.free)
+    assert len(set(free)) == len(free), "duplicate pages on the free list"
+    assert all(al.ref[p] == 0 for p in free)
+    assert 0 not in free
+    referenced = [p for p in range(1, al.num_pages) if al.ref[p] > 0]
+    assert sorted(free + referenced) == list(range(1, al.num_pages))
+    assert al.pages_in_use == len(referenced)
+
+
+# ---------------------------------------------------------------------------
+# Radix index (host side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_index_match_is_page_aligned_and_exact():
+    al = PagedAllocator(max_batch=2, max_len=64, page_size=4)
+    idx = PrefixIndex(al)
+    assert idx.match([1, 2, 3, 4, 5]) == (0, [])
+
+    slot, pages = _take_pages(al, 0, 12)
+    toks = np.arange(100, 112)
+    assert idx.insert(toks, pages) == 3
+    al.release(slot)
+    assert al.pages_in_use == 3            # index keeps its references
+    _assert_pool_consistent(al)
+
+    assert idx.match(toks) == (12, pages[:3])
+    # divergent tail: only the full-page-aligned shared prefix matches
+    assert idx.match(list(toks[:9]) + [7, 7, 7]) == (8, pages[:2])
+    # divergence inside the first page shares nothing
+    assert idx.match([100, 7, 7, 7, 7]) == (0, [])
+    # shorter query than a full page: nothing page-aligned to mount
+    assert idx.match(toks[:3]) == (0, [])
+
+
+def test_index_insert_splits_edges_and_shares_interior_pages():
+    al = PagedAllocator(max_batch=2, max_len=64, page_size=4)
+    idx = PrefixIndex(al)
+    s0, pages_a = _take_pages(al, 0, 12)
+    a = np.asarray([9] * 8 + [1, 2, 3, 4])
+    idx.insert(a, pages_a)
+    al.release(s0)
+
+    # b shares a's first two pages tokenwise, then diverges: the insert
+    # must split a's edge and reference only b's divergent suffix pages
+    s1, pages_b = _take_pages(al, 1, 12)
+    b = np.asarray([9] * 8 + [5, 6, 7, 8])
+    assert idx.insert(b, pages_b) == 1
+    al.release(s1)
+    assert idx.cached_pages == 4           # 2 shared + 1 + 1
+    _assert_pool_consistent(al)
+
+    # both sequences resolve fully, through a's physical prefix pages
+    assert idx.match(a) == (12, pages_a[:3])
+    assert idx.match(b) == (12, pages_a[:2] + [pages_b[2]])
+    # re-inserting an already-cached sequence references nothing new
+    s2, pages_c = _take_pages(al, 2, 12)
+    assert idx.insert(a, pages_c) == 0
+    al.release(s2)
+    assert idx.cached_pages == 4
+
+
+def test_index_lru_eviction_frees_cold_leaves_first():
+    al = PagedAllocator(max_batch=2, max_len=64, page_size=4)
+    idx = PrefixIndex(al)
+    s0, pages_a = _take_pages(al, 0, 8)
+    a = np.asarray([1] * 8)
+    idx.insert(a, pages_a)
+    al.release(s0)
+    s1, pages_b = _take_pages(al, 1, 8)
+    b = np.asarray([2] * 8)
+    idx.insert(b, pages_b)
+    al.release(s1)
+
+    idx.match(a)                           # a is now hottest
+    freed = idx.evict(1)
+    assert freed >= 1 and idx.evictions >= 1
+    assert idx.match(b, touch=False) == (0, [])    # cold leaf gone
+    assert idx.match(a, touch=False)[0] == 8       # hot entry survives
+    _assert_pool_consistent(al)
+    # scheduler affinity probes (touch=False) must not distort LRU order
+    assert idx.clear() == 2
+    assert al.pages_in_use == 0
+
+
+def test_index_eviction_skips_pages_shared_with_active_slots():
+    """Evicting an entry whose pages an active slot still references
+    drops the index's reference but frees nothing — the slot's mapping
+    stays valid, and the pages return to the free list only when the
+    slot releases."""
+    al = PagedAllocator(max_batch=2, max_len=64, page_size=4)
+    idx = PrefixIndex(al)
+    s0, pages = _take_pages(al, 0, 8)
+    idx.insert(np.arange(8), pages)
+    al.release(s0)
+
+    slot = al.claim(1)
+    al.map_shared(slot, pages[:2])         # active slot mounts the prefix
+    assert idx.evict(1) == 0               # nothing actually freed
+    assert idx.cached_pages == 0           # but the entry is detached
+    assert al.pages_in_use == 2            # slot's references keep them
+    al.release(slot)
+    assert al.pages_in_use == 0
+    _assert_pool_consistent(al)
+
+
+# ---------------------------------------------------------------------------
+# Allocator refcounts + copy-on-write (host side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_allocator_map_shared_fork_and_release_accounting():
+    al = PagedAllocator(max_batch=2, max_len=32, page_size=8)
+    s0, pages = _take_pages(al, 0, 16)     # 2 pages, ref 1 each
+    for p in pages:
+        al.addref(p)                       # simulate index ownership
+    al.release(s0)
+    assert al.pages_in_use == 2
+
+    s1 = al.claim(1)
+    al.map_shared(s1, pages)
+    assert [int(al.ref[p]) for p in pages] == [2, 2]
+    assert not al.writable(s1, 0) and not al.writable(s1, 1)
+
+    old, new = al.fork(s1, 0)
+    assert old == pages[0] and new not in pages
+    assert al.writable(s1, 0)              # sole owner of the fork
+    assert int(al.ref[old]) == 1           # the "index" keeps the original
+    assert al.block_tables[s1, 0] == new
+    assert al.held(s1) == [new, pages[1]]
+
+    al.ensure(s1, 24)                      # grow a fresh third page
+    al.release(s1)
+    assert al.pages_in_use == 2            # only the index refs survive
+    for p in pages:
+        al.decref(p)
+    assert al.pages_in_use == 0
+    _assert_pool_consistent(al)
+    with pytest.raises(RuntimeError, match="double-freed"):
+        al.decref(pages[0])
+
+
+def test_allocator_reclaimer_is_invoked_when_free_list_dries():
+    al = PagedAllocator(max_batch=2, max_len=32, page_size=8, num_pages=3)
+    calls = []
+    s0, pages = _take_pages(al, 0, 16)     # takes both usable pages
+    for p in pages:
+        al.addref(p)
+    al.release(s0)
+
+    def reclaim(n):
+        calls.append(n)
+        return sum(al.decref(p) for p in pages)  # index drops everything
+
+    al.attach_reclaimer(reclaim)
+    s1 = al.claim(1)
+    assert al.ensure(s1, 16) is True       # dry -> reclaim -> succeeds
+    assert calls and calls[0] >= 1
+    al.release(s1)
+    _assert_pool_consistent(al)
+
+
+def test_allocator_trash_page_never_refcounted():
+    al = PagedAllocator(max_batch=1, max_len=32, page_size=8)
+    with pytest.raises(ValueError, match="trash page"):
+        al.addref(0)
+    s = al.claim(0)
+    al.ensure(s, 8)
+    with pytest.raises(RuntimeError, match="already mapped"):
+        al.map_shared(s, [1])              # prefixes mount at logical 0
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+def test_second_request_mounts_cached_prefix_with_exact_output(
+        rng, serve_model, greedy_ref):
+    """Acceptance: a repeated prompt prefills only the uncached suffix
+    (prefix_hit_tokens > 0, fewer prefill tokens), with bit-identical
+    greedy output, and release accounting balances to the cached pages."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    p = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+    ref = greedy_ref(p, 4)
+    eng.submit(Request(0, p, max_new_tokens=4))
+    first = eng.run_to_completion()
+    eng.submit(Request(1, p, max_new_tokens=4))
+    second = eng.run_to_completion()
+    assert first[0].output == ref and second[0].output == ref
+
+    s = eng.stats()
+    assert s["prefix_hit_tokens"] == 16    # 2 full pages of the 20-token
+    assert s["prefix_hit_requests"] == 1   # prompt (page-aligned, capped)
+    assert s["prefill_tokens"] == 20 + 4   # cold full + warm suffix
+    assert s["forked_pages"] == 0          # suffix writes land on fresh
+    assert s["pages_in_use"] == s["cached_pages"] > 0
+    _assert_pool_consistent(eng.alloc)
+
+
+def test_cache_on_off_and_contiguous_outputs_identical(rng, serve_model):
+    """Acceptance: identical greedy outputs across cache-on, cache-off
+    and contiguous arms on a shared-prefix workload."""
+    cfg, api, params = serve_model
+    shared = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, (int(l),)).astype(np.int32)])
+        for l in (3, 7, 5, 9, 1)]
+
+    outs = {}
+    for name, allocator, cache in (("on", "paged", True),
+                                   ("off", "paged", False),
+                                   ("contig", "contiguous", False)):
+        eng = Engine(api, params, EngineConfig(
+            max_batch=2, max_len=64, page_size=8, prefill_chunk=8,
+            allocator=allocator, prefix_cache=cache))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=5))
+        outs[name] = {r.request_id: r.output
+                      for r in eng.run_to_completion()}
+        if name == "on":
+            assert eng.stats()["prefix_hit_tokens"] > 0
+            assert eng.alloc.pages_in_use == eng.prefix.cached_pages
+            _assert_pool_consistent(eng.alloc)
+        if name == "off":
+            assert eng.stats()["prefix_hit_tokens"] == 0
+            assert eng.alloc.pages_in_use == 0
+    assert outs["on"] == outs["off"] == outs["contig"]
+
+
+def test_cow_fork_on_bucketed_left_shift_near_max_len(rng, serve_model,
+                                                      greedy_ref):
+    """Acceptance (CoW): a near-max_len prompt whose bucketed final chunk
+    left-shifts below the mounted prefix forks the touched shared pages
+    — the rewrite lands on private copies, the output stays exact, and
+    the original cached entry is untouched."""
+    cfg, api, params = serve_model
+    # ps=2, max_len=16, chunk=8: A caches 10 tokens (5 pages); B extends
+    # to 15 tokens, its final chunk buckets to 8 and left-shifts to
+    # position 8 < credit 10 -> the page holding rows 8-9 must fork
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=16,
+                                           page_size=2, prefill_chunk=8))
+    pa = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    pb = np.concatenate([pa, rng.integers(0, cfg.vocab_size,
+                                          (5,)).astype(np.int32)])
+    eng.submit(Request(0, pa, max_new_tokens=1))
+    done = eng.run_to_completion()
+    eng.submit(Request(1, pb, max_new_tokens=1))
+    done += eng.run_to_completion()
+    assert done[0].output == greedy_ref(pa, 1, max_len=16)
+    assert done[1].output == greedy_ref(pb, 1, max_len=16)
+
+    s = eng.stats()
+    assert s["prefix_hit_tokens"] == 10
+    assert s["forked_pages"] == 1
+    assert eng.prefix.match(pa, touch=False)[0] == 10   # entry intact
+    assert eng.prefix.match(pb, touch=False)[0] == 14   # B now cached too
+    _assert_pool_consistent(eng.alloc)
+
+
+def test_two_active_slots_read_the_same_shared_pages(rng, serve_model,
+                                                     greedy_ref):
+    """Two concurrently decoding requests mount the same cached prefix
+    pages (refcount 3: index + both slots) and still produce exact
+    outputs — shared pages are read-only below every cursor."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    shared = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    seed_req = Request(0, shared, max_new_tokens=1)
+    eng.submit(seed_req)
+    done = eng.run_to_completion()          # caches the 16-token prefix
+
+    pa = np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                              (3,)).astype(np.int32)])
+    pb = np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                              (5,)).astype(np.int32)])
+    eng.submit(Request(1, pa, max_new_tokens=6))
+    eng.submit(Request(2, pb, max_new_tokens=6))
+    eng.step()                              # both admitted, both mounted
+    assert len(eng.active) == 2
+    shared_pages = eng.prefix.match(shared, touch=False)[1]
+    assert shared_pages and all(int(eng.alloc.ref[p]) == 3
+                                for p in shared_pages[:1])
+    done += eng.run_to_completion()
+    outs = {r.request_id: r.output for r in done}
+    assert outs[1] == greedy_ref(pa, 6)
+    assert outs[2] == greedy_ref(pb, 6)
+    assert eng.stats()["prefix_hit_tokens"] == 32
+    _assert_pool_consistent(eng.alloc)
+
+
+def test_eviction_under_pool_pressure_never_blocks_admission(
+        rng, serve_model, greedy_ref):
+    """Acceptance: with a pool sized so cached prefixes must be evicted
+    to admit new work, every request completes exactly — the cache never
+    causes an admission failure an empty cache would not."""
+    cfg, api, params = serve_model
+    # 6 usable pages of 8 = 48 KV rows for prompts needing up to 3 pages
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           num_pages=7, prefill_chunk=8))
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (17, 11, 19, 9, 15)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=4))
+    done = eng.run_to_completion()
+    assert sorted(r.request_id for r in done) == list(range(len(prompts)))
+    for r in done:
+        assert not r.truncated
+        assert r.output == greedy_ref(prompts[r.request_id], 4)
+    assert eng.stats()["evictions"] > 0     # the pool really was tight
+    _assert_pool_consistent(eng.alloc)
+
+
+def test_prefix_cache_gating(serve_model):
+    """The index exists only where it is sound: paged pool + cursor-
+    guarded KV family.  Recurrent carries (hybrid mamba) cannot skip
+    prefix compute, and contiguous slots have no pages to share."""
+    from repro.serve.engine import _KV_FAMILIES
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=32))
+    assert eng.prefix is not None           # dense family, paged pool
+    off = Engine(api, params, EngineConfig(max_batch=1, max_len=32,
+                                           prefix_cache=False))
+    assert off.prefix is None
+    contig = Engine(api, params, EngineConfig(max_batch=1, max_len=32,
+                                              allocator="contiguous"))
+    assert contig.prefix is None
+    assert "hybrid" not in _KV_FAMILIES     # the recurrent-carry gate
+
+
+def test_engine_stats_shape(serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=32))
+    s = eng.stats()
+    for key in ("prefix_hit_tokens", "forked_pages", "evictions",
+                "cached_pages", "prefill_tokens", "generated_tokens",
+                "finished_requests", "prefill_compiles", "pages_in_use",
+                "high_water_pages", "scheduler"):
+        assert key in s
+    assert s["scheduler"] == "fifo"
+
+
+def test_failed_credit_admission_scrubs_device_table_row(rng, serve_model,
+                                                         greedy_ref):
+    """Regression: an admission that mounts a credit, mirrors its block
+    table into device state, and then fails (CoW fork + uncached retry
+    both dry) must zero the device row — otherwise the inactive row's
+    decode scatter lands on the still-shared cached pages and silently
+    corrupts every later hit on that prefix."""
+    cfg, api, params = serve_model
+    # ps=2, max_len=16, usable pool 10: seed caches 5 pages; C mounts
+    # them (+2 fresh) and keeps decoding; B then needs 3 fresh + 1 fork
+    # with exactly 3 free -> fork fails (the cached pages are pinned by
+    # C and B, so eviction frees nothing), and the uncached retry needs
+    # 8 with only 3 free+evictable -> admission backs off entirely
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=16,
+                                           page_size=2, prefill_chunk=8,
+                                           num_pages=11))
+    p10 = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    eng.submit(Request(0, p10, max_new_tokens=1))
+    done = eng.run_to_completion()          # seed: 5 pages cached
+
+    pc = np.concatenate([p10, rng.integers(0, cfg.vocab_size,
+                                           (2,)).astype(np.int32)])
+    pb = np.concatenate([p10, rng.integers(0, cfg.vocab_size,
+                                           (5,)).astype(np.int32)])
+    eng.submit(Request(1, pc, max_new_tokens=4))
+    eng.step()                              # C admitted, mounts the prefix
+    assert 1 in {r.request_id for r in eng.active.values()}
+    eng.submit(Request(2, pb, max_new_tokens=2))
+    eng.step()                              # B's admission fails twice
+    b_queued = {r.request_id for r in eng.scheduler.pending()}
+    assert b_queued == {2}                  # backed off, still queued
+    # every inactive slot's device table row must be zeroed (trash page)
+    active_slots = set(eng.active)
+    tables = np.asarray(eng.states.kv.block_tables[0])
+    for slot in range(eng.cfg.max_batch):
+        if slot not in active_slots:
+            assert not tables[slot].any(), \
+                f"stale device block-table row for idle slot {slot}"
+    done += eng.run_to_completion()         # C finishes, B then admits
+    outs = {r.request_id: r.output for r in done}
+    assert outs[1] == greedy_ref(pc, 4, max_len=16)
+    assert outs[2] == greedy_ref(pb, 2, max_len=16)
+    _assert_pool_consistent(eng.alloc)

@@ -1,0 +1,251 @@
+"""Pluggable request schedulers (serve.scheduler): policy ordering at
+the protocol level and through the engine, plus the engine satellites
+that ride the same subsystem — per-token streaming callbacks, submit
+validation, and the run_to_completion no-progress guard.
+
+Shared fixtures (``serve_model``, ``greedy_ref``) live in conftest.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.scheduler import (FIFOScheduler, PrefixAffinityScheduler,
+                                   PriorityScheduler, Scheduler,
+                                   make_scheduler)
+
+
+def _req(i, prompt=(1, 2, 3), priority=0):
+    r = Request(i, np.asarray(prompt, np.int32), priority=priority)
+    r.arrival = i
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Policy units (no engine)
+# ---------------------------------------------------------------------------
+
+def test_fifo_policy_is_arrival_order():
+    s = FIFOScheduler()
+    reqs = [_req(i) for i in range(3)]
+    for r in reqs:
+        s.add(r)
+    assert len(s) == 3 and s.pending() == reqs
+    order = []
+    while len(s):
+        r = s.next(None)
+        assert r is s.next(None)           # next() peeks, no removal
+        s.remove(r)
+        order.append(r.request_id)
+    assert order == [0, 1, 2]
+    assert s.next(None) is None
+
+
+def test_priority_policy_orders_by_priority_then_arrival():
+    s = PriorityScheduler()
+    for i, prio in enumerate((0, 5, 1, 5)):
+        s.add(_req(i, priority=prio))
+    order = []
+    while len(s):
+        r = s.next(None)
+        s.remove(r)
+        order.append(r.request_id)
+    assert order == [1, 3, 2, 0]           # 5 (fifo within), then 1, 0
+
+
+def test_prefix_affinity_picks_the_resident_prefix_request():
+    class _FakeRoot:
+        children = {(42,) * 8: object()}   # non-empty: cache is warm
+
+    class _FakeIndex:
+        root = _FakeRoot()
+
+        def match(self, prompt, touch=True):
+            assert touch is False          # probes must not touch LRU
+            n = 8 if prompt[0] == 42 else 0
+            return n, []
+
+    class _FakeEngine:
+        prefix = _FakeIndex()
+
+    s = PrefixAffinityScheduler()
+    cold = _req(0, prompt=[7] * 8)
+    warm = _req(1, prompt=[42] * 8)
+    s.add(cold)
+    s.add(warm)
+    assert s.next(_FakeEngine()) is warm   # resident prefix wins
+    # without an index the policy degrades to FIFO
+    class _NoIndex:
+        prefix = None
+    assert s.next(_NoIndex()) is cold
+
+
+def test_make_scheduler_registry():
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
+    assert isinstance(make_scheduler("prefix"), PrefixAffinityScheduler)
+    assert isinstance(make_scheduler(None), FIFOScheduler)
+    inst = PriorityScheduler()
+    assert make_scheduler(inst) is inst    # instances pass through
+    assert isinstance(inst, Scheduler)     # protocol conformance
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("nope")
+    with pytest.raises(TypeError):
+        make_scheduler(42)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level policy behavior
+# ---------------------------------------------------------------------------
+
+def test_engine_priority_scheduler_admits_high_priority_first(
+        rng, serve_model, greedy_ref):
+    """With one slot, admission order == finish order: priorities jump
+    the queue while outputs stay exactly the per-request references."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64,
+                                           scheduler="priority",
+                                           prefill_chunk=8))
+    prompts = {i: rng.integers(0, cfg.vocab_size, (5 + i,)).astype(np.int32)
+               for i in range(3)}
+    for i, prio in ((0, 0), (1, 9), (2, 4)):
+        eng.submit(Request(i, prompts[i], max_new_tokens=3, priority=prio))
+    done = eng.run_to_completion()
+    assert [r.request_id for r in done] == [1, 2, 0]
+    for r in done:
+        assert r.output == greedy_ref(prompts[r.request_id], 3)
+
+
+def test_engine_prefix_affinity_prefers_resident_prefix(rng, serve_model):
+    """After caching prompt A's prefix, a queued A-prefixed request is
+    admitted ahead of an earlier-arrived cold request."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64,
+                                           page_size=8, prefill_chunk=8,
+                                           scheduler="prefix"))
+    warm_prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    eng.submit(Request(0, warm_prefix, max_new_tokens=1))
+    eng.run_to_completion()                # prefix now resident
+
+    cold = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    warm = np.concatenate([warm_prefix, rng.integers(
+        0, cfg.vocab_size, (4,)).astype(np.int32)])
+    eng.submit(Request(1, cold, max_new_tokens=2))     # arrives first
+    eng.submit(Request(2, warm, max_new_tokens=2))
+    done = eng.run_to_completion()
+    assert [r.request_id for r in done] == [2, 1]      # warm jumped
+    assert eng.stats()["prefix_hit_tokens"] == 16
+    assert eng.stats()["scheduler"] == "prefix"
+
+
+def test_engine_fifo_unchanged_default(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64))
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size,
+                                           (4,)).astype(np.int32),
+                           max_new_tokens=2, priority=9 - i))
+    done = eng.run_to_completion()
+    assert [r.request_id for r in done] == [0, 1, 2]   # priority ignored
+
+
+# ---------------------------------------------------------------------------
+# Satellites: streaming callbacks, submit validation, no-progress guard
+# ---------------------------------------------------------------------------
+
+def test_on_token_streams_every_token_in_order(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           prefill_chunk=8))
+    got = []
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    eng.submit(Request(0, prompt, max_new_tokens=5,
+                       on_token=lambda r, t: got.append((r.request_id, t))))
+    done = eng.run_to_completion()
+    assert got == [(0, t) for t in done[0].output]
+    assert len(got) == 5                   # prefill token included
+
+
+def test_on_token_exceptions_do_not_kill_the_engine(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64))
+    prompt = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+
+    def boom(r, t):
+        raise RuntimeError("stream consumer died")
+
+    eng.submit(Request(0, prompt, max_new_tokens=3, on_token=boom))
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].output) == 3
+
+
+def test_submit_rejects_float_and_multidim_prompts(rng, serve_model):
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64))
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit(Request(0, np.asarray([1.5, 2.5], np.float32)))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(Request(1, np.ones((2, 3), np.int32)))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(Request(2, np.int32(7)))            # 0-D scalar
+    # plain python int lists are fine (asarray -> integer dtype)
+    eng.submit(Request(3, np.asarray([1, 2, 3])))
+    assert len(eng.queue) == 1
+
+
+def test_submit_copies_prompt_defensively(rng, serve_model, greedy_ref):
+    """Caller-side mutation after submit must not corrupt the queued
+    prompt (the engine owns its copy)."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64,
+                                           prefill_chunk=8))
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    ref = greedy_ref(prompt.copy(), 3)
+    eng.submit(Request(0, prompt, max_new_tokens=3))
+    prompt[:] = 0                           # caller scribbles over it
+    done = eng.run_to_completion()
+    assert done[0].output == ref
+
+
+def test_run_to_completion_raises_on_no_progress(rng, serve_model):
+    """Satellite: a queued request that can never be admitted (here: all
+    slots leaked outside the engine) must raise a descriptive error
+    instead of silently burning max_ticks."""
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64))
+    # simulate a leak: something outside the engine holds every slot
+    assert eng.alloc.claim(990) is not None
+    assert eng.alloc.claim(991) is not None
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size,
+                                       (4,)).astype(np.int32)))
+    with pytest.raises(RuntimeError, match="cannot make progress"):
+        eng.run_to_completion()
+
+
+def test_deferring_scheduler_keeps_ticking_without_no_progress_error(
+        rng, serve_model, greedy_ref):
+    """A custom policy may defer admission (next() -> None) while
+    requests are queued — that is a scheduling choice, not a stuck
+    engine, so run_to_completion must keep ticking instead of raising."""
+    cfg, api, params = serve_model
+
+    class Deferring(FIFOScheduler):
+        name = "deferring"
+
+        def __init__(self):
+            super().__init__()
+            self.probes = 0
+
+        def next(self, engine):
+            self.probes += 1
+            if self.probes < 3:
+                return None                # batch up before admitting
+            return super().next(engine)
+
+    eng = Engine(api, params, EngineConfig(max_batch=1, max_len=64,
+                                           scheduler=Deferring()))
+    prompt = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    eng.submit(Request(0, prompt, max_new_tokens=3))
+    done = eng.run_to_completion()
+    assert done[0].output == greedy_ref(prompt, 3)
+    assert eng.scheduler.probes >= 3

@@ -82,10 +82,13 @@ def test_paged_matches_contiguous_mixed_ragged_batch(rng, serve_model,
 
     outs = {}
     for allocator in ("contiguous", "paged"):
+        # prefix_cache=False: this test is about the raw pool accounting
+        # (cache-on retention is covered by tests/test_prefix_cache.py)
         eng = Engine(api, params, EngineConfig(max_batch=3, max_len=64,
                                                allocator=allocator,
                                                page_size=8,
-                                               prefill_chunk=8))
+                                               prefill_chunk=8,
+                                               prefix_cache=False))
         for i, p in enumerate(prompts):
             eng.submit(Request(i, p, max_new_tokens=6))
         done = eng.run_to_completion()
@@ -192,6 +195,12 @@ def test_paged_decode_grows_pages_on_demand(rng, serve_model):
         eng.step()
     # 7 prompt + 11 decoded KV rows crosses into a 3rd page before finish
     assert eng.alloc.high_water_pages == 3
+    # the finished request's page-aligned prefix (18 rows -> 2 full pages)
+    # stays resident in the radix index; nothing else is held
+    assert eng.prefix is not None
+    assert eng.prefix.cached_pages == 2
+    assert eng.alloc.pages_in_use == eng.prefix.cached_pages
+    assert eng.prefix.clear() == 2
     assert eng.alloc.pages_in_use == 0
 
 

@@ -12,6 +12,14 @@ Structural claim checked on every run: the inhibitor block performs
 **zero** ciphertext×ciphertext multiplications; the dot-product block
 pays them in QKᵀ, the softmax renormalization, and S·V.
 
+Each measured forward is paired with the static interval analysis
+(``repro.analysis``) of the same circuit: per-scope op counts must match
+*exactly* (the circuit's control flow is input-independent), every
+measured message width must be dominated by the proven bound, and the
+report carries static-vs-measured width/parameter columns.  The zero-
+cmul gate is asserted on **both** traces — measured (this input) and
+static (every input in the quantized range).
+
   PYTHONPATH=src python benchmarks/fhe_block.py [--smoke] [--json PATH]
 
 Writes ``BENCH_fhe_block.json`` (CI artifact; serving-style trajectory
@@ -29,9 +37,11 @@ import numpy as np
 def run(smoke: bool = False, seq_lens=None) -> dict:
     import jax
 
+    from repro.analysis import analyze_qlm
     from repro.configs import get_config
     from repro.core.lanes import get_lane
-    from repro.fhe import pbs_seconds, select_params_for_report
+    from repro.fhe import (pbs_seconds, select_params_for_report,
+                           select_params_static)
     from repro.models import transformer as tfm
     from repro.models.registry import get_model
     from repro.nn.module import unbox
@@ -61,20 +71,46 @@ def run(smoke: bool = False, seq_lens=None) -> dict:
                     f"{mech}@T={T}: encrypted forward diverged from the "
                     "int lane (lane refactor bug)")
             tot = fhe.ctx.summary()
-            sel = select_params_for_report(fhe.ctx.scope_report())
+            measured_scopes = fhe.ctx.scope_report()
+            static = analyze_qlm(qlm, seq_len=T)
+            # measured-vs-static cross-check: a measured width beyond the
+            # proven bound fails loudly inside the selection itself
+            sel = select_params_for_report(
+                measured_scopes, static_report=static["per_scope"])
+            sel_static = select_params_static(static["per_scope"])
+            for name, s in measured_scopes.items():
+                st = static["per_scope"][name]
+                for c in ("pbs", "cmuls", "adds", "lit_muls"):
+                    if s[c] != st[c]:
+                        raise AssertionError(
+                            f"{mech}@T={T} scope {name}: static {c}="
+                            f"{st[c]} != measured {s[c]} (the abstract "
+                            "trace ran a different circuit)")
             per_mech[mech] = {
                 "pbs": tot["pbs"],
                 "cmuls": tot["cmuls"],
                 "adds": tot["adds"],
                 "max_bits_at_pbs": tot["max_bits_at_pbs"],
+                "static_max_bits_at_pbs":
+                    static["totals"]["max_bits_at_pbs"],
+                "static_cmuls": static["totals"]["cmuls"],
+                "zero_cmul_proven": static["zero_cmul_proven"],
+                "lut_verified": static["lut_verification"]["verified"],
                 "poly_size": sel.poly_size,
                 "lwe_dim": sel.lwe_dim,
+                "static_poly_size": sel_static.poly_size,
+                "static_msg_bits": sel_static.msg_bits,
                 "est_seconds": round(tot["pbs"] * pbs_seconds(sel), 1),
             }
         if per_mech["inhibitor"]["cmuls"] != 0:
             raise AssertionError(
                 "inhibitor block performed ciphertext multiplications — "
                 "a lane/layer regression broke the paper's core property")
+        if not per_mech["inhibitor"]["zero_cmul_proven"]:
+            raise AssertionError(
+                "static analysis found a reachable cipher×cipher multiply "
+                "on the inhibitor arm — the zero-cmul claim no longer "
+                "holds for all inputs")
         if per_mech["dotprod"]["cmuls"] <= 0:
             raise AssertionError("dotprod block reported zero cipher muls "
                                  "(cost accounting regression)")
@@ -96,7 +132,8 @@ def main(argv=None):
     with open(args.json, "w") as f:
         json.dump(res, f, indent=2)
     hdr = (f"{'T':>4} {'mechanism':>10} {'PBS':>8} {'cmuls':>7} "
-           f"{'bits':>5} {'poly':>6} {'est time':>10}   speedup")
+           f"{'bits':>5} {'bits*':>5} {'poly':>6} {'poly*':>6} "
+           f"{'est time':>10}   speedup   (* = static proven)")
     print(hdr)
     for row in res["rows"]:
         for mech in ("inhibitor", "dotprod"):
@@ -104,7 +141,9 @@ def main(argv=None):
             print(f"{row['T']:>4} {mech:>10} {row[f'{mech}_pbs']:>8} "
                   f"{row[f'{mech}_cmuls']:>7} "
                   f"{row[f'{mech}_max_bits_at_pbs']:>5} "
+                  f"{row[f'{mech}_static_max_bits_at_pbs']:>5} "
                   f"{row[f'{mech}_poly_size']:>6} "
+                  f"{row[f'{mech}_static_poly_size']:>6} "
                   f"{row[f'{mech}_est_seconds']:>9.1f}s   {sp}")
     print(f"\nwrote {args.json}")
 

@@ -40,6 +40,19 @@ METRICS = [
      "prefix cache-on compiles", False),
     ("BENCH_serve_prefix.json", "_hit_rate",
      "prefix hit rate", True),
+    # static circuit analysis (repro.analysis): count/width drift across
+    # runs is a real circuit change, never timing noise — but the trend
+    # step stays warn-only by design; the hard gates live in the analyzer
+    ("ANALYSIS_fhe.json", "mechanisms.inhibitor.totals.pbs",
+     "static inhibitor PBS/block", False),
+    ("ANALYSIS_fhe.json", "mechanisms.inhibitor.totals.max_bits_at_pbs",
+     "static inhibitor bits@pbs", False),
+    ("ANALYSIS_fhe.json", "mechanisms.inhibitor.totals.cmuls",
+     "static inhibitor cmuls", False),
+    ("ANALYSIS_fhe.json", "mechanisms.dotprod.totals.cmuls",
+     "static dotprod cmuls", False),
+    ("ANALYSIS_fhe.json", "mechanisms.dotprod.totals.max_bits_at_pbs",
+     "static dotprod bits@pbs", False),
 ]
 
 
@@ -72,6 +85,10 @@ def main(argv=None) -> int:
                     help="directory with the last run's artifacts")
     ap.add_argument("--warn-pct", type=float, default=10.0,
                     help="regression threshold for ::warning:: lines")
+    ap.add_argument("--files", default=None,
+                    help="comma-separated artifact filenames to restrict "
+                         "the comparison to (e.g. ANALYSIS_fhe.json; "
+                         "default: every tracked metric)")
     args = ap.parse_args(argv)
 
     if not os.path.isdir(args.previous):
@@ -79,8 +96,17 @@ def main(argv=None) -> int:
               f"nothing to compare (first run?)")
         return 0
 
+    metrics = METRICS
+    if args.files:
+        wanted = {f.strip() for f in args.files.split(",") if f.strip()}
+        unknown = wanted - {m[0] for m in METRICS}
+        if unknown:
+            print(f"trend: no tracked metrics in {sorted(unknown)} "
+                  f"(tracked files: {sorted({m[0] for m in METRICS})})")
+        metrics = [m for m in METRICS if m[0] in wanted]
+
     rows, warned = [], 0
-    for fname, path, label, higher_better in METRICS:
+    for fname, path, label, higher_better in metrics:
         try:
             cur = float(_lookup(_load(args.current, fname), path))
         except (OSError, KeyError, TypeError, ValueError) as e:

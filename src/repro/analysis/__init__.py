@@ -1,0 +1,20 @@
+"""Static analysis of the FHE circuit (abstract interpretation + lint).
+
+The measured story (``fhe_sim``) observes one sample forward; this
+package *proves* the same quantities for every input in the declared
+quantized ranges: per-scope op counts (exactly equal to measured — the
+circuit's control flow is input-independent), worst-case PBS message
+widths (dominating any measured high-water), zero cipher×cipher products
+on the inhibitor arm, and LUT-domain/table-width verification.  See
+DESIGN.md §12 for the soundness contract.
+
+    python -m repro.analysis --config paper-tiny      # ANALYSIS_fhe.json
+    python -m repro.analysis.lint src/repro           # lane discipline
+"""
+
+from repro.analysis.analyzer import (DEFAULT_MECHANISMS,  # noqa: F401
+                                     LUT_BITS_CEILING, analyze_config,
+                                     analyze_qlm, format_report)
+from repro.analysis.interval import (IntervalOverflow,  # noqa: F401
+                                     IntervalTensor, as_interval)
+from repro.analysis.interval_lane import IntervalLane  # noqa: F401

@@ -66,6 +66,15 @@ class Lane:
     def array(self, x) -> Handle:
         raise NotImplementedError
 
+    def embed(self, table: np.ndarray, tokens) -> Handle:
+        """Client-side embedding ingest: cleartext table row gather on
+        cleartext token ids, then :meth:`array`.  Concrete lanes index the
+        table directly; the static-analysis lane overrides this with
+        per-channel vocabulary bounds so its verdicts hold for *any* token
+        sequence of the given shape (token values are never read there)."""
+        rows = np.asarray(table)[np.asarray(tokens)]
+        return self.array(rows)
+
     def to_numpy(self, t: Handle) -> np.ndarray:
         raise NotImplementedError
 
@@ -576,16 +585,24 @@ class FheSimLane(Lane):
 
 _LANES = {"float": FloatLane, "int": IntLane, "fhe_sim": FheSimLane}
 
+#: lanes whose constructor accepts a shared FheContext
+_CTX_LANES = frozenset({"fhe_sim", "interval"})
+
 
 def get_lane(name: str, ctx=None) -> Lane:
-    """Lane factory: ``float`` | ``int`` | ``fhe_sim`` (the latter accepts
-    a shared :class:`FheContext` for cross-layer cost accumulation)."""
+    """Lane factory: ``float`` | ``int`` | ``fhe_sim`` | ``interval``
+    (the context-carrying lanes accept a shared :class:`FheContext` for
+    cross-layer cost accumulation)."""
+    if name == "interval" and "interval" not in _LANES:
+        # lazy: repro.analysis imports this module at package init
+        from repro.analysis.interval_lane import IntervalLane
+        _LANES["interval"] = IntervalLane
     try:
         cls = _LANES[name]
     except KeyError:
         raise ValueError(f"unknown lane {name!r}; known: "
-                         f"{sorted(_LANES)}") from None
-    return cls(ctx) if name == "fhe_sim" else cls()
+                         f"{sorted(set(_LANES) | {'interval'})}") from None
+    return cls(ctx) if name in _CTX_LANES else cls()
 
 
 def available_lanes() -> Sequence[str]:

@@ -9,5 +9,6 @@ from repro.fhe.params import (  # noqa: F401
     TfheParams,
     select_params,
     select_params_for_report,
+    select_params_static,
 )
 from repro.fhe.tfhe_sim import EncTensor, FheContext, decrypt, encrypt  # noqa: F401

@@ -47,7 +47,27 @@ def select_params(max_bits_at_pbs: int) -> TfheParams:
         "table-lookup ceiling (paper §Computational Efficiency)")
 
 
-def select_params_for_report(report) -> TfheParams:
+def _worst_pbs_scope(report, kind: str):
+    """(scope name, width) of the block-level ``max_bits_at_pbs`` high-
+    water, refusing a report without any PBS site: selecting the smallest
+    parameter point for a circuit whose widths were simply never observed
+    would be silent nonsense, not a cheap circuit."""
+    if not report:
+        raise ValueError(f"empty {kind} cost report: run a lane forward "
+                         "before selecting parameters")
+    worst_name, worst = max(report.items(),
+                            key=lambda kv: kv[1].get("max_bits_at_pbs", 0))
+    worst_bits = worst.get("max_bits_at_pbs", 0)
+    if worst_bits <= 0:
+        raise ValueError(
+            f"no scope in the {kind} cost report observed a PBS "
+            f"(max_bits_at_pbs is 0/absent everywhere across "
+            f"{sorted(report)}); parameters are selected from PBS message "
+            "widths, so a PBS-free trace cannot drive selection")
+    return worst_name, worst_bits
+
+
+def select_params_for_report(report, *, static_report=None) -> TfheParams:
     """Parameter selection from a *full-block* per-layer cost report.
 
     ``report`` maps layer/scope name → cost summary (the
@@ -58,16 +78,56 @@ def select_params_for_report(report) -> TfheParams:
     supported table fails loudly *naming the offending layer*, which is
     the actionable signal (lower that layer's fixed-point precision or
     add a rescale before its LUT).
+
+    ``static_report``, when given, is the per-scope report of the static
+    interval analysis of the same circuit (``repro.analysis``): every
+    measured width is cross-checked against the proven bound, and a
+    measured width *exceeding* the static bound fails loudly — observing
+    what the analysis proved impossible means the analysis is unsound
+    (or the two traces ran different circuits), and parameters derived
+    from either are untrustworthy.
     """
-    if not report:
-        raise ValueError("empty cost report: run a lane forward on the "
-                         "fhe_sim lane before selecting parameters")
-    worst_name, worst = max(report.items(),
-                            key=lambda kv: kv[1].get("max_bits_at_pbs", 0))
-    worst_bits = worst.get("max_bits_at_pbs", 0)
+    worst_name, worst_bits = _worst_pbs_scope(report, "measured")
+    if static_report is not None:
+        for name, s in report.items():
+            measured = s.get("max_bits_at_pbs", 0)
+            bound = static_report.get(name, {}).get("max_bits_at_pbs")
+            if bound is None:
+                raise ValueError(
+                    f"scope {name!r} is missing from the static report "
+                    f"(static scopes: {sorted(static_report)}); the "
+                    "measured and static traces ran different circuits")
+            if measured > bound:
+                raise ValueError(
+                    f"SOUNDNESS BUG: scope {name!r} measured "
+                    f"{measured}-bit PBS messages but the static analysis "
+                    f"proved a {bound}-bit worst case; the interval "
+                    "analysis (or the circuit pairing) is wrong — do not "
+                    "trust either parameter selection")
     try:
         return select_params(worst_bits)
     except ValueError as e:
         raise ValueError(
             f"layer {worst_name!r} needs {worst_bits}-bit PBS messages: "
             f"{e}") from None
+
+
+def select_params_static(static_report) -> TfheParams:
+    """Parameter selection from the *proven* block-level width.
+
+    ``static_report`` is the per-scope report of an
+    :class:`~repro.analysis.interval_lane.IntervalLane` forward — the
+    same schema as the measured report, but every ``max_bits_at_pbs`` is
+    a worst case over all inputs in the declared quantized ranges rather
+    than one sample's high-water.  Parameters chosen here are therefore
+    sound for *any* input: this is the selection deployments should use
+    (the measured selection can under-provision on an unlucky input and
+    decrypt to garbage with no error).
+    """
+    worst_name, worst_bits = _worst_pbs_scope(static_report, "static")
+    try:
+        return select_params(worst_bits)
+    except ValueError as e:
+        raise ValueError(
+            f"layer {worst_name!r} is statically proven to need "
+            f"{worst_bits}-bit PBS messages: {e}") from None

@@ -360,6 +360,11 @@ def lm_forward_lane(qlm, lane, tokens):
     block runs under the TFHE cost model, bit-exact with the ``int``
     lane, with per-layer PBS/add/cmul/bit-width scopes accumulated on
     ``lane.ctx`` (see examples/fhe_inference.py).
+
+    On the ``interval`` lane (:func:`repro.analysis.analyze_qlm`) the
+    same call is the whole-model *static analysis*: ``tokens`` supplies
+    shape only (embedding bounds span the vocabulary), and the trace
+    proves worst-case widths and cmul counts for every input.
     """
     from repro.nn.lane_layers import lane_embed, lane_logits
 

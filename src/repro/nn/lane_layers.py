@@ -156,9 +156,10 @@ def lane_embed(lane: Lane, table_q: np.ndarray, tokens) -> "object":
     """Client-side embedding: cleartext table lookup on cleartext tokens,
     then ingestion into the lane (encryption on ``fhe_sim``).  A TFHE
     server cannot index a table with an encrypted id, so in the paper's
-    deployment the client embeds locally and encrypts activations."""
-    rows = np.asarray(table_q)[np.asarray(tokens)]
-    return lane.array(rows)
+    deployment the client embeds locally and encrypts activations.
+    Routed through :meth:`Lane.embed` so the static-analysis lane can
+    substitute per-channel vocabulary bounds for the concrete gather."""
+    return lane.embed(table_q, tokens)
 
 
 def lane_logits(lane: Lane, x, final_norm: dict, lm_head: dict, *,

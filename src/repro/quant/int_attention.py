@@ -33,6 +33,15 @@ sentinel produced.
 Used by benchmarks/table3_plaintext.py for the timing-vs-T scaling law,
 by :mod:`repro.fhe.circuits` (Tables 2/4), and by the lane-parameterized
 model forward in :mod:`repro.models.transformer`.
+
+Being lane-generic also makes both mechanisms *statically analyzable*:
+run on the ``interval`` lane (:mod:`repro.analysis`) they execute over
+symbolic bounds, turning the inhibitor's "no cipher×cipher products"
+bullet above into a machine-checked proof (``cmul_sites == []`` for any
+input in the quantized range) and attributing the dot-product arm's
+cmuls to their contractions.  The lane-discipline lint
+(``python -m repro.analysis.lint``) guards the conventions this relies
+on: handle arithmetic goes through the lane, never raw np/jnp.
 """
 
 from __future__ import annotations

@@ -1,0 +1,455 @@
+"""Static circuit analyzer (repro.analysis): per-primitive interval
+soundness, cmul/LUT verification, parameter selection, CLI schema.
+
+The hypothesis-based soundness property test follows the optional-
+hypothesis pattern: it skips (not the module — the deterministic tests
+here must always run) when the package is absent.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import IntervalLane, IntervalOverflow, IntervalTensor
+from repro.analysis.interval import table_range_minmax
+from repro.analysis.lint import lint_source
+from repro.core.lanes import _MASKED_ROW, FheSimLane, get_lane
+from repro.fhe.params import (select_params_for_report,
+                              select_params_static)
+from repro.quant.int_attention import (lane_dot_product_attention,
+                                       lane_inhibitor_attention)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # tier-1 runs without the optional test extra
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Harness: random intervals, samples inside them, paired lane runs
+# ---------------------------------------------------------------------------
+
+def _rand_interval(rng, shape, lo=-100, hi=100):
+    a = rng.integers(lo, hi, shape)
+    b = rng.integers(lo, hi, shape)
+    return IntervalTensor(np.minimum(a, b), np.maximum(a, b))
+
+
+def _sample(rng, t: IntervalTensor) -> np.ndarray:
+    return rng.integers(t.lo, t.hi + 1)
+
+
+def _contains(t: IntervalTensor, arr) -> bool:
+    arr = np.asarray(arr, np.int64)
+    return bool(np.all(t.lo <= arr) and np.all(arr <= t.hi))
+
+
+def _counters(ctx) -> dict:
+    return {c: getattr(ctx, c) for c in ("pbs", "cmuls", "adds",
+                                         "lit_muls")}
+
+
+def _paired(op, intervals, rng, n_draws=5):
+    """Run ``op(lane, *handles)`` on the interval lane and on fhe_sim with
+    ``n_draws`` concrete samples inside the intervals.  Asserts equal op
+    counts, dominated widths, and abstract containment of every concrete
+    result; returns the abstract result."""
+    il = IntervalLane()
+    abstract = op(il, *intervals)
+    for _ in range(n_draws):
+        fl = FheSimLane()
+        concrete = op(fl, *[_sample(rng, t) for t in intervals])
+        assert _counters(fl.ctx) == _counters(il.ctx)
+        assert fl.ctx.max_bits <= il.ctx.max_bits
+        assert fl.ctx.max_bits_any <= il.ctx.max_bits_any
+        assert _contains(abstract, concrete)
+    return abstract
+
+
+# ---------------------------------------------------------------------------
+# Per-primitive soundness (counts equal, widths dominated, containment)
+# ---------------------------------------------------------------------------
+
+_W = np.array([[2, -3], [1, 4], [-5, 0]])
+_PRIMITIVES = {
+    "add": lambda ln, a, b: ln.add(a, b),
+    "sub": lambda ln, a, b: ln.sub(a, b),
+    "neg": lambda ln, a: ln.neg(a),
+    "mul_literal": lambda ln, a: ln.mul_literal(a, -7),
+    "mul_literal_array": lambda ln, a: ln.mul_literal(
+        a, np.array([2, -3, 5])),
+    "shift_right": lambda ln, a: ln.shift_right(a, 2),
+    "matmul_plain": lambda ln, a: ln.matmul_plain(a, _W),
+    "sum": lambda ln, a: ln.sum(a, axis=-1),
+    "sum_keepdims": lambda ln, a: ln.sum(a, axis=0, keepdims=True),
+    "select": lambda ln, a: ln.select(
+        np.array([[True, False, True]] * 4), a, 9),
+    "clip": lambda ln, a: ln.clip(a, -10, 10),
+    "relu": lambda ln, a: ln.relu(a),
+    "abs": lambda ln, a: ln.abs(a),
+    "max": lambda ln, a: ln.max(a, axis=-1),
+    "lut": lambda ln, a: ln.lut(a, lambda t: (t * t) >> 2, -50, 50),
+    "mul": lambda ln, a, b: ln.mul(a, b),
+    "dot_scores": lambda ln, a, b: ln.dot_scores(a, b),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_PRIMITIVES))
+def test_primitive_sound(name):
+    rng = np.random.default_rng(11)
+    op = _PRIMITIVES[name]
+    n_args = 2 if name in ("add", "sub", "mul", "dot_scores") else 1
+    shape = (2, 3) if name == "dot_scores" else (4, 3)
+    ivs = [_rand_interval(rng, shape) for _ in range(n_args)]
+    _paired(op, ivs, rng)
+
+
+def test_mix_values_sound():
+    rng = np.random.default_rng(3)
+    p = _rand_interval(rng, (2, 4), 0, 16)      # probs (n_q, n_k)
+    v = _rand_interval(rng, (4, 3))             # values (n_k, d)
+    _paired(lambda ln, a, b: ln.mix_values(a, b), [p, v], rng)
+
+
+def test_structure_ops_and_scalars():
+    rng = np.random.default_rng(5)
+    t = _rand_interval(rng, (2, 3, 4))
+    il = IntervalLane()
+    r = il.reshape(t, (6, 4))
+    assert r.shape == (6, 4)
+    tr = il.transpose(t, (2, 0, 1))
+    assert tr.shape == (4, 2, 3)
+    e = il.expand_dims(t, -2)
+    assert e.shape == (2, 3, 1, 4)
+    rp = il.repeat(t, 2, 1)
+    assert rp.shape == (2, 6, 4)
+    # none of these are homomorphic work
+    assert _counters(il.ctx) == {"pbs": 0, "cmuls": 0, "adds": 0,
+                                 "lit_muls": 0}
+    with pytest.raises(TypeError, match="abstract bounds"):
+        il.to_numpy(t)
+
+
+def test_embed_bounds_are_token_independent():
+    rng = np.random.default_rng(7)
+    table = rng.integers(-40, 40, (16, 6))
+    il = IntervalLane()
+    out = il.embed(table, np.zeros((2, 5), np.int64))
+    fl = FheSimLane()
+    for _ in range(5):
+        toks = rng.integers(0, 16, (2, 5))
+        assert _contains(out, fl.to_numpy(fl.embed(table, toks)))
+    # per-channel (not global) bounds: channel extremes match the table's
+    np.testing.assert_array_equal(out.lo[0, 0], table.min(axis=0))
+    np.testing.assert_array_equal(out.hi[0, 0], table.max(axis=0))
+
+
+def test_lut_saturation_and_site_report():
+    il = IntervalLane()
+    t = IntervalTensor(np.array([-80, 0]), np.array([-20, 90]))
+    out = il.lut(t, lambda x: x + 1, -50, 50)
+    site = il.lut_sites[0]
+    assert not site["fits_domain"]
+    assert site["overflow_lo"] == 30 and site["overflow_hi"] == 40
+    assert site["saturated"] == [-50, 50]
+    # output bounded by the table over the *reachable* range only
+    assert (out.lo[0], out.hi[0]) == (-49, -19)
+    assert (out.lo[1], out.hi[1]) == (1, 51)
+    # PBS width covers the saturated input (what the table must span)
+    assert il.ctx.max_bits == max(1, (50).bit_length()) + 1
+
+
+def test_lut2_packed_width_widening():
+    rng = np.random.default_rng(9)
+    # intervals spanning the full declared domains so the recorded table
+    # width is the deterministic worst case
+    x = IntervalTensor(np.full((4,), -3), np.full((4,), 3))
+    y = IntervalTensor(np.full((4,), 0), np.full((4,), 7))
+
+    def op(ln, xx, yy):
+        return ln.lut2(xx, yy, lambda a, b: a * b,
+                       x_lo=-3, x_hi=3, y_lo=0, y_hi=7)
+
+    _paired(op, [x, y], rng)
+    il = IntervalLane()
+    op(il, x, y)
+    # packed p = (x+3) + y*7 spans [-3, 52]: a 7-bit signed message —
+    # wider than either operand (x: 3 bits, y: 4 bits).  That widening is
+    # exactly what parameter selection must see.
+    assert il.lut_sites[0]["domain"] == [-3, 52]
+    assert il.lut_sites[0]["table_bits"] == 7
+    assert il.ctx.max_bits == 7
+
+
+def test_masked_max_sentinel_and_pbs_count():
+    rng = np.random.default_rng(13)
+    t = _rand_interval(rng, (3, 4))
+    mask = np.array([[True, True, False, True],
+                     [False, False, False, False],     # fully masked row
+                     [True, False, True, True]])
+    il = IntervalLane()
+    out = il.masked_max(t, mask, axis=-1)
+    # fully masked row collapses to the exact sentinel interval
+    assert out.lo[1] == out.hi[1] == _MASKED_ROW
+    assert il.ctx.pbs == int(mask.sum())     # relu-tree: attendable only
+    fl = FheSimLane()
+    conc = fl.masked_max(_sample(rng, t), mask, axis=-1)
+    assert conc[1] == _MASKED_ROW
+    assert _counters(fl.ctx) == _counters(il.ctx)
+    assert _contains(out, conc)
+
+
+def test_interval_overflow_guard_raises():
+    big = IntervalTensor(np.array([1 << 40]), np.array([1 << 40]))
+    il = IntervalLane()
+    with pytest.raises(IntervalOverflow):
+        il.mul_literal(big, 1 << 40)
+
+
+def test_table_range_minmax_matches_bruteforce():
+    rng = np.random.default_rng(17)
+    tbl = rng.integers(-1000, 1000, (257,))
+    i0 = rng.integers(0, 257, (64,))
+    i1 = np.minimum(i0 + rng.integers(0, 257, (64,)), 256)
+    lo, hi = table_range_minmax(tbl, i0, i1)
+    for j in range(64):
+        seg = tbl[i0[j]:i1[j] + 1]
+        assert lo[j] == seg.min() and hi[j] == seg.max()
+
+
+# ---------------------------------------------------------------------------
+# Mechanism level: zero-cmul proof + cmul-site attribution
+# ---------------------------------------------------------------------------
+
+def _qkv_intervals(rng, nq=3, nk=4, d=4, clip=31):
+    return [IntervalTensor(np.full((nq if i == 0 else nk, d), -clip),
+                           np.full((nq if i == 0 else nk, d), clip))
+            for i in range(3)]
+
+
+def test_inhibitor_mechanism_statically_cmul_free():
+    rng = np.random.default_rng(19)
+    q, k, v = _qkv_intervals(rng)
+    il = IntervalLane()
+    with il.scope("attn"):
+        lane_inhibitor_attention(il, q, k, v, gamma_shift=1, alpha_q=2,
+                                 signed=True, normalize=True)
+    assert il.cmul_sites == []
+    assert il.ctx.cmuls == 0
+
+
+def test_dotprod_cmul_sites_attributed_by_contraction():
+    rng = np.random.default_rng(23)
+    q, k, v = _qkv_intervals(rng, clip=15)
+    il = IntervalLane()
+    with il.scope("L0.attn"):
+        lane_dot_product_attention(il, q, k, v, scale_shift=2, frac_bits=4)
+    ops = [s["op"] for s in il.cmul_sites]
+    assert ops == ["dot_scores", "mul", "mix_values"]
+    assert all(s["scope"] == "L0.attn" for s in il.cmul_sites)
+    assert all(s["count"] > 0 and s["pbs_bits"] >= 2
+               for s in il.cmul_sites)
+    assert il.ctx.cmuls == sum(s["count"] for s in il.cmul_sites)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: static dominates measured on a full paper-tiny forward
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def paper_tiny():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.nn.module import unbox
+
+    cfg = get_config("paper-tiny")
+    params = unbox(get_model(cfg).init(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+@pytest.mark.parametrize("mech", ["inhibitor", "dotprod"])
+def test_static_dominates_measured_end_to_end(paper_tiny, mech):
+    from repro.analysis import analyze_qlm
+    from repro.models import transformer as tfm
+    from repro.quant.ptq import ptq_lm
+
+    cfg, params = paper_tiny
+    qlm = ptq_lm(params, cfg.with_attention_kind(mech))
+    static = analyze_qlm(qlm, seq_len=6)
+
+    rng = np.random.default_rng(29)
+    toks = rng.integers(0, cfg.vocab_size, (1, 6))
+    fhe = get_lane("fhe_sim")
+    tfm.lm_forward_lane(qlm, fhe, toks)
+    measured = fhe.ctx.scope_report()
+
+    assert set(measured) == set(static["per_scope"])
+    for name, s in measured.items():
+        st = static["per_scope"][name]
+        # counts are shape-determined: static == measured, exactly
+        for c in ("pbs", "cmuls", "adds", "lit_muls"):
+            assert s[c] == st[c], (name, c)
+        # widths are input-dependent: static must dominate
+        assert s["max_bits_at_pbs"] <= st["max_bits_at_pbs"], name
+        assert s["max_bits_any"] <= st["max_bits_any"], name
+
+    # cross-checked measured selection succeeds; static picks no smaller
+    sel_measured = select_params_for_report(
+        measured, static_report=static["per_scope"])
+    sel_static = select_params_static(static["per_scope"])
+    assert sel_static.msg_bits >= sel_measured.msg_bits
+    assert sel_static.poly_size >= sel_measured.poly_size
+
+    if mech == "inhibitor":
+        assert static["zero_cmul_proven"]
+        assert static["totals"]["cmuls"] == 0
+    else:
+        assert len(static["cmul_sites"]) >= 1
+        assert {s["scope"] for s in static["cmul_sites"]} == {"L0.attn"}
+    assert static["lut_verification"]["verified"]
+
+
+def test_cross_check_detects_unsound_static_bound(paper_tiny):
+    from repro.analysis import analyze_qlm
+    from repro.models import transformer as tfm
+    from repro.quant.ptq import ptq_lm
+
+    cfg, params = paper_tiny
+    qlm = ptq_lm(params, cfg)
+    static = analyze_qlm(qlm, seq_len=4)
+    fhe = get_lane("fhe_sim")
+    tfm.lm_forward_lane(qlm, fhe, np.zeros((1, 4), np.int64))
+    measured = fhe.ctx.scope_report()
+
+    tampered = {k: dict(v) for k, v in static["per_scope"].items()}
+    worst = max(measured, key=lambda k: measured[k]["max_bits_at_pbs"])
+    tampered[worst]["max_bits_at_pbs"] = \
+        measured[worst]["max_bits_at_pbs"] - 1
+    with pytest.raises(ValueError, match="SOUNDNESS"):
+        select_params_for_report(measured, static_report=tampered)
+    missing = {k: v for k, v in tampered.items() if k != worst}
+    with pytest.raises(ValueError, match="missing from the static"):
+        select_params_for_report(measured, static_report=missing)
+
+
+def test_report_without_pbs_raises_descriptive_error():
+    """Regression: a PBS-free report must not silently select the
+    smallest parameter point."""
+    no_pbs = {"L0.qkv_proj": {"max_bits_at_pbs": 0, "pbs": 0},
+              "L0.out_proj": {"adds": 64}}
+    with pytest.raises(ValueError, match="observed a PBS"):
+        select_params_for_report(no_pbs)
+    with pytest.raises(ValueError, match="observed a PBS"):
+        select_params_static(no_pbs)
+    with pytest.raises(ValueError, match="empty"):
+        select_params_static({})
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: ANALYSIS_fhe.json schema
+# ---------------------------------------------------------------------------
+
+def test_cli_writes_valid_analysis_json(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    out = tmp_path / "ANALYSIS_fhe.json"
+    rc = main(["--config", "paper-tiny", "--seq-len", "4",
+               "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == 1
+    assert doc["config"] == "paper-tiny"
+    assert set(doc["mechanisms"]) == {"inhibitor", "dotprod"}
+    for mech, rep in doc["mechanisms"].items():
+        assert {"totals", "per_scope", "value_ranges", "cmul_sites",
+                "zero_cmul_proven", "lut_sites", "lut_verification",
+                "params"} <= set(rep)
+        assert rep["params"]["msg_bits"] >= \
+            rep["totals"]["max_bits_at_pbs"]
+        for scope, s in rep["per_scope"].items():
+            assert {"pbs", "cmuls", "adds", "lit_muls",
+                    "max_bits_at_pbs"} <= set(s)
+            lo, hi = rep["value_ranges"][scope]
+            assert lo <= hi
+    assert doc["mechanisms"]["inhibitor"]["zero_cmul_proven"]
+    assert len(doc["mechanisms"]["dotprod"]["cmul_sites"]) >= 1
+    assert "ZERO, proven" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Lint rules
+# ---------------------------------------------------------------------------
+
+def test_lint_flags_each_rule_and_passes_clean_code():
+    bad_arith = ("def lane_mix(lane, x):\n"
+                 "    return jnp.add(x, 1)\n")
+    bad_cmul = ("def lane_inhibitor_alt(lane, q, k):\n"
+                "    return lane.mul(q, k)\n")
+    bad_hash = "seed = hash(('layer', 3))\n"
+    clean = ("def lane_fn(lane, x):\n"
+             "    t = np.asarray([1, 2])\n"
+             "    return lane.lut(x, lambda v: np.exp2(v), -4, 0)\n")
+    assert [v.rule for v in lint_source(bad_arith)] == ["LANE001"]
+    assert [v.rule for v in lint_source(bad_cmul)] == ["LANE002"]
+    assert [v.rule for v in lint_source(bad_hash)] == ["LANE003"]
+    assert lint_source(clean) == []
+
+
+def test_lint_clean_on_repo_sources():
+    from pathlib import Path
+
+    from repro.analysis.lint import lint_paths
+
+    root = Path(__file__).resolve().parent.parent / "src" / "repro"
+    assert lint_paths([root]) == []
+
+
+# ---------------------------------------------------------------------------
+# Soundness property (optional hypothesis, like test_property_based.py)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 5), st.integers(2, 6), st.integers(2, 4),
+           st.integers(0, 10**6))
+    def test_fhe_sim_always_dominated_by_static_bounds(nq, nk, d, seed):
+        """Any concrete run inside the declared ranges observes per-scope
+        widths dominated by — and outputs contained in — the static
+        bounds, at identical op counts."""
+        rng = np.random.default_rng(seed)
+        clip = 31
+        shapes = [(nq, d), (nk, d), (nk, d)]
+        for fn, kw in (
+                (lane_inhibitor_attention,
+                 dict(gamma_shift=1, alpha_q=2, signed=True,
+                      normalize=True)),
+                (lane_dot_product_attention,
+                 dict(scale_shift=2, frac_bits=4))):
+            il = IntervalLane()
+            ivs = [IntervalTensor(np.full(s, -clip), np.full(s, clip))
+                   for s in shapes]
+            with il.scope("attn"):
+                bound = fn(il, *ivs, **kw)
+            fl = FheSimLane()
+            conc = [rng.integers(-clip, clip + 1, s) for s in shapes]
+            with fl.scope("attn"):
+                out = fn(fl, *conc, **kw)
+            ms, ss = fl.ctx.per_scope["attn"], il.ctx.per_scope["attn"]
+            for c in ("pbs", "cmuls", "adds", "lit_muls"):
+                assert ms[c] == ss[c], c
+            assert ms["max_bits_at_pbs"] <= ss["max_bits_at_pbs"]
+            assert ms["max_bits_any"] <= ss["max_bits_any"]
+            assert _contains(bound, out)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (optional test "
+                             "extra); deterministic analyzer tests above "
+                             "still ran")
+    def test_fhe_sim_always_dominated_by_static_bounds():
+        pass

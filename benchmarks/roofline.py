@@ -19,9 +19,14 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+# the platform cost table lives in repro.analysis.costmodel (shared
+# with the static serve-path analyzer and the kernel autotuner priors);
+# the module-level aliases keep this script's formulas readable
+from repro.analysis.costmodel import TPU_V5E as _PLATFORM
+
+PEAK_FLOPS = _PLATFORM.peak_flops
+HBM_BW = _PLATFORM.hbm_bw
+LINK_BW = _PLATFORM.link_bw
 
 # active params (N or N_active) per arch, from the configs
 _ACTIVE_PARAMS = {}

@@ -73,8 +73,11 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
         hw_rows = eng.alloc.high_water_pages * eng.cfg.page_size
     else:
         hw_rows = engine_kw["max_batch"] * engine_kw["max_len"]
+    from repro.analysis.serve_static import engine_desc
+
     tokens = sum(len(r.output) for r in done)
     stats = eng.stats()
+    decode_ticks = max(stats["decode_ticks"], 1)
     return {
         "allocator": allocator,
         "requests": len(done),
@@ -83,6 +86,18 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
         "wall_s": round(wall, 4),
         "tok_per_s": round(tokens / wall, 2),
         "prefill_compiles": eng.prefill_compiles,
+        "decode_compiles": eng.decode_compiles,
+        # the effective (post-clamp) engine config: the analyzer's
+        # --check-bench re-derives the proven compile budget from this
+        # record alone (repro.analysis.serve_static.cross_check_bench)
+        "engine": engine_desc(eng),
+        "retrace_budget": stats["retrace_budget"],
+        # S1 gate material: batched block-table flushes, at most one per
+        # decode tick no matter how many slots grew
+        "table_uploads": stats["table_uploads"],
+        "table_uploads_decode": stats["table_uploads_decode"],
+        "table_uploads_per_tick": round(
+            stats["table_uploads_decode"] / decode_ticks, 4),
         "cache_high_water_bytes": mcfg.num_layers * hw_rows * row_bytes,
         "prefill_tokens": stats["prefill_tokens"],
         "prefix_hit_tokens": stats["prefix_hit_tokens"],
@@ -231,10 +246,15 @@ def decode_kernel_bench(*, batch, page_size, pages_per_slot, num_heads,
         for _ in range(iters):
             jax.block_until_ready(fn(q, k_pool, v_pool))
         wall = (time.perf_counter() - t0) / iters
-        return plan, out, wall
+        # analytic FLOPs/bytes from walking the tick's jaxpr with the
+        # shared platform cost table — replaces hand-computed traffic
+        from repro.analysis import costmodel
+        static = costmodel.roofline(
+            costmodel.jaxpr_costs(jax.make_jaxpr(tick)(q, k_pool, v_pool)))
+        return plan, out, wall, static
 
-    plan_g, out_g, wall_g = arm("paged")
-    plan_k, out_k, wall_k = arm("paged_pallas")
+    plan_g, out_g, wall_g, static_g = arm("paged")
+    plan_k, out_k, wall_k, static_k = arm("paged_pallas")
     parity = bool(np.allclose(np.asarray(out_g), np.asarray(out_k),
                               rtol=1e-4, atol=1e-5))
 
@@ -256,12 +276,14 @@ def decode_kernel_bench(*, batch, page_size, pages_per_slot, num_heads,
             "tick_us": round(1e6 * wall_g, 1),
             "tok_per_s": round(batch / wall_g, 1),
             "kv_hbm_bytes_per_tick": gather_rows * row_bytes,
+            "static": static_g,
         },
         "kernel": {
             "plan": plan_k.backend, "reason": plan_k.reason,
             "tick_us": round(1e6 * wall_k, 1),
             "tok_per_s": round(batch / wall_k, 1),
             "kv_hbm_bytes_per_tick": kernel_rows * row_bytes,
+            "static": static_k,
         },
     }
 
@@ -321,11 +343,30 @@ def main(argv=None) -> int:
     parity = outputs["paged"] == outputs["contiguous"]
     results["parity"] = bool(parity)
     results["distinct_prompt_lens"] = int(len(set(map(int, lens))))
+    # S1 gate (parity-checked above): the batched table flush means at
+    # most ONE block-table upload per decode tick — regression here is
+    # the per-slot upload loop coming back
+    upload_gate = (results["paged"]["table_uploads_per_tick"] <= 1.0)
+    results["table_upload_gate"] = bool(upload_gate)
+    # measured-vs-proven compile soundness, computed from the recorded
+    # configs the same way CI's --check-bench pass does
+    compile_gate = all(
+        arm["prefill_compiles"] <= arm["retrace_budget"]["prefill_proven"]
+        and arm["decode_compiles"] <= arm["retrace_budget"]["decode_proven"]
+        for arm in (results["paged"], results["contiguous"]))
+    results["compile_gate"] = bool(compile_gate)
     path = args.json or f"BENCH_serve_{'smoke' if args.smoke else 'full'}.json"
     with open(path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"serve_parity,0,{'OK' if parity else 'MISMATCH'} -> {path}",
           flush=True)
+    print(f"serve_table_uploads,0,"
+          f"per_tick={results['paged']['table_uploads_per_tick']};"
+          f"{'OK' if upload_gate else 'FAIL'}", flush=True)
+    print(f"serve_compile_budget,0,"
+          f"paged={results['paged']['decode_compiles']}/"
+          f"{results['paged']['retrace_budget']['decode_proven']};"
+          f"{'OK' if compile_gate else 'SOUNDNESS-FAIL'}", flush=True)
 
     # ---- shared-prefix radix-cache arm (DESIGN.md §11) ----
     if args.smoke:
@@ -373,7 +414,8 @@ def main(argv=None) -> int:
     print(f"serve_decode_parity,0,"
           f"{'OK' if decode['parity'] else 'MISMATCH'} -> "
           f"BENCH_serve_decode.json", flush=True)
-    return 0 if (parity and decode["parity"] and prefix_res["ok"]) else 1
+    return 0 if (parity and decode["parity"] and prefix_res["ok"]
+                 and upload_gate and compile_gate) else 1
 
 
 if __name__ == "__main__":

@@ -30,6 +30,10 @@ METRICS = [
      "serve contiguous tok/s", True),
     ("BENCH_serve_smoke.json", "paged.prefill_compiles",
      "serve paged prefill compiles", False),
+    ("BENCH_serve_smoke.json", "paged.decode_compiles",
+     "serve paged decode compiles", False),
+    ("BENCH_serve_smoke.json", "paged.table_uploads_per_tick",
+     "serve table uploads/tick", False),
     ("BENCH_serve_decode.json", "gather.tick_us",
      "decode gather tick us", False),
     ("BENCH_serve_decode.json", "kernel.tick_us",
@@ -53,6 +57,17 @@ METRICS = [
      "static dotprod cmuls", False),
     ("ANALYSIS_fhe.json", "mechanisms.dotprod.totals.max_bits_at_pbs",
      "static dotprod bits@pbs", False),
+    # serve-path static analysis (repro.analysis.serve): compile-set
+    # size, per-tick sync counts, and the static decode byte budget —
+    # drift is a hot-path change, never timing noise
+    ("ANALYSIS_serve.json", "allocators.paged.retrace.proven_total",
+     "serve proven compile set", False),
+    ("ANALYSIS_serve.json", "sync_audit.per_tick.h2d",
+     "serve per-tick h2d syncs", False),
+    ("ANALYSIS_serve.json", "sync_audit.per_tick.d2h",
+     "serve per-tick d2h syncs", False),
+    ("ANALYSIS_serve.json", "allocators.paged.roofline.decode.max.hbm_bytes",
+     "serve static decode bytes/tick", False),
 ]
 
 

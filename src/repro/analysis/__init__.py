@@ -9,12 +9,27 @@ on the inhibitor arm, and LUT-domain/table-width verification.  See
 DESIGN.md §12 for the soundness contract.
 
     python -m repro.analysis --config paper-tiny      # ANALYSIS_fhe.json
+    python -m repro.analysis.serve --config paper-tiny  # ANALYSIS_serve.json
     python -m repro.analysis.lint src/repro           # lane discipline
+
+``repro.analysis.serve_static`` applies the same proof discipline to
+the *serving* hot path (DESIGN.md §13): retrace-budget proofs over the
+engine's jit entry points, a host-sync audit of the tick path, and a
+static roofline (``repro.analysis.costmodel``) shared with the
+benchmarks and the kernel autotuner's candidate priors.
 """
 
 from repro.analysis.analyzer import (DEFAULT_MECHANISMS,  # noqa: F401
                                      LUT_BITS_CEILING, analyze_config,
                                      analyze_qlm, format_report)
+from repro.analysis.costmodel import (DEFAULT_PLATFORM,  # noqa: F401
+                                      TPU_V5E, Costs, Platform,
+                                      jaxpr_costs, kernel_prior,
+                                      rank_kernel_candidates, roofline)
 from repro.analysis.interval import (IntervalOverflow,  # noqa: F401
                                      IntervalTensor, as_interval)
 from repro.analysis.interval_lane import IntervalLane  # noqa: F401
+from repro.analysis.serve_static import (analyze_serve,  # noqa: F401
+                                         audit_sync_sites,
+                                         cross_check_bench, retrace_budget,
+                                         sync_summary)

@@ -26,6 +26,17 @@ LANE003  no bare ``hash()`` anywhere: Python's string hashing is salted
          is nondeterministic across runs — the PR 3 bug class.  Derive
          integers with ``zlib.crc32``/``hashlib`` instead.
 
+LANE004  no untagged host-sync primitive (``.item()``, ``int()``/
+         ``float()`` coercion, ``np.asarray`` on device values,
+         ``jnp.asarray`` uploads) inside the tick-path functions of
+         ``serve/engine.py``.  Every sync the tick path keeps must
+         carry a ``# sync: <required|eliminable|host> — <reason>`` tag
+         on its line — the serve-path analyzer
+         (``repro.analysis.serve_static``) audits the tagged inventory
+         and CI gates on the per-tick counts, so a new sync can't land
+         silently.  The tick path is the static call-graph closure of
+         ``Engine.step`` / ``run_to_completion``.
+
 Run as ``python -m repro.analysis.lint [paths...]`` (default
 ``src/repro``); exits non-zero listing every violation.
 """
@@ -126,6 +137,38 @@ def _check_function(fn, path: str, out: List[Violation]) -> None:
                 "property"))
 
 
+def _check_sync_discipline(tree: ast.Module, src: str, path: str,
+                           out: List[Violation]) -> None:
+    """LANE004: tick-path host-sync sites in serve/engine.py must carry
+    a ``# sync:`` tag (classification + tag grammar live in
+    serve_static, shared with the analyzer so the lint and the audit
+    can never disagree about what counts as a sync)."""
+    if not path.replace("\\", "/").endswith("serve/engine.py"):
+        return
+    from repro.analysis.serve_static import (classify_sync_call,
+                                             find_sync_tag,
+                                             tick_path_functions)
+
+    funcs = tick_path_functions(tree)
+    lines = src.splitlines()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef) or node.name not in funcs:
+            continue
+        for call in ast.walk(node):
+            hit = classify_sync_call(call)
+            if hit is None:
+                continue
+            api, kind = hit
+            line = lines[call.lineno - 1] if call.lineno <= len(lines) else ""
+            if find_sync_tag(line) is None:
+                out.append(Violation(
+                    path, call.lineno, "LANE004",
+                    f"untagged host-sync {api} ({kind}) in tick-path "
+                    f"{node.name}(); add '# sync: <required|eliminable|"
+                    f"host> — <reason>' on this line or move the sync "
+                    "off the tick path"))
+
+
 def lint_source(src: str, path: str = "<string>") -> List[Violation]:
     """Lint one module's source; returns violations (possibly empty)."""
     out: List[Violation] = []
@@ -143,6 +186,7 @@ def lint_source(src: str, path: str = "<string>") -> List[Violation]:
                 path, node.lineno, "LANE003",
                 "bare hash() — salted per process (PYTHONHASHSEED); use "
                 "zlib.crc32/hashlib for seed- or key-derived values"))
+    _check_sync_discipline(tree, src, path, out)
     out.sort(key=lambda v: (v.path, v.line, v.rule))
     return out
 

@@ -1,0 +1,630 @@
+"""Static analysis of the serve engine's hot path (DESIGN.md §13).
+
+Three passes over the engine's jit entry points (``_jit_decode``,
+``_jit_prefill_chunk``, the donated CoW pool copy) and the tick-path
+host code:
+
+1. **Retrace-budget proof** — :func:`retrace_budget` exhaustively
+   enumerates every abstract trace signature reachable from an
+   ``EngineConfig`` (prefill bucket widths × decode table-width
+   buckets), using the *same* pure scheduling functions the engine runs
+   (``repro.serve.engine.prefill_schedule`` / ``decode_table_width``),
+   and proves the compile set finite and within the declared budget.
+   :func:`verify_engine_signatures` then traces each enumerated
+   signature abstractly (``jax.eval_shape``) against a live engine,
+   proving each is actually traceable; :func:`cross_check_bench`
+   compares measured compile counters from a serve_bench artifact
+   against the proven bound — measured > proven is a loud SOUNDNESS
+   BUG, mirroring PR 6's params cross-check.
+
+2. **Host-sync audit** — :func:`audit_sync_sites` walks the AST of
+   ``serve/engine.py``, closes the tick-path call graph from
+   ``Engine.step`` / ``run_to_completion``, and inventories every
+   host→device upload and device→host sync, classifying each by the
+   mandatory ``# sync: <required|eliminable|host> — <reason>`` tag
+   (LANE004 in ``repro.analysis.lint`` rejects untagged sites).
+   :func:`jaxpr_costs`' ``host_callbacks`` field covers syncs *inside*
+   jitted code.  CI gates on the per-tick counts.
+
+3. **Static roofline** — :func:`roofline_engine` walks the jaxpr of
+   each enumerated decode/prefill signature with
+   ``repro.analysis.costmodel`` and reports FLOPs / HBM-byte /
+   transfer-byte budgets per tick.
+
+Entry point: ``python -m repro.analysis.serve`` (see ``serve.py``),
+emitting ``ANALYSIS_serve.json``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+SCHEMA_VERSION = 1
+
+__all__ = [
+    "retrace_budget", "enumerate_prefill_buckets",
+    "enumerate_decode_buckets", "verify_engine_signatures",
+    "audit_sync_sites", "sync_summary", "tick_path_functions",
+    "classify_sync_call", "find_sync_tag", "roofline_engine",
+    "engine_desc", "analyze_serve", "cross_check_bench",
+    "format_serve_report",
+]
+
+
+# --------------------------------------------------------------------------
+# pass 1: retrace-budget proof
+# --------------------------------------------------------------------------
+
+def enumerate_prefill_buckets(*, max_len: int, prefill_chunk: int,
+                              bucketed: bool, page_size: Optional[int] = None,
+                              prefix_cache: bool = False) -> List[int]:
+    """Every prefill chunk width reachable from the config: exhaustive
+    over all admissible prompt lengths (1..max_len-1) and — when the
+    prefix cache can shift the schedule start — every page-aligned
+    credit the cache could grant.  Uses the engine's own pure
+    ``prefill_schedule``, so the enumeration IS what the engine traces."""
+    from repro.serve.engine import prefill_schedule
+
+    widths: Set[int] = set()
+    for plen in range(1, max_len):
+        starts: Sequence[int] = (0,)
+        if prefix_cache and page_size:
+            # admission caps the credit so >=1 prompt token is prefilled
+            cap = ((plen - 1) // page_size) * page_size
+            starts = range(0, cap + 1, page_size)
+        for credit in starts:
+            for _start, width in prefill_schedule(
+                    plen, chunk=prefill_chunk, max_len=max_len,
+                    bucketed=bucketed, start=credit):
+                widths.add(width)
+    return sorted(widths)
+
+
+def enumerate_decode_buckets(*, max_len: int, page_size: int,
+                             pages_per_slot: int) -> List[int]:
+    """Every clamped block-table width a paged decode tick can trace:
+    exhaustive over the longest-active-row positions 1..max_len."""
+    from repro.serve.engine import decode_table_width
+
+    return sorted({decode_table_width(n, page_size=page_size,
+                                      pages_per_slot=pages_per_slot)
+                   for n in range(1, max_len + 1)})
+
+
+def retrace_budget(*, bucketed: bool, paged: bool, max_len: int,
+                   prefill_chunk: int, page_size: Optional[int] = None,
+                   pages_per_slot: Optional[int] = None,
+                   prefix_cache: bool = True,
+                   declared: Optional[int] = None) -> Dict[str, Any]:
+    """Prove the engine's jit compile set finite and within budget.
+
+    The *declared* budget is the design contract (DESIGN.md §13):
+    ``log2(prefill_chunk)+1`` prefill buckets, ``log2(pages_per_slot
+    rounded to pow2)+1`` decode table buckets (1 for contiguous), plus
+    one donated pool-copy trace under paging.  The *proven* counts come
+    from exhaustive enumeration over every reachable input; an
+    unbucketed family proves MORE signatures than declared and fails
+    ``within_budget`` — the analyzer's rejection case.
+    """
+    from repro.serve.engine import _next_pow2
+
+    prefill = enumerate_prefill_buckets(
+        max_len=max_len, prefill_chunk=prefill_chunk, bucketed=bucketed,
+        page_size=page_size if paged else None, prefix_cache=prefix_cache)
+    declared_prefill = max(prefill_chunk.bit_length(), 1)
+    if paged:
+        assert page_size and pages_per_slot, "paged budget needs page geometry"
+        decode = enumerate_decode_buckets(
+            max_len=max_len, page_size=page_size,
+            pages_per_slot=pages_per_slot)
+        declared_decode = _next_pow2(pages_per_slot).bit_length()
+        pool_copy = 1
+    else:
+        decode = []                     # one static full-width signature
+        declared_decode = 1
+        pool_copy = 0
+    proven_decode = len(decode) if paged else 1
+    proven_total = len(prefill) + proven_decode + pool_copy
+    declared_total = (declared if declared is not None
+                      else declared_prefill + declared_decode + pool_copy)
+    return {
+        "prefill": {"bucketed": bucketed, "buckets": prefill,
+                    "proven": len(prefill), "declared": declared_prefill},
+        "decode": {"paged": paged, "buckets": decode,
+                   "proven": proven_decode, "declared": declared_decode},
+        "pool_copy": {"proven": pool_copy, "declared": pool_copy},
+        "proven_total": proven_total,
+        "declared_total": declared_total,
+        "within_budget": (len(prefill) <= declared_prefill
+                          and proven_decode <= declared_decode
+                          and proven_total <= declared_total),
+    }
+
+
+def _aval_signature(tree) -> str:
+    """Stable digest of a pytree's abstract avals (shape/dtype only)."""
+    import hashlib
+
+    import jax
+
+    leaves = [
+        (tuple(getattr(x, "shape", ())), str(getattr(x, "dtype", type(x))))
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return hashlib.sha256(repr(leaves).encode()).hexdigest()[:16]
+
+
+def verify_engine_signatures(engine, budget: Dict[str, Any]
+                             ) -> Dict[str, Any]:
+    """Abstractly trace every enumerated signature against a live engine
+    (``jax.eval_shape`` — no compilation, no device work), proving each
+    is reachable and recording its aval digest."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    out: Dict[str, Any] = {"prefill": [], "decode": [], "verified": True}
+    try:
+        view = engine._slot_view(0)
+        for cb in budget["prefill"]["buckets"]:
+            args = (engine.params,
+                    jax.ShapeDtypeStruct((1, cb), jnp.int32),
+                    view, np.int32(0), jax.random.PRNGKey(0))
+            jax.eval_shape(engine._prefill_chunk, *args)
+            out["prefill"].append(
+                {"width": cb, "signature": _aval_signature(args)})
+        last = jax.ShapeDtypeStruct((engine.cfg.max_batch, 1), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        if engine.paged:
+            for hw in budget["decode"]["buckets"]:
+                kv = engine.states.kv
+                states_in = engine.states._replace(
+                    kv=kv._replace(block_tables=kv.block_tables[:, :, :hw]))
+                args = (engine.params, last, states_in, key)
+                jax.eval_shape(engine._decode_step, *args)
+                out["decode"].append(
+                    {"table_width": hw, "signature": _aval_signature(args)})
+        else:
+            args = (engine.params, last, engine.states, key)
+            jax.eval_shape(engine._decode_step, *args)
+            out["decode"].append(
+                {"table_width": None, "signature": _aval_signature(args)})
+    except Exception as e:  # noqa: BLE001 — an untraceable signature is
+        out["verified"] = False       # a finding, not an analyzer crash
+        out["error"] = f"{type(e).__name__}: {e}"
+    return out
+
+
+# --------------------------------------------------------------------------
+# pass 2: host-sync audit (AST)
+# --------------------------------------------------------------------------
+
+#: np/jnp call surfaces that cross the host<->device link.  ``jnp.*``
+#: constructors upload (h2d); ``np.asarray``/``.item()``/int()-style
+#: coercions on device values block and read back (d2h).
+_H2D_ATTRS = frozenset({"asarray", "array", "int32", "int64", "float32",
+                        "float64", "bfloat16", "device_put"})
+_D2H_ATTRS = frozenset({"asarray", "array", "item", "tolist",
+                        "block_until_ready"})
+_H2D_BASES = frozenset({"jnp", "jax.numpy", "jax"})
+_D2H_BASES = frozenset({"np", "numpy"})
+_D2H_BUILTINS = frozenset({"int", "float", "bool"})
+
+_SYNC_TAG_RE = re.compile(
+    r"#\s*sync:\s*(required|eliminable|host)\b\s*[—–-]*\s*(.*)")
+
+#: how often each tick-path function runs in steady-state decode — the
+#: per-tick gate counts only funcs at "tick" frequency
+_TICK_FREQ = {
+    "step": "tick", "run_to_completion": "tick", "_flush_tables": "tick",
+    "_decode_table_width": "tick", "_select": "tick", "_decode_step": "tick",
+    "_ensure_pages": "growth", "_mark_tables_dirty": "growth",
+    "_admit": "admission", "_stage_slot": "admission",
+    "_prefill": "admission", "_prefix_credit": "admission",
+    "_prefill_schedule": "admission", "_prefill_chunk": "admission",
+    "_slot_view": "admission", "_merge_view": "admission",
+    "_set_view_cursor": "admission", "_prefill_extent": "admission",
+    "prefill_schedule": "admission", "decode_table_width": "tick",
+    "_copy_page": "fork", "_jit_pool_page_copy": "fork",
+    "_finish": "finish", "_scrub_slot_device": "finish",
+    "_append_token": "token", "_reset_slot": "admission",
+    "_tune_decode_bucket": "bucket", "retrace_budget": "stats",
+}
+
+
+class SyncSite(NamedTuple):
+    path: str
+    line: int
+    func: str        # enclosing tick-path function
+    api: str         # e.g. "jnp.asarray", "np.asarray", "int()"
+    kind: str        # "h2d" | "d2h"
+    freq: str        # tick | admission | growth | fork | finish | token
+    cls: str         # required | eliminable | host | "" (untagged)
+    reason: str
+
+
+def _dotted(node: ast.AST) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def classify_sync_call(node: ast.AST) -> Optional[Tuple[str, str]]:
+    """(api, kind) when the Call crosses the host<->device boundary;
+    None otherwise."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        base = _dotted(f.value)
+        if base in _H2D_BASES and f.attr in _H2D_ATTRS:
+            return f"{base}.{f.attr}", "h2d"
+        if base in _D2H_BASES and f.attr in _D2H_ATTRS:
+            return f"{base}.{f.attr}", "d2h"
+        if not base and f.attr in ("item", "tolist", "block_until_ready"):
+            return f".{f.attr}", "d2h"
+    if (isinstance(f, ast.Name) and f.id in _D2H_BUILTINS and node.args
+            and not isinstance(node.args[0], ast.Constant)):
+        return f"{f.id}()", "d2h"
+    return None
+
+
+def find_sync_tag(line: str) -> Optional[Tuple[str, str]]:
+    """(class, reason) from a ``# sync:`` tag on one source line."""
+    m = _SYNC_TAG_RE.search(line)
+    return (m.group(1), m.group(2).strip()) if m else None
+
+
+def tick_path_functions(tree: ast.Module,
+                        roots: Sequence[str] = ("step", "run_to_completion"),
+                        ) -> Set[str]:
+    """Transitive closure of the engine call graph from the tick roots,
+    over ``self.X()`` method calls and bare module-function calls."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            defs[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, ast.FunctionDef):
+                    defs[item.name] = item
+
+    def callees(fn: ast.FunctionDef) -> Set[str]:
+        found: Set[str] = set()
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self" and f.attr in defs):
+                found.add(f.attr)
+            elif isinstance(f, ast.Name) and f.id in defs:
+                found.add(f.id)
+        return found
+
+    reached: Set[str] = set()
+    frontier = [r for r in roots if r in defs]
+    while frontier:
+        name = frontier.pop()
+        if name in reached:
+            continue
+        reached.add(name)
+        frontier.extend(callees(defs[name]) - reached)
+    return reached
+
+
+def audit_sync_sites(src: str, path: str = "serve/engine.py",
+                     roots: Sequence[str] = ("step", "run_to_completion"),
+                     ) -> List[SyncSite]:
+    """Inventory every host<->device sync call inside the tick-path
+    call-graph closure of one module's source."""
+    tree = ast.parse(src, filename=path)
+    funcs = tick_path_functions(tree, roots)
+    lines = src.splitlines()
+    sites: List[SyncSite] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef) or node.name not in funcs:
+            continue
+        for call in ast.walk(node):
+            hit = classify_sync_call(call)
+            if hit is None:
+                continue
+            api, kind = hit
+            tag = find_sync_tag(lines[call.lineno - 1]) \
+                if call.lineno <= len(lines) else None
+            cls, reason = tag if tag else ("", "")
+            sites.append(SyncSite(
+                path=path, line=call.lineno, func=node.name, api=api,
+                kind=kind, freq=_TICK_FREQ.get(node.name, "tick"),
+                cls=cls, reason=reason))
+    sites.sort(key=lambda s: (s.line, s.api))
+    return sites
+
+
+#: per-decode-tick transfer contract: one batched table flush + one
+#: last-token upload (h2d <= 2) and one next-token readback (d2h <= 1)
+PER_TICK_DECLARED = {"h2d": 2, "d2h": 1}
+
+
+def sync_summary(sites: Sequence[SyncSite]) -> Dict[str, Any]:
+    """Aggregate the inventory into the CI gate: untagged sites are
+    violations; per-tick counts (freq == "tick", class != host) must
+    stay within the declared contract."""
+    untagged = [s for s in sites if not s.cls]
+    per_tick = {
+        "h2d": sum(1 for s in sites
+                   if s.freq == "tick" and s.kind == "h2d"
+                   and s.cls != "host"),
+        "d2h": sum(1 for s in sites
+                   if s.freq == "tick" and s.kind == "d2h"
+                   and s.cls != "host"),
+    }
+    table_flushes = sum(1 for s in sites
+                        if s.func == "_flush_tables" and s.kind == "h2d")
+    return {
+        "sites": [s._asdict() for s in sites],
+        "n_sites": len(sites),
+        "unallowlisted": [s._asdict() for s in untagged],
+        "eliminable": [s._asdict() for s in sites
+                       if s.cls == "eliminable"],
+        "per_tick": per_tick,
+        "declared_per_tick": dict(PER_TICK_DECLARED),
+        # S1 before/after: the replaced per-slot upload loop cost one
+        # h2d transfer per grown slot per tick (<= max_batch); the
+        # batched flush is a single full-table upload
+        "block_table_uploads_per_tick": {
+            "before": "one per grown/scrubbed slot (<= max_batch)",
+            "after": table_flushes},
+        "ok": (not untagged
+               and per_tick["h2d"] <= PER_TICK_DECLARED["h2d"]
+               and per_tick["d2h"] <= PER_TICK_DECLARED["d2h"]
+               and table_flushes <= 1),
+    }
+
+
+def audit_engine_file(path: Optional[str] = None) -> Dict[str, Any]:
+    """Run the sync audit on the installed ``repro.serve.engine``."""
+    if path is None:
+        import repro.serve.engine as engine_mod
+        path = engine_mod.__file__
+    src = Path(path).read_text(encoding="utf-8")
+    rel = str(path).replace("\\", "/")
+    rel = rel[rel.rfind("repro/"):] if "repro/" in rel else rel
+    return sync_summary(audit_sync_sites(src, rel))
+
+
+# --------------------------------------------------------------------------
+# pass 3: static roofline
+# --------------------------------------------------------------------------
+
+def roofline_engine(engine, budget: Dict[str, Any],
+                    platform=None) -> Dict[str, Any]:
+    """Per-signature FLOPs / HBM-bytes / transfer-bytes via jaxpr
+    walking, plus the per-tick host<->device byte budget implied by the
+    engine's transfer sites."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import costmodel
+
+    platform = platform or costmodel.DEFAULT_PLATFORM
+    b, itemsize = engine.cfg.max_batch, 4
+    per_tick_h2d = b * itemsize          # last-token batch
+    if engine.paged:
+        per_tick_h2d += (b * engine.alloc.pages_per_slot * itemsize)
+    per_tick_d2h = b * itemsize          # next-token readback
+    out: Dict[str, Any] = {
+        "platform": platform.name,
+        "transfers_per_tick": {
+            "h2d_bytes": per_tick_h2d, "d2h_bytes": per_tick_d2h,
+            "h2d_ops": 2 if engine.paged else 1, "d2h_ops": 1},
+        "decode": {"per_bucket": {}}, "prefill": {"per_bucket": {}},
+    }
+    key = jax.random.PRNGKey(0)
+    last = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    transfer = float(per_tick_h2d + per_tick_d2h)
+    decode_entries = {}
+    widths = budget["decode"]["buckets"] if engine.paged else [None]
+    for hw in widths:
+        states_in = engine.states
+        if hw is not None:
+            kv = engine.states.kv
+            states_in = engine.states._replace(
+                kv=kv._replace(block_tables=kv.block_tables[:, :, :hw]))
+        jx = jax.make_jaxpr(engine._decode_step)(
+            engine.params, last, states_in, key)
+        entry = costmodel.roofline(costmodel.jaxpr_costs(jx), platform,
+                                   transfer_bytes=transfer)
+        decode_entries[str(hw if hw is not None else "full")] = entry
+    out["decode"]["per_bucket"] = decode_entries
+    if decode_entries:
+        out["decode"]["max"] = max(decode_entries.values(),
+                                   key=lambda e: e["hbm_bytes"])
+    view = engine._slot_view(0)
+    prefill_entries = {}
+    for cb in budget["prefill"]["buckets"]:
+        toks = jax.ShapeDtypeStruct((1, cb), jnp.int32)
+        jx = jax.make_jaxpr(engine._prefill_chunk)(
+            engine.params, toks, view, jnp.int32(0), key)
+        prefill_entries[str(cb)] = costmodel.roofline(
+            costmodel.jaxpr_costs(jx), platform,
+            transfer_bytes=float(cb * itemsize))
+    out["prefill"]["per_bucket"] = prefill_entries
+    if prefill_entries:
+        out["prefill"]["max"] = max(prefill_entries.values(),
+                                    key=lambda e: e["hbm_bytes"])
+    out["jit_host_callbacks"] = sum(
+        e["host_callbacks"]
+        for e in list(decode_entries.values()) + list(prefill_entries.values()))
+    return out
+
+
+# --------------------------------------------------------------------------
+# report assembly + measured-vs-proven cross-check
+# --------------------------------------------------------------------------
+
+def engine_desc(engine) -> Dict[str, Any]:
+    """The effective (post-clamp) engine configuration, recorded into
+    bench artifacts so :func:`cross_check_bench` can re-derive the
+    proven budget purely from the artifact."""
+    return {
+        "family": engine.api.cfg.family,
+        "allocator": "paged" if engine.paged else "contiguous",
+        "bucketed": engine._bucketed,
+        "max_batch": engine.cfg.max_batch,
+        "max_len": engine.cfg.max_len,
+        "page_size": engine.cfg.page_size,
+        "prefill_chunk": engine.cfg.prefill_chunk,
+        "pages_per_slot": (engine.alloc.pages_per_slot
+                           if engine.paged else None),
+        "prefix_cache": engine.prefix is not None,
+    }
+
+
+def analyze_serve(config_name: str, *,
+                  allocators: Sequence[str] = ("paged", "contiguous"),
+                  engine_kw: Optional[Dict[str, Any]] = None,
+                  reduced: Optional[Dict[str, Any]] = None,
+                  declared_budget: Optional[int] = None,
+                  seed: int = 0) -> Dict[str, Any]:
+    """Run all three passes for one model config; returns the
+    ``ANALYSIS_serve.json`` document (pure data, JSON-serializable)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.nn.module import unbox
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg = get_config(config_name.replace("_", "-"))
+    if reduced is not None:
+        cfg = cfg.reduced(**reduced)
+    api = get_model(cfg)
+    params = unbox(api.init(jax.random.PRNGKey(seed)))
+    engine_kw = dict(engine_kw or {})
+
+    doc: Dict[str, Any] = {
+        "schema": SCHEMA_VERSION,
+        "config": cfg.name,
+        "family": cfg.family,
+        "engine_kw": engine_kw,
+        "allocators": {},
+    }
+    ok = True
+    for alloc in allocators:
+        eng = Engine(api, params, EngineConfig(allocator=alloc, **engine_kw))
+        budget = retrace_budget(
+            bucketed=eng._bucketed, paged=eng.paged,
+            max_len=eng.cfg.max_len, prefill_chunk=eng.cfg.prefill_chunk,
+            page_size=eng.cfg.page_size,
+            pages_per_slot=eng.alloc.pages_per_slot if eng.paged else None,
+            prefix_cache=eng.prefix is not None, declared=declared_budget)
+        sigs = verify_engine_signatures(eng, budget)
+        roof = roofline_engine(eng, budget)
+        arm_ok = (budget["within_budget"] and sigs["verified"]
+                  and roof["jit_host_callbacks"] == 0)
+        doc["allocators"][alloc] = {
+            "engine": engine_desc(eng),
+            "retrace": budget,
+            "signatures": sigs,
+            "roofline": roof,
+            "ok": arm_ok,
+        }
+        ok = ok and arm_ok
+    audit = audit_engine_file()
+    doc["sync_audit"] = audit
+    doc["ok"] = ok and audit["ok"]
+    return doc
+
+
+def cross_check_bench(bench_doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Measured-vs-proven compile check over a serve_bench artifact.
+
+    Each bench arm records its effective engine config (``engine`` key,
+    from :func:`engine_desc`) and its live compile counters; the proven
+    budget is re-derived here purely from the recorded config.  A
+    measured count above the proven bound means the enumeration missed
+    a reachable signature — a SOUNDNESS BUG in the analyzer, reported
+    loudly, never papered over.
+    """
+    arms: Dict[str, Any] = {}
+    ok = True
+    for name, arm in bench_doc.items():
+        if not isinstance(arm, dict) or "engine" not in arm:
+            continue
+        e = arm["engine"]
+        budget = retrace_budget(
+            bucketed=e["bucketed"], paged=e["allocator"] == "paged",
+            max_len=e["max_len"], prefill_chunk=e["prefill_chunk"],
+            page_size=e["page_size"], pages_per_slot=e.get("pages_per_slot"),
+            prefix_cache=e.get("prefix_cache", False))
+        checks = {
+            "prefill": {"measured": arm.get("prefill_compiles", 0),
+                        "proven": budget["prefill"]["proven"]},
+            "decode": {"measured": arm.get("decode_compiles", 0),
+                       "proven": budget["decode"]["proven"]},
+        }
+        failures = [
+            f"SOUNDNESS BUG: {name}.{k} measured {v['measured']} compiles "
+            f"> proven bound {v['proven']} — the static enumeration "
+            f"missed a reachable trace signature"
+            for k, v in checks.items() if v["measured"] > v["proven"]]
+        arms[name] = {"checks": checks, "failures": failures,
+                      "ok": not failures}
+        ok = ok and not failures
+    return {"ok": ok, "arms": arms,
+            "checked": sorted(arms)}
+
+
+def format_serve_report(doc: Dict[str, Any]) -> str:
+    """Human-readable summary of an analyze_serve document."""
+    lines = [f"serve static analysis: config={doc['config']} "
+             f"family={doc['family']}"]
+    for alloc, arm in doc["allocators"].items():
+        r = arm["retrace"]
+        lines.append(
+            f"  [{alloc}] compile set: prefill {r['prefill']['proven']}"
+            f"/{r['prefill']['declared']} buckets "
+            f"{r['prefill']['buckets']}, decode {r['decode']['proven']}"
+            f"/{r['decode']['declared']} "
+            f"({'within' if r['within_budget'] else 'OVER'} budget, "
+            f"total {r['proven_total']}/{r['declared_total']})")
+        roof = arm["roofline"]
+        dmax = roof["decode"].get("max")
+        if dmax:
+            lines.append(
+                f"  [{alloc}] decode tick (widest bucket): "
+                f"{dmax['flops']:.3g} FLOPs, {dmax['hbm_bytes']:.3g} "
+                f"HBM bytes, bound={dmax['bound']}, "
+                f"est {dmax['est_s'] * 1e6:.1f} us")
+        t = roof["transfers_per_tick"]
+        lines.append(
+            f"  [{alloc}] transfers/tick: {t['h2d_ops']} h2d "
+            f"({t['h2d_bytes']} B), {t['d2h_ops']} d2h "
+            f"({t['d2h_bytes']} B)")
+    audit = doc["sync_audit"]
+    lines.append(
+        f"  sync audit: {audit['n_sites']} sites, "
+        f"{len(audit['unallowlisted'])} untagged, per-tick "
+        f"h2d={audit['per_tick']['h2d']}/"
+        f"{audit['declared_per_tick']['h2d']} "
+        f"d2h={audit['per_tick']['d2h']}/"
+        f"{audit['declared_per_tick']['d2h']}, "
+        f"table uploads/tick={audit['block_table_uploads_per_tick']['after']}")
+    if "cross_check" in doc:
+        cc = doc["cross_check"]
+        lines.append(f"  bench cross-check: arms={cc['checked']} "
+                     f"{'OK' if cc['ok'] else 'FAILED'}")
+        for arm in cc["arms"].values():
+            lines.extend(f"    {f}" for f in arm["failures"])
+    lines.append(f"  => {'OK' if doc['ok'] else 'FAILED'}")
+    return "\n".join(lines)

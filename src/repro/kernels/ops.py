@@ -104,6 +104,10 @@ class KernelRegistry:
     def __init__(self):
         self._interpret: Optional[bool] = None
         self.tuned: Dict[tuple, KernelChoice] = {}
+        # static cost-model ranking per tuned shape (costmodel priors):
+        # [(KernelChoice, prior_seconds), ...] cheapest-first, recorded
+        # whenever a timed tune runs — introspection for benches/tests
+        self.priors: Dict[tuple, list] = {}
 
     @property
     def interpret(self) -> bool:
@@ -115,6 +119,7 @@ class KernelRegistry:
         """Drop cached decisions (tests / device topology changes)."""
         self._interpret = None
         self.tuned.clear()
+        self.priors.clear()
 
     def choose(self, family: str, shape_key: tuple,
                override: Optional[KernelChoice] = None,
@@ -144,8 +149,18 @@ class KernelRegistry:
             return default
         choice = default
         if not self.interpret:
+            # static roofline priors (repro.analysis.costmodel) rank the
+            # candidates before any timing runs: timing walks the list
+            # cheapest-prior-first and candidates the model proves
+            # infeasible (staged tiles over the VMEM budget) are skipped
+            # outright — unless the model rejects everything, in which
+            # case the ranking is advisory only and all are timed
+            ranked = self._ranked(family, shape_key, candidates)
+            skip_inf = any(p != float("inf") for _, p in ranked)
             best_t = float("inf")
-            for cand in candidates:
+            for cand, prior in ranked:
+                if skip_inf and prior == float("inf"):
+                    continue
                 try:
                     t = timer(cand)
                 except Exception:  # noqa: BLE001 — an invalid candidate
@@ -154,6 +169,18 @@ class KernelRegistry:
                     best_t, choice = t, cand
         self.tuned[key] = choice
         return choice
+
+    def _ranked(self, family: str, shape_key: tuple, candidates):
+        """Candidates sorted by static prior (recorded in ``priors``);
+        declared order on any cost-model failure."""
+        key = (family,) + shape_key
+        try:
+            from repro.analysis.costmodel import rank_kernel_candidates
+            ranked = rank_kernel_candidates(family, shape_key, candidates)
+        except Exception:  # noqa: BLE001 — priors must never block tuning
+            ranked = [(c, float("inf")) for c in candidates]
+        self.priors[key] = ranked
+        return ranked
 
 
 registry = KernelRegistry()

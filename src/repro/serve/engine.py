@@ -110,6 +110,46 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
+def clamp_prefill_chunk(chunk: int, max_len: int) -> int:
+    """Engine-effective prefill chunk: a power of two no larger than half
+    the (pow2-rounded) context.  Pure — the static analyzer re-derives
+    the compile budget from recorded configs with this exact function."""
+    return min(_next_pow2(chunk), _next_pow2(max_len) >> 1 or 1)
+
+
+def prefill_schedule(prompt_len: int, *, chunk: int, max_len: int,
+                     bucketed: bool, start: int = 0) -> List[Tuple[int, int]]:
+    """(start, width) chunks covering [start, prompt_len).  Full chunks
+    are exact; for cursor-guarded (bucketed) families the final partial
+    chunk is padded to a power-of-two bucket and, near max_len,
+    left-shifted over already-written positions (rewrites are
+    idempotent).  Pure function of the config — both the engine and
+    ``repro.analysis.serve_static``'s retrace-budget proof call it, so
+    the proof enumerates exactly what the engine will trace."""
+    out: List[Tuple[int, int]] = []
+    pos = start
+    while pos < prompt_len:
+        take = min(chunk, prompt_len - pos)
+        if bucketed:
+            cb = _next_pow2(take)
+            s = max(0, min(pos, max_len - cb))
+        else:
+            cb, s = take, pos
+        out.append((s, cb))
+        pos += take
+    return out
+
+
+def decode_table_width(longest: int, *, page_size: int,
+                       pages_per_slot: int) -> int:
+    """Bucketed block-table width for a decode tick whose longest active
+    row holds ``longest`` positions (read + the written KV row), rounded
+    up to a power of two.  Pure — shared with the static analyzer's
+    decode-bucket enumeration."""
+    need = -(-longest // page_size)
+    return min(pages_per_slot, _next_pow2(max(need, 1)))
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def _jit_pool_page_copy(k_pool, v_pool, old, new):
     """Copy physical page ``old`` -> ``new`` in the stacked
@@ -128,8 +168,8 @@ class Engine:
         self.api = api
         self.params = params
         self.cfg = dataclasses.replace(
-            cfg, prefill_chunk=min(_next_pow2(cfg.prefill_chunk),
-                                   _next_pow2(cfg.max_len) >> 1 or 1))
+            cfg, prefill_chunk=clamp_prefill_chunk(cfg.prefill_chunk,
+                                                   cfg.max_len))
         fam = api.cfg.family
         self.paged = cfg.allocator == "paged" and fam in _PAGEABLE_FAMILIES
         if cfg.allocator == "paged" and not self.paged:
@@ -189,7 +229,9 @@ class Engine:
         self.counters: Dict[str, int] = {
             "prefix_hit_tokens": 0, "prefix_hit_requests": 0,
             "forked_pages": 0, "prefill_tokens": 0,
-            "generated_tokens": 0, "finished_requests": 0}
+            "generated_tokens": 0, "finished_requests": 0,
+            "table_uploads": 0, "table_uploads_decode": 0,
+            "table_uploads_prefill": 0, "decode_ticks": 0}
         self._arrival = 0
         self._admission_backoff = False
         self._key = jax.random.PRNGKey(seed)
@@ -198,10 +240,22 @@ class Engine:
             log.info("engine decode %s [max_batch=%d max_len=%d alloc=%s]",
                      self.decode_plan.trace_line(), cfg.max_batch,
                      cfg.max_len, "paged" if self.paged else "contiguous")
-        self._jit_decode = jax.jit(self._decode_step)
-        self._jit_prefill_chunk = jax.jit(self._prefill_chunk)
+        # trace-counting wrappers: the wrapped python body runs only while
+        # jax traces a NEW input signature, so these counters are live
+        # compile counts — checked against the proven retrace budget
+        # (repro.analysis.serve_static; measured > proven = soundness bug)
+        self._decode_traces = 0
+        self._prefill_traces = 0
+        self._jit_decode = jax.jit(
+            self._trace_counted(self._decode_step, "_decode_traces"))
+        self._jit_prefill_chunk = jax.jit(
+            self._trace_counted(self._prefill_chunk, "_prefill_traces"))
         self._prefill_buckets: set = set()   # chunk widths handed to jit
         self._decode_table_buckets: set = set()  # high-water table widths
+        # host block tables (alloc.block_tables) are authoritative; the
+        # device mirror refreshes lazily in ONE batched upload per tick
+        self._tables_dirty = False
+        self._retrace_budget_cache: Optional[Dict[str, Any]] = None
 
     # ---- planning / introspection ----
     @property
@@ -218,6 +272,8 @@ class Engine:
         pressure), plus throughput/compile accounting."""
         s = dict(self.counters)
         s["prefill_compiles"] = self.prefill_compiles
+        s["decode_compiles"] = self.decode_compiles
+        s["retrace_budget"] = self.retrace_budget()
         s["scheduler"] = getattr(self.scheduler, "name",
                                  type(self.scheduler).__name__)
         if self.prefix is not None:
@@ -285,7 +341,52 @@ class Engine:
                 return n
         except Exception:  # noqa: BLE001 — private jit API; fall back
             pass
-        return len(self._prefill_buckets)
+        return max(len(self._prefill_buckets), self._prefill_traces)
+
+    @property
+    def decode_compiles(self) -> int:
+        """Number of distinct decode traces (== compiles).  Bounded by
+        the clamped block-table width buckets (log2(pages_per_slot)+1)
+        under paging, 1 for contiguous slots."""
+        try:
+            n = self._jit_decode._cache_size()
+            if n:
+                return n
+        except Exception:  # noqa: BLE001 — private jit API; fall back
+            pass
+        return self._decode_traces
+
+    def _trace_counted(self, fn, attr: str):
+        """Wrap a step function so jit tracing bumps ``self.<attr>`` —
+        the wrapper body only runs on a cache miss, making the counter a
+        live compile count."""
+        @functools.wraps(fn)
+        def counted(*args):
+            setattr(self, attr, getattr(self, attr) + 1)
+            return fn(*args)
+        return counted
+
+    def retrace_budget(self) -> Dict[str, Any]:
+        """Proven compile budget for this engine's config, as derived by
+        the static analyzer (``repro.analysis.serve_static``).  The live
+        ``prefill_compiles`` / ``decode_compiles`` counters must never
+        exceed the proven counts."""
+        if self._retrace_budget_cache is None:
+            from repro.analysis.serve_static import retrace_budget
+
+            b = retrace_budget(
+                bucketed=self._bucketed, paged=self.paged,
+                max_len=self.cfg.max_len,
+                prefill_chunk=self.cfg.prefill_chunk,
+                page_size=self.cfg.page_size,
+                pages_per_slot=(self.alloc.pages_per_slot
+                                if self.paged else None),
+                prefix_cache=self.prefix is not None)
+            self._retrace_budget_cache = {
+                "prefill_proven": b["prefill"]["proven"],
+                "decode_proven": b["decode"]["proven"],
+                "within_declared": b["within_budget"]}
+        return dict(self._retrace_budget_cache)
 
     # ---- jitted kernels ----
     def _select(self, logits, key):
@@ -376,19 +477,9 @@ class Engine:
         left shift below it lands on shared pages, which admission forks
         first: DESIGN.md §11).  ``start > 0`` requires cached KV rows at
         [0, start) — the prefix credit."""
-        chunk = self.cfg.prefill_chunk
-        out: List[Tuple[int, int]] = []
-        pos = start
-        while pos < prompt_len:
-            take = min(chunk, prompt_len - pos)
-            if self._bucketed:
-                cb = _next_pow2(take)
-                start = max(0, min(pos, self.cfg.max_len - cb))
-            else:
-                cb, start = take, pos
-            out.append((start, cb))
-            pos += take
-        return out
+        return prefill_schedule(prompt_len, chunk=self.cfg.prefill_chunk,
+                                max_len=self.cfg.max_len,
+                                bucketed=self._bucketed, start=start)
 
     def _prefill_extent(self, prompt_len: int) -> int:
         return max((s + c for s, c in self._prefill_schedule(prompt_len)),
@@ -396,21 +487,24 @@ class Engine:
 
     def _ensure_pages(self, slot: int, length: int) -> bool:
         """Grow the slot's block table to cover ``length`` positions and
-        mirror the table row into device state.  False: pool exhausted."""
+        mark the device mirror stale (the next ``_flush_tables`` pushes
+        all dirty rows in one upload).  False: pool exhausted."""
         grew = self.alloc.ensure(slot, length)
         if grew is None:
             return False
         if grew:
-            self._mirror_table(slot)
+            self._mark_tables_dirty()
         return True
 
     def _prefill(self, slot: int, req: Request, schedule) -> int:
         """Single-row chunked prefill of ``req`` into ``slot``.  Returns
         the first generated token."""
-        prompt = np.asarray(req.prompt, np.int32)
+        prompt = np.asarray(req.prompt, np.int32)  # sync: host — the prompt is host-resident numpy, nothing crosses the link
         L = len(prompt)
-        # admission pre-reserved pages for the full write extent, so the
-        # view's block-table row is already final for every chunk
+        # admission pre-reserved pages for the full write extent — push
+        # the batched table mirror BEFORE taking the view, so the view's
+        # block-table row is final for every chunk
+        self._flush_tables("prefill")
         view = self._slot_view(slot)
         nxt = None
         for i, (start, cb) in enumerate(schedule):
@@ -423,7 +517,11 @@ class Engine:
             self._prefill_buckets.add(cb)
             self._key, sub = jax.random.split(self._key)
             nxt, view = self._jit_prefill_chunk(
-                self.params, jnp.asarray(toks), view, jnp.int32(last), sub)
+                self.params,
+                jnp.asarray(toks),   # sync: required — prompt-chunk upload (admission-rate, not per-tick)
+                view,
+                jnp.int32(last),     # sync: eliminable — scalar cursor upload; could ride inside the token buffer
+                sub)
             if self.paged:
                 # the view's pools are now the freshest — keep the full
                 # states' pool in sync so later table growth edits stick
@@ -433,7 +531,7 @@ class Engine:
         if self._bucketed:
             view = self._set_view_cursor(view, L)
         self._merge_view(slot, view)
-        return int(nxt)
+        return int(nxt)  # sync: required — prefill's first token feeds host-side finish/stream logic
 
     # ---- public API ----
     def submit(self, req: Request):
@@ -495,26 +593,50 @@ class Engine:
         pool-sized array per fork; page ids are traced scalars, so every
         fork reuses one trace."""
         kv = self.states.kv
-        k, v = _jit_pool_page_copy(kv.k, kv.v, jnp.int32(old),
-                                   jnp.int32(new))
+        k, v = _jit_pool_page_copy(
+            kv.k, kv.v,
+            jnp.int32(old), jnp.int32(new))  # sync: required — page-id scalars for the donated CoW copy (fork-rate, not per-tick)
         self.states = self.states._replace(kv=kv._replace(k=k, v=v))
 
-    def _mirror_table(self, slot: int):
-        """Push the slot's host block-table row into device state."""
-        row = jnp.asarray(self.alloc.block_tables[slot])
+    def _mark_tables_dirty(self):
+        """Flag the device block-table mirror stale.  The host tables
+        (``alloc.block_tables``; zeroed rows included — ``release()``
+        clears a slot's row) are authoritative, so any number of host
+        edits collapse into ONE batched upload at the next
+        ``_flush_tables``, replacing the old per-slot
+        ``jnp.asarray(block_tables[slot])`` upload loop."""
+        self._tables_dirty = True
+
+    def _flush_tables(self, where: str = "decode"):
+        """Mirror the full host block-table array into device state in a
+        single batched host->device transfer.  Called once before every
+        decode tick and before each prefill reads a slot view — never
+        per slot, so a tick's table traffic is at most one upload no
+        matter how many slots grew, forked, or were scrubbed."""
+        if not (self.paged and self._tables_dirty):
+            return
+        rows = jnp.asarray(  # sync: required — the tick's one batched h2d block-table upload
+            self.alloc.block_tables)
         kv = self.states.kv
         self.states = self.states._replace(kv=kv._replace(
-            block_tables=kv.block_tables.at[:, slot].set(row)))
+            block_tables=jnp.broadcast_to(rows[None],
+                                          kv.block_tables.shape)))
+        self._tables_dirty = False
+        self.counters["table_uploads"] += 1
+        self.counters[f"table_uploads_{where}"] += 1
 
     def _scrub_slot_device(self, slot: int):
-        """Zero the slot's device table/cursor row: an inactive row keeps
-        flowing through the static-shape decode step, and its garbage
-        scatter must land on the trash page — never on pages the row's
-        previous mapping pointed at (they may be cached/reallocated)."""
+        """Retire an inactive slot's device row: the row keeps flowing
+        through the static-shape decode step, and its garbage scatter
+        must land on the trash page — never on pages the row's previous
+        mapping pointed at (they may be cached/reallocated).  The host
+        table row is already zeroed (``alloc.release``), so the table
+        half rides the next batched flush; only the cursor is zeroed
+        eagerly (a device-side edit, no transfer)."""
         kv = self.states.kv
         self.states = self.states._replace(kv=kv._replace(
-            block_tables=kv.block_tables.at[:, slot].set(0),
             length=kv.length.at[:, slot].set(0)))
+        self._mark_tables_dirty()
 
     def _stage_slot(self, slot: int, req: Request, credit: int,
                     pages: List[int]) -> Optional[List[Tuple[int, int]]]:
@@ -526,6 +648,7 @@ class Engine:
         backs off or retries uncached)."""
         if credit:
             self.alloc.map_shared(slot, pages)
+            self._mark_tables_dirty()
         schedule = self._prefill_schedule(len(req.prompt), start=credit)
         # cover the prefill write extent AND the first decode tick's
         # KV row (the slot decodes this very tick, before the next
@@ -552,6 +675,7 @@ class Engine:
                     if fork is None:
                         return None
                     self._copy_page(*fork)
+                    self._mark_tables_dirty()
                     self.counters["forked_pages"] += 1
                     log.debug("CoW fork: slot %d logical page %d "
                               "(%d -> %d)", slot, lp, *fork)
@@ -559,7 +683,7 @@ class Engine:
 
     def _append_token(self, req: Request, tok: int):
         """Record a generated token and fire the streaming callback."""
-        tok = int(tok)
+        tok = int(tok)  # sync: host — tok is already a host-side numpy scalar here
         req.output.append(tok)
         self.counters["generated_tokens"] += 1
         if req.on_token is not None:
@@ -613,7 +737,7 @@ class Engine:
             # uncached suffix (device table row = shared + fresh + forks)
             self.states = _reset_slot(self.states, slot)
             if self.paged:
-                self._mirror_table(slot)
+                self._mark_tables_dirty()
             # the schedule the fork analysis covered — prefill exactly it
             nxt = self._prefill(slot, req, schedule)
             self.alloc.slots[slot].length = len(req.prompt)
@@ -645,8 +769,8 @@ class Engine:
             rows = self.alloc.slots[slot].length
             toks = np.concatenate([
                 req.prompt,
-                np.asarray(req.output[:max(0, rows - len(req.prompt))],
-                           np.int32)])
+                np.asarray(  # sync: host — output tokens are host-side python ints
+                    req.output[:max(0, rows - len(req.prompt))], np.int32)])
             self.prefix.insert(toks[:rows], self.alloc.held(slot))
         self.alloc.release(slot)
         if self.paged:
@@ -681,12 +805,16 @@ class Engine:
         for slot, req in self.active.items():
             last[slot, 0] = req.output[-1]
         self._key, sub = jax.random.split(self._key)
-        # clamp the decode tick's block-table width to the bucketed batch
+        # the tick's ONE batched block-table upload (replaces the old
+        # per-slot jnp.asarray loop over grown slots), then clamp the
+        # decode tick's block-table width to the bucketed batch
         # high-water page count: attention (gather or paged kernel) then
         # only walks pages some active row can actually hold, instead of
         # the full pool-capacity table.  Power-of-two buckets bound the
         # decode retraces by log2(pages_per_slot); tables are restored
         # afterwards (the decode step never rewrites them).
+        self._flush_tables("decode")
+        last_dev = jnp.asarray(last)  # sync: required — the tick's last-token batch upload
         states_in, full_tables = self.states, None
         if self.paged:
             hw = self._decode_table_width()
@@ -696,15 +824,16 @@ class Engine:
                 kv=kv._replace(block_tables=full_tables[:, :, :hw]))
             if hw not in self._decode_table_buckets:
                 self._decode_table_buckets.add(hw)
-                self._tune_decode_bucket(jnp.asarray(last), states_in, sub)
-        nxt, new_states = self._jit_decode(self.params, jnp.asarray(last),
+                self._tune_decode_bucket(last_dev, states_in, sub)
+        nxt, new_states = self._jit_decode(self.params, last_dev,
                                            states_in, sub)
         if full_tables is not None:
             kv = new_states.kv
             new_states = new_states._replace(
                 kv=kv._replace(block_tables=full_tables))
         self.states = new_states
-        nxt = np.asarray(nxt)
+        self.counters["decode_ticks"] += 1
+        nxt = np.asarray(nxt)  # sync: required — the tick's one d2h readback (next tokens drive host finish logic)
         for slot in list(self.active):
             req = self.active[slot]
             self._append_token(req, nxt[slot])
@@ -733,8 +862,8 @@ class Engine:
         block table any row needs for this tick's read + one written KV
         row, rounded up to a power of two (bounds decode retraces)."""
         longest = max(self.alloc.slots[s].length for s in self.active) + 1
-        need = -(-longest // self.cfg.page_size)
-        return min(self.alloc.pages_per_slot, _next_pow2(max(need, 1)))
+        return decode_table_width(longest, page_size=self.cfg.page_size,
+                                  pages_per_slot=self.alloc.pages_per_slot)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []

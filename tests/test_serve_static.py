@@ -1,0 +1,467 @@
+"""Serve-path static analysis (repro.analysis.serve_static, DESIGN.md §13).
+
+Covers the three analyzer passes and the engine changes they audit:
+
+* retrace-budget enumeration soundness — a live serve run (paged AND
+  contiguous) never compiles more prefill/decode traces than the
+  analyzer proved reachable, and the bucketed enumeration matches the
+  closed-form pow2 sets;
+* the deliberately-unbucketed regression fixture (rwkv / ssm family)
+  is rejected: proven compile set exceeds the declared budget, API and
+  CLI both fail;
+* host-sync inventory stability — every tick-path sync site is tagged,
+  the per-tick transfer contract holds, the batched block-table flush
+  is the only table upload, and LANE004 enforces the tags;
+* costmodel unit checks against jax's own lowered cost_analysis where
+  the backend provides one, plus gather byte accounting and kernel
+  candidate priors;
+* the S1 batched-upload change: at most one block-table upload per
+  decode tick, greedy parity preserved against the sequential oracle.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# retrace-budget enumeration (pure)
+# ---------------------------------------------------------------------------
+
+def test_prefill_bucket_enumeration_closed_form():
+    from repro.analysis.serve_static import enumerate_prefill_buckets
+
+    # bucketed: every reachable width is a pow2 <= chunk — exactly the
+    # {1, 2, ..., chunk} set the engine's bucket design promises
+    widths = enumerate_prefill_buckets(max_len=64, prefill_chunk=8,
+                                       bucketed=True, page_size=8,
+                                       prefix_cache=True)
+    assert widths == [1, 2, 4, 8]
+
+
+def test_prefill_enumeration_unbucketed_exceeds_declared():
+    from repro.analysis.serve_static import (enumerate_prefill_buckets,
+                                             retrace_budget)
+
+    widths = enumerate_prefill_buckets(max_len=64, prefill_chunk=8,
+                                       bucketed=False)
+    assert widths == list(range(1, 9))      # every partial width traces
+    b = retrace_budget(bucketed=False, paged=False, max_len=64,
+                       prefill_chunk=8, prefix_cache=False)
+    assert b["prefill"]["proven"] == 8 > b["prefill"]["declared"] == 4
+    assert not b["within_budget"]
+
+
+def test_decode_bucket_enumeration_closed_form():
+    from repro.analysis.serve_static import enumerate_decode_buckets
+
+    assert enumerate_decode_buckets(max_len=64, page_size=8,
+                                    pages_per_slot=8) == [1, 2, 4, 8]
+    # non-pow2 pages_per_slot: the clamp caps the top bucket
+    assert enumerate_decode_buckets(max_len=48, page_size=8,
+                                    pages_per_slot=6) == [1, 2, 4, 6]
+
+
+def test_retrace_budget_within_for_bucketed_paged():
+    from repro.analysis.serve_static import retrace_budget
+
+    b = retrace_budget(bucketed=True, paged=True, max_len=64,
+                       prefill_chunk=8, page_size=8, pages_per_slot=8,
+                       prefix_cache=True)
+    assert b["within_budget"]
+    assert b["proven_total"] == 4 + 4 + 1   # prefill + decode + pool copy
+    assert b["proven_total"] <= b["declared_total"]
+
+
+def test_schedule_helpers_match_engine_methods(serve_model):
+    """The module-level pure functions ARE what the engine runs — the
+    proof enumerates the engine's actual behavior, not a model of it."""
+    from repro.serve.engine import (Engine, EngineConfig, decode_table_width,
+                                    prefill_schedule)
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    for plen in (1, 7, 8, 9, 30, 63):
+        assert eng._prefill_schedule(plen) == prefill_schedule(
+            plen, chunk=eng.cfg.prefill_chunk, max_len=eng.cfg.max_len,
+            bucketed=eng._bucketed)
+    for longest in (1, 8, 9, 17, 64):
+        assert decode_table_width(
+            longest, page_size=8,
+            pages_per_slot=eng.alloc.pages_per_slot) <= eng.alloc.pages_per_slot
+
+
+# ---------------------------------------------------------------------------
+# live soundness: measured compiles <= proven, both allocators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("allocator", ["paged", "contiguous"])
+def test_signature_enumeration_soundness_live(serve_model, allocator):
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(allocator=allocator, max_batch=4,
+                                           max_len=64, page_size=8,
+                                           prefill_chunk=8))
+    rng = np.random.default_rng(0)
+    # distinct prompt lengths across every bucket, incl. a long one that
+    # walks the decode table through several width buckets
+    for i, plen in enumerate((1, 3, 8, 17, 40)):
+        eng.submit(Request(i, rng.integers(1, 127, plen).astype(np.int32),
+                           max_new_tokens=10))
+    eng.run_to_completion()
+    s = eng.stats()
+    budget = s["retrace_budget"]
+    assert budget["within_declared"]
+    # THE soundness property: live compile counters never exceed proven
+    assert s["prefill_compiles"] <= budget["prefill_proven"]
+    assert s["decode_compiles"] <= budget["decode_proven"]
+    if allocator == "contiguous":
+        assert s["decode_compiles"] == 1
+
+
+def test_decode_compiles_counts_table_buckets(serve_model):
+    """A workload crossing table-width buckets retraces decode once per
+    bucket — and the counter sees every one."""
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    rng = np.random.default_rng(1)
+    eng.submit(Request(0, rng.integers(1, 127, 3).astype(np.int32),
+                       max_new_tokens=30))
+    eng.run_to_completion()
+    assert eng.decode_compiles == len(eng._decode_table_buckets)
+    assert eng.decode_compiles >= 2        # 3+30 tokens cross 8 and 16+
+
+
+# ---------------------------------------------------------------------------
+# analyzer end-to-end + unbucketed rejection + bench cross-check
+# ---------------------------------------------------------------------------
+
+def test_analyze_serve_end_to_end(tmp_path):
+    from repro.analysis.serve_static import analyze_serve
+
+    doc = analyze_serve(
+        "smollm-135m",
+        reduced=dict(num_layers=2, d_model=32, d_ff=64, vocab_size=128),
+        engine_kw=dict(max_batch=2, max_len=32, page_size=8,
+                       prefill_chunk=8))
+    assert doc["ok"]
+    for alloc in ("paged", "contiguous"):
+        arm = doc["allocators"][alloc]
+        assert arm["retrace"]["within_budget"]
+        assert arm["signatures"]["verified"]
+        # no host callback hides inside the jitted steps
+        assert arm["roofline"]["jit_host_callbacks"] == 0
+        # every signature got a roofline entry
+        assert len(arm["roofline"]["decode"]["per_bucket"]) == \
+            arm["retrace"]["decode"]["proven"]
+    assert doc["sync_audit"]["ok"]
+    (tmp_path / "a.json").write_text(json.dumps(doc))   # JSON-serializable
+
+
+def test_analyzer_rejects_unbucketed_family():
+    """rwkv (ssm family) prefills exact-width chunks: its compile set
+    grows with prompt-length diversity and MUST fail the budget proof."""
+    from repro.analysis.serve_static import analyze_serve
+
+    doc = analyze_serve("rwkv6-7b", reduced={},
+                        engine_kw=dict(max_batch=2, max_len=32,
+                                       page_size=8, prefill_chunk=8))
+    assert not doc["ok"]
+    for arm in doc["allocators"].values():
+        assert not arm["retrace"]["within_budget"]
+        assert (arm["retrace"]["prefill"]["proven"]
+                > arm["retrace"]["prefill"]["declared"])
+
+
+def test_cli_smoke_and_unbucketed_exit_codes(tmp_path):
+    from repro.analysis import serve as cli
+
+    out = tmp_path / "ANALYSIS_serve.json"
+    rc = cli.main(["--config", "smollm-135m", "--reduced",
+                   "--max-batch", "2", "--max-len", "32",
+                   "--page-size", "8", "--prefill-chunk", "8",
+                   "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] and doc["schema"] == 1
+
+    rc = cli.main(["--config", "rwkv6-7b", "--reduced",
+                   "--max-batch", "2", "--max-len", "32",
+                   "--page-size", "8", "--prefill-chunk", "8",
+                   "--out", str(tmp_path / "rejected.json")])
+    assert rc == 1
+
+
+def test_cross_check_bench_soundness_direction():
+    from repro.analysis.serve_static import cross_check_bench
+
+    engine = {"family": "dense", "allocator": "paged", "bucketed": True,
+              "max_batch": 4, "max_len": 64, "page_size": 8,
+              "prefill_chunk": 8, "pages_per_slot": 8,
+              "prefix_cache": True}
+    ok_doc = {"paged": {"engine": engine, "prefill_compiles": 3,
+                        "decode_compiles": 4}}
+    assert cross_check_bench(ok_doc)["ok"]
+    # measured above proven is a SOUNDNESS BUG, loudly reported
+    bad_doc = {"paged": {"engine": engine, "prefill_compiles": 99,
+                         "decode_compiles": 4}}
+    res = cross_check_bench(bad_doc)
+    assert not res["ok"]
+    assert any("SOUNDNESS BUG" in f
+               for f in res["arms"]["paged"]["failures"])
+
+
+# ---------------------------------------------------------------------------
+# host-sync audit + LANE004
+# ---------------------------------------------------------------------------
+
+def test_sync_inventory_stable():
+    """The tick path's sync inventory is pinned: adding a sync (or
+    dropping a tag) changes this set and must be a conscious edit."""
+    from repro.analysis.serve_static import audit_engine_file
+
+    audit = audit_engine_file()
+    assert audit["ok"]
+    assert audit["unallowlisted"] == []
+    got = {(s["func"], s["api"], s["kind"], s["cls"])
+           for s in audit["sites"]}
+    assert got == {
+        ("_prefill", "np.asarray", "d2h", "host"),
+        ("_prefill", "jnp.asarray", "h2d", "required"),
+        ("_prefill", "jnp.int32", "h2d", "eliminable"),
+        ("_prefill", "int()", "d2h", "required"),
+        ("_copy_page", "jnp.int32", "h2d", "required"),
+        ("_flush_tables", "jnp.asarray", "h2d", "required"),
+        ("_append_token", "int()", "d2h", "host"),
+        ("_finish", "np.asarray", "d2h", "host"),
+        ("step", "jnp.asarray", "h2d", "required"),
+        ("step", "np.asarray", "d2h", "required"),
+    }
+    # per-tick contract: one batched table flush + one token upload in,
+    # one token readback out
+    assert audit["per_tick"] == {"h2d": 2, "d2h": 1}
+    assert audit["block_table_uploads_per_tick"]["after"] == 1
+
+
+def test_lane004_flags_untagged_and_accepts_tagged():
+    from repro.analysis.lint import lint_source
+
+    untagged = (
+        "import numpy as np\n"
+        "class Engine:\n"
+        "    def step(self):\n"
+        "        nxt = np.asarray(self.decode())\n"
+        "    def decode(self):\n"
+        "        return 0\n")
+    vs = lint_source(untagged, path="src/repro/serve/engine.py")
+    assert any(v.rule == "LANE004" for v in vs)
+    # same source under a different path: rule does not apply
+    assert not lint_source(untagged, path="src/repro/serve/other.py")
+
+    tagged = untagged.replace(
+        "np.asarray(self.decode())",
+        "np.asarray(self.decode())  # sync: required — readback")
+    assert not lint_source(tagged, path="src/repro/serve/engine.py")
+
+
+def test_repo_engine_is_lane004_clean():
+    import repro.serve.engine as engine_mod
+    from repro.analysis.lint import lint_paths
+
+    assert lint_paths([engine_mod.__file__]) == []
+
+
+def test_tick_path_closure_contains_hot_functions():
+    import ast
+    from pathlib import Path
+
+    import repro.serve.engine as engine_mod
+    from repro.analysis.serve_static import tick_path_functions
+
+    tree = ast.parse(Path(engine_mod.__file__).read_text())
+    funcs = tick_path_functions(tree)
+    # _prefill_chunk/_decode_step run under jax.jit — the closure tracks
+    # eager Python calls only, so the jitted bodies are rightly absent
+    assert {"step", "_admit", "_prefill", "_flush_tables", "_finish",
+            "_copy_page", "_ensure_pages", "_stage_slot"} <= funcs
+    assert "submit" not in funcs           # caller-side, not tick path
+
+
+# ---------------------------------------------------------------------------
+# costmodel units
+# ---------------------------------------------------------------------------
+
+def test_costmodel_matmul_flops_exact():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.costmodel import jaxpr_costs
+
+    m, k, n = 8, 16, 4
+    f = lambda a, b: a @ b                              # noqa: E731
+    args = (jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32))
+    costs = jaxpr_costs(jax.make_jaxpr(f)(*args))
+    assert costs.flops == 2 * m * n * k
+    assert costs.host_callbacks == 0
+
+
+def test_costmodel_matches_jax_cost_analysis():
+    """Where the backend exposes a lowered cost_analysis, our dot FLOPs
+    must agree exactly (same 2·M·N·K convention)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.costmodel import jaxpr_costs
+
+    m, k, n = 8, 16, 4
+    f = lambda a, b: a @ b                              # noqa: E731
+    args = (jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32))
+    try:
+        ca = jax.jit(f).lower(*args).cost_analysis()
+    except Exception:
+        ca = None
+    if isinstance(ca, list):
+        ca = ca[0] if ca else None
+    if not isinstance(ca, dict) or "flops" not in ca:
+        # backend without a cost model: the exact-FLOPs unit test above
+        # still pins the convention
+        return
+    assert jaxpr_costs(jax.make_jaxpr(f)(*args)).flops == ca["flops"]
+
+
+def test_costmodel_gather_charges_moved_bytes_only():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.costmodel import jaxpr_costs
+
+    pool = jax.ShapeDtypeStruct((1024, 64), jnp.float32)   # 256 KiB
+    idx = jnp.asarray(np.arange(4, dtype=np.int32))
+
+    def f(p):
+        return p[idx]                                      # 4 rows out
+
+    costs = jaxpr_costs(jax.make_jaxpr(f)(pool))
+    # moved data (4 rows in+out) + indices — nowhere near the pool size
+    assert costs.hbm_bytes < 1024 * 64 * 4 / 8
+
+
+def test_costmodel_scan_multiplies_by_length():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.costmodel import jaxpr_costs
+
+    def f(xs):
+        return jax.lax.scan(lambda c, x: (c + x * x, c), 0.0, xs)
+
+    c5 = jaxpr_costs(jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((5,), jnp.float32)))
+    c50 = jaxpr_costs(jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((50,), jnp.float32)))
+    assert c50.flops == pytest.approx(10 * c5.flops)
+
+
+def test_costmodel_detects_host_callbacks():
+    import jax
+
+    from repro.analysis.costmodel import jaxpr_costs
+
+    def f(x):
+        jax.debug.print("x={x}", x=x)
+        return x + 1
+
+    assert jaxpr_costs(jax.make_jaxpr(f)(1.0)).host_callbacks == 1
+
+
+def test_kernel_prior_ranks_paged_candidates():
+    from repro.analysis.costmodel import kernel_prior, rank_kernel_candidates
+    from repro.kernels.ops import CANDIDATES, KernelChoice
+
+    shape_key = ("inhibitor", 16, 16, 8, 8, 64)   # fam,pages,ps,h,hkv,d
+    few = KernelChoice(pages_per_step=1)
+    many = KernelChoice(pages_per_step=8)
+    # same bytes + flops either way; fewer grid dispatches must win
+    assert kernel_prior("paged", shape_key, many) < \
+        kernel_prior("paged", shape_key, few)
+    ranked = rank_kernel_candidates("paged", shape_key,
+                                    CANDIDATES["paged"])
+    assert [p for _, p in ranked] == sorted(p for _, p in ranked)
+    # a candidate staging more than the VMEM budget is statically out
+    huge = KernelChoice(pages_per_step=1 << 20)
+    assert kernel_prior("paged", shape_key, huge) == float("inf")
+
+
+def test_registry_times_candidates_in_prior_order(monkeypatch):
+    from repro.kernels.ops import CANDIDATES, registry
+
+    registry.reset()
+    monkeypatch.setattr(registry, "_interpret", False)
+    shape_key = (32, 1024, 8, 8, 64, True, None, False)
+    timed = []
+
+    def timer(choice):
+        timed.append(choice)
+        return 1.0 + len(timed)        # first-timed wins
+
+    try:
+        choice = registry.choose("flash", shape_key, None, timer)
+        priors = list(registry.priors.get(("flash",) + shape_key, []))
+    finally:
+        registry.reset()
+    assert timed, "timer never consulted"
+    # the priors table was recorded and timing followed its order
+    assert timed == [c for c, p in priors
+                     if p != float("inf")] or timed == CANDIDATES["flash"]
+    assert choice == timed[0]
+
+
+# ---------------------------------------------------------------------------
+# S1: batched block-table upload
+# ---------------------------------------------------------------------------
+
+def test_batched_table_upload_per_tick_and_parity(serve_model, greedy_ref):
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=4, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, 127, plen).astype(np.int32)
+               for plen in (3, 11, 26)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=10))
+    done = {r.request_id: r.output for r in eng.run_to_completion()}
+    s = eng.stats()
+    # the S1 contract: at most ONE batched upload per decode tick (and
+    # strictly fewer in steady state — no-growth ticks upload nothing)
+    assert s["table_uploads_decode"] <= s["decode_ticks"]
+    assert s["table_uploads"] > 0
+    for i, p in enumerate(prompts):
+        assert done[i] == greedy_ref(p, 10), f"request {i} diverged"
+
+
+def test_flush_skips_clean_ticks(serve_model):
+    """Steady-state decode (no growth, no admission) re-uploads nothing:
+    the device tables are resident, not re-mirrored per tick."""
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg, api, params = serve_model
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           page_size=8, prefill_chunk=8))
+    rng = np.random.default_rng(3)
+    eng.submit(Request(0, rng.integers(1, 127, 4).astype(np.int32),
+                       max_new_tokens=3))
+    eng.step()                              # admission tick
+    base = eng.stats()["table_uploads"]
+    eng.step()                              # pure decode inside page 1
+    assert eng.stats()["table_uploads"] == base

@@ -36,8 +36,14 @@ METRICS = [
      "serve table uploads/tick", False),
     ("BENCH_serve_decode.json", "gather.tick_us",
      "decode gather tick us", False),
-    ("BENCH_serve_decode.json", "kernel.tick_us",
+    ("BENCH_serve_decode.json", "_kernel_tick_us",
      "decode kernel tick us", False),
+    ("BENCH_serve_sustained.json", "arms.paged.full.tok_per_s",
+     "sustained paged full-batch tok/s", True),
+    ("BENCH_serve_sustained.json", "arms.contiguous.full.tok_per_s",
+     "sustained contiguous full-batch tok/s", True),
+    ("BENCH_serve_sustained.json", "scaling.paged",
+     "sustained paged batch scaling", True),
     ("BENCH_serve_prefix.json", "arms.cache_on.tok_per_s",
      "prefix cache-on tok/s", True),
     ("BENCH_serve_prefix.json", "arms.cache_on.prefill_compiles",
@@ -76,6 +82,13 @@ def _lookup(doc, path):
         arm = doc["arms"]["cache_on"]
         total = arm["prefix_hit_tokens"] + arm["prefill_tokens"]
         return arm["prefix_hit_tokens"] / total if total else 0.0
+    if path == "_kernel_tick_us":
+        # interpret-mode Pallas timings (hosts with no native lowering
+        # for the paged family) are not comparable wall times — skip the
+        # row rather than annotate a meaningless "regression"
+        if doc["kernel"].get("interpret"):
+            raise ValueError("interpret-mode timing, not comparable")
+        return doc["kernel"]["tick_us"]
     cur = doc
     for key in path.split("."):
         cur = cur[key]

@@ -97,7 +97,11 @@ _DATA_MOVEMENT = frozenset({
 })
 
 #: gather/scatter family: charge moved slices + index bytes, never the
-#: full operand (a paged-KV gather does not read the whole pool)
+#: full operand (a paged-KV gather does not read the whole pool).  This
+#: is what makes the whole-model fused page gather (DESIGN.md §14) win
+#: *statically*: one all-layer gather charges the table's index bytes
+#: once where the per-layer path charged them num_layers times — the
+#: drop ANALYSIS_serve.json's decode roofline gates on.
 _GATHER_LIKE = frozenset({"gather", "dynamic_slice"})
 _SCATTER_LIKE = frozenset({
     "scatter", "scatter-add", "scatter_add", "scatter-mul",

@@ -487,6 +487,11 @@ def engine_desc(engine) -> Dict[str, Any]:
         "pages_per_slot": (engine.alloc.pages_per_slot
                            if engine.paged else None),
         "prefix_cache": engine.prefix is not None,
+        # warmup="decode" pre-traces the proven ladder at construction,
+        # so measured decode_compiles == the proven bound up front (the
+        # cross-check budget itself is warmup-independent: warming adds
+        # no signatures beyond the enumeration)
+        "warmup": engine.cfg.warmup,
     }
 
 

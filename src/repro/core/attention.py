@@ -90,6 +90,12 @@ class PagedKVCache(NamedTuple):
     core.mechanism).  Physical page 0 is the trash page — unmapped table
     entries point there, so inactive batch rows in a static-shape decode
     step scatter harmlessly.
+
+    Layer-stacked decode states broadcast ONE table over the leading
+    layer axis (``block_tables[0]`` is authoritative for every layer),
+    which is what lets models/transformer.lm_step hoist a single
+    whole-model page gather out of the layer scan instead of walking the
+    table per layer (DESIGN.md §14).
     """
     k: jax.Array            # (num_pages, page_size, h_kv, d) pool
     v: jax.Array            # (num_pages, page_size, h_kv, d) pool

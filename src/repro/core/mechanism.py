@@ -286,6 +286,27 @@ def backend_eligible(backend: str, cfg, shapes: AttnShapes,
     return True, ""
 
 
+def kernel_family(mechanism: str) -> str:
+    """Registry kernel family that implements ``mechanism``'s Pallas
+    path (the key into ``kernels.ops.NATIVE_PLATFORMS`` / autotune
+    candidates): the inhibitor variants share the "inhibitor" family,
+    every dot-product mechanism the "flash" family."""
+    return ("inhibitor" if mechanism in ("inhibitor", "inhibitor_unsigned")
+            else "flash")
+
+
+def kernel_native(family: str, platform: str) -> bool:
+    """True when ``family``'s Pallas body lowers natively on
+    ``platform`` (the kernel module's own ``LOWERS_ON`` declaration, via
+    ``kernels.ops.NATIVE_PLATFORMS``).  The planner keys every kernel
+    preference on this instead of hard-coding ``== "tpu"``: anywhere a
+    family is non-native the kernel would run interpret-mode Pallas —
+    orders of magnitude slower than the XLA gather/blocked paths — so it
+    must never be *preferred*, only reachable by forcing the backend."""
+    from repro.kernels.ops import NATIVE_PLATFORMS
+    return platform in NATIVE_PLATFORMS.get(family, ("tpu",))
+
+
 _traced_plans: set = set()
 _use_kernel_warned = False
 _kind_warned = False
@@ -373,10 +394,12 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
         # the XLA paths), which no legacy config ever did intentionally;
         # force an explicit backend="pallas" to get interpret mode
         ok, why = backend_eligible("pallas", cfg, shapes, mech)
-        if ok and shapes.resolved_platform != "tpu":
+        if ok and not kernel_native(kernel_family(name),
+                                    shapes.resolved_platform):
             ok, why = False, (f"host platform is "
-                              f"{shapes.resolved_platform!r}, kernel would "
-                              f"run in interpret mode")
+                              f"{shapes.resolved_platform!r}, no native "
+                              f"lowering — kernel would run in interpret "
+                              f"mode")
         if ok:
             plan = ExecutionPlan(name, "pallas",
                                  "forced by config (use_kernel shim)")
@@ -400,27 +423,32 @@ def plan_attention(cfg, shapes: AttnShapes) -> ExecutionPlan:
     blocked_at = getattr(cfg, "blocked_threshold", DEFAULT_BLOCKED_THRESHOLD)
     chunked_at = getattr(cfg, "chunked_threshold", DEFAULT_CHUNKED_THRESHOLD)
 
-    if (shapes.resolved_platform == "tpu" and eligible("paged_pallas")):
+    if (kernel_native("paged", shapes.resolved_platform)
+            and eligible("paged_pallas")):
         plan = ExecutionPlan(
             name, "paged_pallas",
-            shim_note + "paged KV pool on TPU, single-query decode "
-            "(block-table-native kernel)")
+            shim_note + f"paged KV pool, single-query decode "
+            f"(block-table-native kernel lowers natively on "
+            f"{shapes.resolved_platform!r})")
     elif eligible("paged"):
         if getattr(shapes, "paged", False) and shapes.n_q != 1:
             why = f"chunked prefill n_q={shapes.n_q}"
         else:
-            why = f"host platform {shapes.resolved_platform!r}"
+            why = (f"no native paged-kernel lowering on "
+                   f"{shapes.resolved_platform!r}; interpret-mode Pallas "
+                   f"never outranks the gather")
         plan = ExecutionPlan(
             name, "paged",
             shim_note + f"paged KV pool (block-table gather: {why})")
     elif eligible("int"):
         plan = ExecutionPlan(name, "int", shim_note + "integer-lane inputs")
-    elif (shapes.resolved_platform == "tpu" and total >= blocked_at
-            and eligible("pallas")):
+    elif (kernel_native(kernel_family(name), shapes.resolved_platform)
+            and total >= blocked_at and eligible("pallas")):
         plan = ExecutionPlan(
             name, "pallas",
-            shim_note + f"TPU, structural mask, n_q*n_k={total} >= "
-            f"blocked_threshold={blocked_at}")
+            shim_note + f"native pallas lowering on "
+            f"{shapes.resolved_platform!r}, structural mask, "
+            f"n_q*n_k={total} >= blocked_threshold={blocked_at}")
     elif total >= blocked_at and eligible("blocked"):
         plan = ExecutionPlan(
             name, "blocked",

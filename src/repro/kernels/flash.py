@@ -25,6 +25,12 @@ DEFAULT_BLOCK_Q = 64
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
+#: Native-lowering platforms (see kernels.paged.LOWERS_ON): the launch
+#: path shared with :mod:`repro.kernels.inhibitor` allocates
+#: ``pltpu.VMEM`` scratch and uses scalar-prefetch cursors, so GPU
+#: execution today is interpret-mode only.
+LOWERS_ON = ("tpu",)
+
 
 def _flash_attention_kernel(
     # refs: [cursors_ref,] q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref

@@ -45,6 +45,15 @@ DEFAULT_BLOCK_Q = 64
 DEFAULT_BLOCK_K = 128
 DEFAULT_SUB_K = 16
 
+#: Native-lowering platforms (see kernels.paged.LOWERS_ON for the
+#: contract).  ``launch_prefill_kernel`` allocates ``pltpu.VMEM``
+#: scratch accumulators and the cursor path uses
+#: ``pltpu.PrefetchScalarGridSpec`` — both TPU/Mosaic-only, so GPU runs
+#: would be interpret-mode; a Triton launch branch (register
+#: accumulators instead of VMEM scratch, cursors as plain operands)
+#: would extend this declaration.
+LOWERS_ON = ("tpu",)
+
 
 def pack_cursors(batch: int, q_offset, kv_valid_len, n_k: int) -> jax.Array:
     """Pack per-row decode cursors into the (2, batch) int32 scalar-prefetch

@@ -2,22 +2,33 @@
 host-platform decision, per-shape block-size autotuning, and recompute-based
 custom VJPs so the training-path kernels are usable under autodiff.
 
-Registry responsibilities (DESIGN.md §10):
+Registry responsibilities (DESIGN.md §10, §14):
 
-  * **One interpret decision.**  ``registry.interpret`` is computed once
-    per process (CPU-only hosts run the kernel bodies as XLA ops in
-    ``interpret=True`` mode; TPU compiles to Mosaic) — call sites no
-    longer carry their own ``not _on_tpu()`` checks.
+  * **One interpret decision per kernel family.**  Each kernel module
+    declares the platforms its Pallas body lowers natively on
+    (``LOWERS_ON`` → :data:`NATIVE_PLATFORMS`); ``registry.
+    interpret_for(family)`` is the per-family decision against the
+    cached host platform (non-native hosts run the body as XLA ops in
+    ``interpret=True`` mode) — call sites no longer carry their own
+    ``not _on_tpu()`` checks, and a family that grows, say, a Triton
+    lowering flips to native GPU dispatch by declaration alone.  The
+    legacy process-wide ``registry.interpret`` remains as the
+    "any-platform-but-TPU" view (today all families declare exactly
+    ``("tpu",)``, so the two agree).
   * **Per-shape tuning.**  Every wrapper resolves a :class:`KernelChoice`
     — ``(block_q, block_k, sub_k, pages_per_step)`` — through
     ``registry.choose``: an explicit override (from
     ``AttentionConfig.kernel_*``) wins; otherwise the cached per-shape
-    selection is used.  On TPU with *concrete* operands (an eager warmup
-    call, e.g. ``benchmarks/serve_bench.py``'s un-jitted first tick) the
-    candidate set is timed once and the winner cached; a jit trace
-    resolves to the default *without* pinning the cache (so a later
-    eager call can still tune), and interpret mode caches the default —
-    timing a traced or interpreted call would measure nothing real.
+    selection is used.  On a *native* platform for the family with
+    *concrete* operands (an eager warmup call, e.g.
+    ``benchmarks/serve_bench.py``'s un-jitted first tick) the candidate
+    set is timed once and the winner cached; a jit trace resolves to
+    the default *without* pinning the cache (so a later eager call can
+    still tune), and interpret mode caches the default — timing a
+    traced or interpreted call would measure nothing real.  Every
+    resolution is recorded in ``registry.decisions`` (winner + source +
+    platform + native flag) so benches and the planner can report which
+    backend won and why.
   * **Kernel families.**  ``flash_inhibitor`` / ``flash_attention``
     (training prefill; custom VJP via the jnp references),
     ``*_cached`` variants carrying per-row ``q_offset`` /
@@ -36,7 +47,11 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import flash as kflash
+from repro.kernels import inhibitor as kinhibitor
+from repro.kernels import paged as kpaged
 from repro.kernels import ref as kref
+from repro.kernels import rwkv6 as krwkv6
 from repro.kernels.flash import flash_attention_fwd
 from repro.kernels.inhibitor import flash_inhibitor_fwd
 from repro.kernels.paged import (paged_flash_attention_fwd,
@@ -44,11 +59,31 @@ from repro.kernels.paged import (paged_flash_attention_fwd,
 from repro.kernels.rwkv6 import wkv6_chunked
 
 
-def _on_tpu() -> bool:
+def _host_platform() -> str:
     try:
-        return jax.devices()[0].platform == "tpu"
+        return jax.devices()[0].platform
     except RuntimeError:
-        return False
+        return "cpu"
+
+
+def _on_tpu() -> bool:
+    return _host_platform() == "tpu"
+
+
+#: Per-family native-lowering platforms, assembled from the kernel
+#: modules' own ``LOWERS_ON`` declarations — the single source of truth
+#: for "would this Pallas body compile here, or only interpret?".  The
+#: registry keys the timed-autotune gate and the wrappers' ``interpret``
+#: flag on this, and the planner (core.mechanism.kernel_native) keys
+#: kernel eligibility on it, so an interpret-mode kernel can never be
+#: ranked above an XLA gather path by accident of platform checks
+#: scattered across call sites.
+NATIVE_PLATFORMS: Dict[str, Tuple[str, ...]] = {
+    "inhibitor": tuple(kinhibitor.LOWERS_ON),
+    "flash": tuple(kflash.LOWERS_ON),
+    "paged": tuple(kpaged.LOWERS_ON),
+    "wkv6": tuple(krwkv6.LOWERS_ON),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -98,28 +133,64 @@ CANDIDATES: Dict[str, Tuple[KernelChoice, ...]] = {
 
 
 class KernelRegistry:
-    """Process-wide kernel dispatch state: the single interpret decision
-    and the per-(family, shape) tuned :class:`KernelChoice` cache."""
+    """Process-wide kernel dispatch state: the cached host platform, the
+    per-family interpret decision, and the per-(family, shape) tuned
+    :class:`KernelChoice` cache."""
 
     def __init__(self):
+        # test escape hatch: monkeypatching ``_interpret`` to a bool
+        # overrides *every* family's decision (pretend-TPU in tests)
         self._interpret: Optional[bool] = None
+        self._platform: Optional[str] = None
         self.tuned: Dict[tuple, KernelChoice] = {}
         # static cost-model ranking per tuned shape (costmodel priors):
         # [(KernelChoice, prior_seconds), ...] cheapest-first, recorded
         # whenever a timed tune runs — introspection for benches/tests
         self.priors: Dict[tuple, list] = {}
+        # (family,) + shape_key -> {"choice", "source", "platform",
+        # "native"}: which launch config won the last resolution and why
+        # ("override" | "timed" | "default-interpret" | "default-trace")
+        self.decisions: Dict[tuple, dict] = {}
+
+    @property
+    def platform(self) -> str:
+        """Host platform, resolved once per process (``reset`` re-probes)."""
+        if self._platform is None:
+            self._platform = _host_platform()
+        return self._platform
 
     @property
     def interpret(self) -> bool:
-        if self._interpret is None:
-            self._interpret = not _on_tpu()
-        return self._interpret
+        """Legacy process-wide view: True anywhere the TPU-era kernels
+        would interpret (i.e. any non-TPU host).  Family-aware call
+        sites use :meth:`interpret_for` instead."""
+        if self._interpret is not None:
+            return self._interpret
+        return self.platform != "tpu"
+
+    def interpret_for(self, family: str) -> bool:
+        """Per-family interpret decision: False exactly when ``family``'s
+        Pallas body lowers natively on this host (its module's
+        ``LOWERS_ON`` declaration contains :attr:`platform`)."""
+        if self._interpret is not None:
+            return self._interpret
+        return self.platform not in NATIVE_PLATFORMS.get(family, ("tpu",))
 
     def reset(self) -> None:
         """Drop cached decisions (tests / device topology changes)."""
         self._interpret = None
+        self._platform = None
         self.tuned.clear()
         self.priors.clear()
+        self.decisions.clear()
+
+    def _record(self, family: str, key: tuple, choice: KernelChoice,
+                source: str) -> None:
+        self.decisions[key] = {
+            "choice": choice, "source": source,
+            "platform": self.platform,
+            "native": not self.interpret_for(family),
+        }
 
     def choose(self, family: str, shape_key: tuple,
                override: Optional[KernelChoice] = None,
@@ -129,7 +200,8 @@ class KernelRegistry:
 
         ``override`` (non-empty) short-circuits tuning — explicit config
         wins.  ``timer`` runs one candidate and returns seconds; it is
-        only consulted on TPU with concrete operands, and the winner is
+        only consulted on a platform where ``family`` lowers natively
+        (``interpret_for``) with concrete operands, and the winner is
         cached per shape so tuning cost is paid once.
         """
         candidates = CANDIDATES[family]
@@ -138,17 +210,24 @@ class KernelRegistry:
         if override is not None and not override.empty:
             # partial overrides fill their None fields from the tuned
             # per-shape choice when one exists, else the default
-            return override.merge_onto(self.tuned.get(key, default))
+            merged = override.merge_onto(self.tuned.get(key, default))
+            self._record(family, key, merged, "override")
+            return merged
         hit = self.tuned.get(key)
         if hit is not None:
+            # the decision for this key was recorded when it was tuned
             return hit
         if timer is None:
             # trace-time resolution: use the default but do NOT pin the
             # cache — a later concrete-operand (eager warmup) call for the
             # same shape must still be able to tune
+            if key not in self.decisions:
+                self._record(family, key, default, "default-trace")
             return default
         choice = default
-        if not self.interpret:
+        source = "default-interpret"
+        if not self.interpret_for(family):
+            source = "timed"
             # static roofline priors (repro.analysis.costmodel) rank the
             # candidates before any timing runs: timing walks the list
             # cheapest-prior-first and candidates the model proves
@@ -168,6 +247,7 @@ class KernelRegistry:
                 if t < best_t:
                     best_t, choice = t, cand
         self.tuned[key] = choice
+        self._record(family, key, choice, source)
         return choice
 
     def _ranked(self, family: str, shape_key: tuple, candidates):
@@ -236,7 +316,7 @@ def flash_inhibitor(q, k, v, score_scale=None, score_shift=0.5, signed=True,
             q, k, v, score_scale=score_scale, score_shift=score_shift,
             signed=signed, normalize=normalize, causal=causal, window=window,
             block_q=c.block_q, block_k=c.block_k, sub_k=c.sub_k,
-            interpret=registry.interpret)
+            interpret=registry.interpret_for("inhibitor"))
 
     return run(_prefill_choice("inhibitor", q, k, causal, window, False,
                                choice, run))
@@ -278,7 +358,7 @@ def flash_inhibitor_cached(q, k, v, q_offset, kv_valid_len, *,
             signed=signed, normalize=normalize, causal=causal, window=window,
             block_q=c.block_q, block_k=c.block_k, sub_k=c.sub_k,
             q_offset=q_offset, kv_valid_len=kv_valid_len,
-            interpret=registry.interpret)
+            interpret=registry.interpret_for("inhibitor"))
 
     return run(_prefill_choice("inhibitor", q, k, causal, window, True,
                                choice, run))
@@ -295,7 +375,7 @@ def flash_attention(q, k, v, score_scale=None, causal=True, window=None,
         return flash_attention_fwd(
             q, k, v, score_scale=score_scale, causal=causal, window=window,
             block_q=c.block_q, block_k=c.block_k,
-            interpret=registry.interpret)
+            interpret=registry.interpret_for("flash"))
 
     return run(_prefill_choice("flash", q, k, causal, window, False,
                                choice, run))
@@ -329,7 +409,7 @@ def flash_attention_cached(q, k, v, q_offset, kv_valid_len, *,
             q, k, v, score_scale=score_scale, causal=causal, window=window,
             block_q=c.block_q, block_k=c.block_k,
             q_offset=q_offset, kv_valid_len=kv_valid_len,
-            interpret=registry.interpret)
+            interpret=registry.interpret_for("flash"))
 
     return run(_prefill_choice("flash", q, k, causal, window, True,
                                choice, run))
@@ -359,7 +439,8 @@ def paged_flash_inhibitor(q, k_pool, v_pool, block_tables, lengths, *,
             q, k_pool, v_pool, block_tables, lengths,
             score_scale=score_scale, score_shift=score_shift, signed=signed,
             normalize=normalize, window=window,
-            pages_per_step=c.pages_per_step, interpret=registry.interpret)
+            pages_per_step=c.pages_per_step,
+            interpret=registry.interpret_for("paged"))
 
     return run(_paged_choice("inhibitor", q, k_pool, block_tables, choice,
                              run))
@@ -372,7 +453,8 @@ def paged_flash_attention(q, k_pool, v_pool, block_tables, lengths, *,
         return paged_flash_attention_fwd(
             q, k_pool, v_pool, block_tables, lengths,
             score_scale=score_scale, window=window,
-            pages_per_step=c.pages_per_step, interpret=registry.interpret)
+            pages_per_step=c.pages_per_step,
+            interpret=registry.interpret_for("paged"))
 
     return run(_paged_choice("flash", q, k_pool, block_tables, choice, run))
 
@@ -390,4 +472,4 @@ def wkv6(r, k, v, w, u, state=None, *, chunk: int = 32):
     if state is not None:
         return kref.wkv6_ref(r, k, v, w, u, state)
     return wkv6_chunked(r, k, v, w, u, chunk=chunk,
-                        interpret=registry.interpret)
+                        interpret=registry.interpret_for("wkv6"))

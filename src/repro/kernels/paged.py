@@ -55,6 +55,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_PAGES_PER_STEP = 4
+
+#: Platforms this module's Pallas bodies lower *natively* on.  The grid
+#: walks block tables through ``pltpu.PrefetchScalarGridSpec`` scalar
+#: prefetch (BlockSpec index maps reading prefetched tables), a
+#: TPU/Mosaic feature with no Triton equivalent — on any other platform
+#: the body only runs in ``interpret=True`` mode, which must never be
+#: picked over the XLA gather path.  A Triton rewrite of the table walk
+#: (pointer arithmetic instead of prefetch-indexed BlockSpecs) would
+#: extend this to ("tpu", "gpu") and the registry/planner pick it up
+#: with no further wiring (kernels.ops.NATIVE_PLATFORMS).
+LOWERS_ON = ("tpu",)
 NEG_INF = -1e30
 
 

@@ -34,6 +34,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_CHUNK = 32
 
+#: Native-lowering platforms (see kernels.paged.LOWERS_ON for the
+#: contract): the chunk-carried state lives in ``pltpu.VMEM`` scratch
+#: across the sequential grid dimension, so only TPU lowers natively.
+LOWERS_ON = ("tpu",)
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, o_ref, sfin_ref,
                  s_ref, *, chunk: int, n_chunks: int):

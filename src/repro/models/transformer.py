@@ -381,6 +381,77 @@ def lm_forward_lane(qlm, lane, tokens):
                            subtract_mean=cfg.norm == "layernorm")
 
 
+def fused_gather_applies(cfg: ModelConfig, kv, n_q: int) -> bool:
+    """Would :func:`lm_step` hoist the all-layer page gather for this
+    paged state?  (DESIGN.md §14.)
+
+    True exactly when the per-layer planner would pick the host-gather
+    ``paged`` backend with nothing forced: a forced backend
+    (``cfg.attention.backend``) or the ``use_kernel`` shim keeps the
+    per-layer path (the escape hatch parity tests rely on), and a
+    platform whose planner prefers the block-table-native kernel
+    (``paged_pallas`` on TPU single-query decode) keeps the kernel.
+    """
+    from repro.core.mechanism import AttnShapes, plan_attention
+
+    if not isinstance(kv, PagedKVCache):
+        return False
+    a = cfg.attention
+    if a.backend is not None or a.use_kernel:
+        return False
+    ps = kv.k.shape[2]
+    shapes = AttnShapes(
+        batch=kv.block_tables.shape[1], n_q=n_q,
+        n_k=kv.block_tables.shape[2] * ps,
+        num_heads=a.num_heads, num_kv_heads=kv.k.shape[3],
+        head_dim=a.head_dim, dtype=cfg.cdtype,
+        has_explicit_mask=False, is_cross=False, has_cache=True,
+        scalar_cursor=False, paged=True)
+    try:
+        plan = plan_attention(a, shapes)
+    except ValueError:
+        return False
+    return plan.backend == "paged"
+
+
+def _gather_paged_view(kv: PagedKVCache) -> KVCache:
+    """ONE whole-model page gather: stacked pools (L, pages, ps, hk, d)
+    → contiguous logical view (L, b, P·ps, hk, d) for every layer.
+
+    ``init_states`` broadcasts a single cache over layers and the engine
+    uploads one host table broadcast the same way (``_flush_tables``), so
+    ``block_tables[0]`` is authoritative for all L layers — the gather
+    reads the table once instead of re-walking it per layer inside the
+    scan.  The (page, offset) index pair addresses the pool directly, so
+    no (b, P, ps, …) → (b, P·ps, …) reshape of the gathered data is ever
+    materialized."""
+    tables = kv.block_tables[0]                       # (b, P), layer-shared
+    ps = kv.k.shape[2]
+    page_idx = jnp.repeat(tables, ps, axis=1)         # (b, N): tables[b, j//ps]
+    off_idx = jnp.tile(jnp.arange(ps, dtype=tables.dtype),
+                       tables.shape[1])[None]         # (1, N): j % ps
+    kc = kv.k[:, page_idx, off_idx]                   # (L, b, N, hk, d)
+    vc = kv.v[:, page_idx, off_idx]
+    return KVCache(kc, vc, kv.length)
+
+
+def _scatter_paged_rows(kv: PagedKVCache, view: KVCache,
+                        n_q: int) -> PagedKVCache:
+    """Write the ``n_q`` rows each layer appended to the logical view
+    back into the page pool (the inverse of the hoisted gather).  Rows of
+    inactive slots land on trash page 0 exactly as the per-layer scatter
+    did — duplicate trash-page writes are don't-care by design."""
+    tables = kv.block_tables[0]
+    ps = kv.k.shape[2]
+    rows = jnp.arange(tables.shape[0])[:, None]                    # (b, 1)
+    pos = kv.length[0][:, None] + jnp.arange(n_q)[None]            # (b, t)
+    pages = tables[rows, pos // ps]
+    offs = pos % ps
+    k_pool = kv.k.at[:, pages, offs].set(view.k[:, rows, pos])
+    v_pool = kv.v.at[:, pages, offs].set(view.v[:, rows, pos])
+    return PagedKVCache(k_pool, v_pool, kv.block_tables, view.length)
+
+
 def init_states(cfg: ModelConfig, batch: int, max_len: int, *,
                 per_slot: bool = False, paged: bool = False,
                 page_size: int = 16,
@@ -431,7 +502,24 @@ def lm_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         st = st._replace(kv=KVCache(
             st.kv.k, st.kv.v,
             jnp.broadcast_to(st.kv.length, (cfg.num_layers,))))
-    x, new_states, _ = _scan_blocks(params, cfg, x, None, states=st)
+    if fused_gather_applies(cfg, st.kv, t):
+        # whole-model fused gather (DESIGN.md §14): gather the paged
+        # pools into one contiguous logical view up front, run every
+        # layer's attention on its slice via the plain masked ``fused``
+        # backend (bit-exact with the per-layer gather: identical
+        # operands, identical mask), then scatter the appended rows back
+        # into the pool once.  XLA sees one batched gather + one scatter
+        # instead of L table walks per step.
+        pool = st.kv
+        run_cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention,
+                                               backend="fused"))
+        st = st._replace(kv=_gather_paged_view(pool))
+        x, new_states, _ = _scan_blocks(params, run_cfg, x, None, states=st)
+        new_states = new_states._replace(
+            kv=_scatter_paged_rows(pool, new_states.kv, t))
+    else:
+        x, new_states, _ = _scan_blocks(params, cfg, x, None, states=st)
     x = _apply_norm(cfg, params["final_norm"], x)
     if cfg.tie_embeddings:
         logits = emb.attend_logits(params["embed"], x, compute_dtype=cdt)

@@ -104,6 +104,13 @@ class EngineConfig:
                                    # contiguous slots / recurrent carries
     scheduler: Any = "fifo"        # admission policy name or Scheduler
                                    # instance ("fifo"|"priority"|"prefix")
+    warmup: str = "none"           # "decode": pre-trace the decode step's
+                                   # proven signature ladder (and autotune
+                                   # native kernels) at construction, so
+                                   # no serving tick ever compiles;
+                                   # "serve": additionally pre-trace the
+                                   # proven prefill chunk buckets — the
+                                   # whole serving path compiles up front
 
 
 def _next_pow2(n: int) -> int:
@@ -231,7 +238,8 @@ class Engine:
             "forked_pages": 0, "prefill_tokens": 0,
             "generated_tokens": 0, "finished_requests": 0,
             "table_uploads": 0, "table_uploads_decode": 0,
-            "table_uploads_prefill": 0, "decode_ticks": 0}
+            "table_uploads_prefill": 0, "decode_ticks": 0,
+            "prefill_chunks": 0}
         self._arrival = 0
         self._admission_backoff = False
         self._key = jax.random.PRNGKey(seed)
@@ -256,6 +264,13 @@ class Engine:
         # device mirror refreshes lazily in ONE batched upload per tick
         self._tables_dirty = False
         self._retrace_budget_cache: Optional[Dict[str, Any]] = None
+        if self.cfg.warmup not in ("none", "decode", "serve"):
+            raise ValueError(f"unknown warmup policy {self.cfg.warmup!r} "
+                             f"(expected 'none', 'decode' or 'serve')")
+        if self.cfg.warmup in ("decode", "serve"):
+            self._warmup_decode()
+        if self.cfg.warmup == "serve":
+            self._warmup_prefill()
 
     # ---- planning / introspection ----
     @property
@@ -328,7 +343,17 @@ class Engine:
             num_heads=acfg.num_heads, num_kv_heads=acfg.num_kv_heads,
             head_dim=acfg.head_dim, dtype=mcfg.cdtype, has_cache=True,
             scalar_cursor=False, paged=self.paged)
-        return plan_attention(acfg, shapes)
+        plan = plan_attention(acfg, shapes)
+        if (plan.backend == "paged"
+                and getattr(acfg, "backend", None) is None
+                and not getattr(acfg, "use_kernel", False)):
+            # under these exact conditions models.transformer.lm_step
+            # hoists ONE whole-model page gather out of the layer scan
+            # (fused_gather_applies) — surface it in the inspectable plan
+            plan = dataclasses.replace(
+                plan, reason=plan.reason + "; all-layer fused gather "
+                "hoisted out of the layer scan (DESIGN.md §14)")
+        return plan
 
     @property
     def prefill_compiles(self) -> int:
@@ -503,7 +528,11 @@ class Engine:
         L = len(prompt)
         # admission pre-reserved pages for the full write extent — push
         # the batched table mirror BEFORE taking the view, so the view's
-        # block-table row is final for every chunk
+        # block-table row is final for every chunk.  Audited invariant
+        # (bench-gated: table_uploads_prefill <= prefill_chunks): this is
+        # the ONE prefill-side table upload per admission — nothing in
+        # the chunk loop below marks the mirror dirty, so a multi-chunk
+        # prompt still costs a single upload, not one per chunk
         self._flush_tables("prefill")
         view = self._slot_view(slot)
         nxt = None
@@ -515,6 +544,7 @@ class Engine:
                 view = self._set_view_cursor(view, start)
             last = L - 1 - start if i == len(schedule) - 1 else real - 1
             self._prefill_buckets.add(cb)
+            self.counters["prefill_chunks"] += 1
             self._key, sub = jax.random.split(self._key)
             nxt, view = self._jit_prefill_chunk(
                 self.params,
@@ -845,16 +875,79 @@ class Engine:
                 finished.append(self._finish(slot))
         return finished
 
+    def _warmup_decode(self) -> None:
+        """Pre-trace the decode step's whole signature set at construction
+        (``cfg.warmup="decode"``).  The paged bucket ladder is closed-form
+        — the static proof (``serve_static.enumerate_decode_buckets`` /
+        ``verify_engine_signatures``) enumerates exactly the clamped
+        table-width buckets a live tick can ever present — so warming it
+        moves every decode compile off the serving path: steady-state
+        ticks never trace.  Warmed traces land in the same jit cache the
+        measured-vs-proven cross-check counts, so ``decode_compiles``
+        equals the proven ladder up front and a later live retrace still
+        trips the budget gate.  Runs outside the tick path (construction
+        time), so its transfers are not per-tick sync-contract traffic;
+        outputs are discarded and ``self.states`` is untouched (inactive
+        rows' scatters land on trash page 0 by design)."""
+        self._key, sub = jax.random.split(self._key)
+        last = jnp.zeros((self.cfg.max_batch, 1), jnp.int32)
+        if not self.paged:
+            self._jit_decode(self.params, last, self.states, sub)
+            return
+        from repro.analysis.serve_static import enumerate_decode_buckets
+
+        kv = self.states.kv
+        full_tables = kv.block_tables
+        for hw in enumerate_decode_buckets(
+                max_len=self.cfg.max_len, page_size=self.cfg.page_size,
+                pages_per_slot=self.alloc.pages_per_slot):
+            states_in = self.states._replace(
+                kv=kv._replace(block_tables=full_tables[:, :, :hw]))
+            if hw not in self._decode_table_buckets:
+                self._decode_table_buckets.add(hw)
+                self._tune_decode_bucket(last, states_in, sub)
+            self._jit_decode(self.params, last, states_in, sub)
+
+    def _warmup_prefill(self) -> None:
+        """Pre-trace the proven prefill chunk buckets
+        (``cfg.warmup="serve"``): same closed-form enumeration the static
+        proof checks (``serve_static.enumerate_prefill_buckets``), traced
+        against a fresh slot-0 view — ava-identical to every live
+        prefill signature, so admission never compiles either.  Outputs
+        are discarded; paged writes land on the zeroed (trash-page)
+        table of the discarded view copy."""
+        from repro.analysis.serve_static import enumerate_prefill_buckets
+
+        view = self._slot_view(0)
+        for cb in enumerate_prefill_buckets(
+                max_len=self.cfg.max_len,
+                prefill_chunk=self.cfg.prefill_chunk,
+                bucketed=self._bucketed,
+                page_size=self.cfg.page_size if self.paged else None,
+                prefix_cache=self.prefix is not None):
+            if self._bucketed:
+                view = self._set_view_cursor(view, 0)
+            self._prefill_buckets.add(cb)
+            self._key, sub = jax.random.split(self._key)
+            self._jit_prefill_chunk(self.params,
+                                    jnp.zeros((1, cb), jnp.int32),
+                                    view, jnp.int32(0), sub)
+
     def _tune_decode_bucket(self, last, states_in, key) -> None:
         """One eager (un-jitted) decode step the first time a table-width
-        bucket appears, on TPU only: concrete operands let the kernel
-        registry time its paged-kernel candidates for this shape *before*
-        the jitted tick traces — the trace then bakes the tuned winner
-        instead of the default (kernels/ops.py, DESIGN.md §10)."""
+        bucket appears, only where the paged kernel family lowers
+        natively: concrete operands let the kernel registry time its
+        paged-kernel candidates for this shape *before* the jitted tick
+        traces — the trace then bakes the tuned winner instead of the
+        default (kernels/ops.py, DESIGN.md §10).  Interpret-mode hosts
+        skip this outright — timing interpreted Pallas measures nothing
+        real, and the planner routes them to the gather path anyway."""
         from repro.kernels.ops import registry as kernel_registry
 
-        if kernel_registry.interpret:
-            return                     # nothing real to time on this host
+        if kernel_registry.interpret_for("paged") or (
+                self.decode_plan is not None
+                and self.decode_plan.backend != "paged_pallas"):
+            return          # gather path / interpret mode: nothing to time
         self._decode_step(self.params, last, states_in, key)
 
     def _decode_table_width(self) -> int:

@@ -41,6 +41,13 @@ Both allocators expose the same scheduling surface (``claim`` /
 ``release`` / ``active`` / ``lengths`` / ``slots``); the paged one adds
 ``ensure(slot, length)`` for on-demand page growth and a ``block_tables``
 array the engine mirrors into device state.
+
+The host-side ``block_tables`` here is the single source of truth: the
+engine pushes it to the device in batched whole-array uploads (at most
+one per decode tick and one per prefill admission — bench-gated), and
+the device side broadcasts that one mirror across the layer axis, which
+is what makes the whole-model fused page gather in the decode step sound
+(DESIGN.md §14).
 """
 
 from __future__ import annotations

@@ -1,0 +1,205 @@
+"""Whole-model fused paged gather (models/transformer.lm_step, DESIGN.md
+§14): the decode step hoists ONE all-layer page gather out of the layer
+scan and scatters the appended rows back once.  These tests pin
+
+  * output parity with the per-layer ``paged`` escape hatch (a forced
+    ``AttentionConfig.backend="paged"`` keeps the old per-layer path) —
+    over GQA, sliding windows, ragged cursors, multiply-referenced
+    (shared / CoW) pages, and inactive trash-page rows,
+  * pool-scatter parity: both paths write identical KV rows back,
+  * the ``fused_gather_applies`` planner predicate's gating conditions,
+  * the static-cost win the fusion exists for: strictly fewer decode
+    HBM bytes than the per-layer gather under the analysis cost model
+    (repro.analysis.costmodel), which is what ANALYSIS_serve.json gates.
+
+Model fixture (``serve_model``) lives in conftest.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+
+TOL = dict(rtol=1e-6, atol=1e-6)
+
+
+def _with_backend(cfg, backend):
+    return dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, backend=backend))
+
+
+def _paged_states(cfg, rng, *, max_len, page_size, lengths, tables=None,
+                  grow=2):
+    """Decode-ready paged states: random pool contents, ragged per-row
+    cursors, permuted physical pages (trash page 0 left unmapped) —
+    the layout the serve engine hands lm_step mid-stream.  Active rows
+    get capacity for ``grow`` appended tokens, mirroring the engine's
+    ``ensure`` call before every decode tick (only inactive length-0
+    slots ever scatter to the trash page)."""
+    batch = len(lengths)
+    states = tfm.init_states(cfg, batch, max_len, paged=True,
+                             page_size=page_size)
+    kv = states.kv
+    L = kv.k.shape[0]
+    if tables is None:
+        pages_per_slot = kv.block_tables.shape[2]
+        perm = rng.permutation(np.arange(1, kv.k.shape[1]))
+        tables = np.zeros((batch, pages_per_slot), np.int32)
+        nxt = 0
+        for b, ln in enumerate(lengths):
+            used = -(-(int(ln) + grow) // page_size) if ln else 0
+            tables[b, :used] = perm[nxt:nxt + used]
+            nxt += used
+    k = jnp.asarray(rng.normal(size=kv.k.shape).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=kv.v.shape).astype(np.float32))
+    kv = tfm.PagedKVCache(
+        k, v,
+        jnp.broadcast_to(jnp.asarray(tables)[None], (L,) + tables.shape),
+        jnp.broadcast_to(jnp.asarray(lengths, dtype=jnp.int32)[None],
+                         (L, batch)))
+    return states._replace(kv=kv), np.asarray(tables)
+
+
+# page_size 8: 13 straddles a page boundary, 8 lands exactly on one,
+# 1 is a single token, 0 is an inactive slot parked on trash page 0
+RAGGED_LENGTHS = [13, 8, 1, 0]
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("n_q", [1, 2])
+def test_fused_gather_matches_per_layer_paged(rng, serve_model, window,
+                                              n_q):
+    """The hoisted all-layer gather is numerically interchangeable with
+    the per-layer ``paged`` backend: same logits, same pool writeback —
+    GQA (4 heads over 2 KV heads), optional sliding window, ragged
+    cursors including an inactive trash-page row."""
+    cfg, api, params = serve_model
+    cfg = dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, sliding_window=window))
+    states, _ = _paged_states(cfg, rng, max_len=32, page_size=8,
+                              lengths=RAGGED_LENGTHS)
+    tokens = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (len(RAGGED_LENGTHS), n_q)).astype(np.int32))
+
+    assert tfm.fused_gather_applies(cfg, states.kv, n_q)
+    logits_f, st_f = tfm.lm_step(params, cfg, tokens, states)
+    # escape hatch: a forced backend keeps the per-layer path
+    per_layer = _with_backend(cfg, "paged")
+    assert not tfm.fused_gather_applies(per_layer, states.kv, n_q)
+    logits_p, st_p = tfm.lm_step(params, per_layer, tokens, states)
+
+    # logits parity on *active* rows; the inactive slot's output is a
+    # don't-care both paths compute from trash-page garbage, and its
+    # trash-page scatter (pool page 0) is order-dependent by design
+    active = [b for b, ln in enumerate(RAGGED_LENGTHS) if ln]
+    np.testing.assert_allclose(np.asarray(logits_f)[active],
+                               np.asarray(logits_p)[active], **TOL)
+    np.testing.assert_allclose(np.asarray(st_f.kv.k)[:, 1:],
+                               np.asarray(st_p.kv.k)[:, 1:], **TOL)
+    np.testing.assert_allclose(np.asarray(st_f.kv.v)[:, 1:],
+                               np.asarray(st_p.kv.v)[:, 1:], **TOL)
+    np.testing.assert_array_equal(np.asarray(st_f.kv.length),
+                                  np.asarray(st_p.kv.length))
+
+
+def test_fused_gather_shared_cow_pages(rng, serve_model):
+    """Prefix-cache layout (DESIGN.md §11): rows 0 and 1 share their
+    first two physical pages (a mounted common prefix) and diverge after
+    — the fused gather tolerates multiply-referenced table entries
+    exactly like the per-layer gather (a table entry is just a pool
+    index), and the writeback never touches the shared prefix pages."""
+    cfg, api, params = serve_model
+    tables = np.zeros((3, 4), np.int32)
+    tables[0, :3] = [1, 2, 3]       # rows 0/1 share physical pages 1, 2
+    tables[1, :3] = [1, 2, 4]
+    tables[2, :2] = [5, 6]
+    lengths = [21, 18, 13]
+    states, _ = _paged_states(cfg, rng, max_len=32, page_size=8,
+                              lengths=lengths, tables=tables)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (3, 1)).astype(np.int32))
+
+    logits_f, st_f = tfm.lm_step(params, cfg, tokens, states)
+    logits_p, st_p = tfm.lm_step(params, _with_backend(cfg, "paged"),
+                                 tokens, states)
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(logits_p),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(st_f.kv.k), np.asarray(st_p.kv.k),
+                               **TOL)
+    # the appended rows land past each cursor; the shared prefix pages
+    # (1, 2) hold only positions < min(cursors) and must be untouched
+    np.testing.assert_array_equal(np.asarray(st_f.kv.k[:, 1:3]),
+                                  np.asarray(states.kv.k[:, 1:3]))
+
+
+def test_fused_gather_trash_page_isolation(rng, serve_model):
+    """Poisoning trash page 0 and every never-mapped pool page with huge
+    garbage leaves the fused-path logits of active rows unchanged: the
+    hoisted gather maps unmapped table entries to the trash page, whose
+    rows sit beyond every cursor's mask."""
+    cfg, api, params = serve_model
+    lengths = [13, 8, 1, 0]
+    states, tables = _paged_states(cfg, rng, max_len=32, page_size=8,
+                                   lengths=lengths)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (4, 1)).astype(np.int32))
+    logits_clean, _ = tfm.lm_step(params, cfg, tokens, states)
+
+    mapped = np.unique(tables)
+    mapped = mapped[mapped != 0]
+    poison = np.setdiff1d(np.arange(states.kv.k.shape[1]), mapped)
+    kv = states.kv
+    poisoned = states._replace(kv=tfm.PagedKVCache(
+        kv.k.at[:, poison].set(1e9), kv.v.at[:, poison].set(-1e9),
+        kv.block_tables, kv.length))
+    logits_bad, _ = tfm.lm_step(params, cfg, tokens, poisoned)
+    # rows 0..2 are active and must not see the garbage; row 3 is the
+    # inactive slot whose own (don't-care) output is excluded
+    np.testing.assert_allclose(np.asarray(logits_bad)[:3],
+                               np.asarray(logits_clean)[:3], **TOL)
+
+
+def test_fused_gather_applies_gating(rng, serve_model):
+    """The predicate fires only for the unforced paged decode plan: a
+    forced backend, the use_kernel shim, or a contiguous cache all keep
+    the per-layer path."""
+    cfg, api, params = serve_model
+    states, _ = _paged_states(cfg, rng, max_len=32, page_size=8,
+                              lengths=[5, 3])
+    assert tfm.fused_gather_applies(cfg, states.kv, 1)
+    assert not tfm.fused_gather_applies(_with_backend(cfg, "paged"),
+                                        states.kv, 1)
+    assert not tfm.fused_gather_applies(_with_backend(cfg, "fused"),
+                                        states.kv, 1)
+    shim = dataclasses.replace(cfg, attention=dataclasses.replace(
+        cfg.attention, use_kernel=True))
+    assert not tfm.fused_gather_applies(shim, states.kv, 1)
+    contiguous = tfm.init_states(cfg, 2, 32, per_slot=True)
+    assert not tfm.fused_gather_applies(cfg, contiguous.kv, 1)
+
+
+def test_fused_gather_drops_static_decode_bytes(rng, serve_model):
+    """The reason the fusion exists: under the analysis cost model the
+    fused decode step moves strictly fewer HBM bytes than the per-layer
+    gather (one table walk instead of num_layers), which is the drop
+    ANALYSIS_serve.json's static decode roofline records vs PR 7."""
+    from repro.analysis.costmodel import jaxpr_costs
+
+    cfg, api, params = serve_model
+    states, _ = _paged_states(cfg, rng, max_len=32, page_size=8,
+                              lengths=[13, 8, 1, 0])
+    tokens = jnp.zeros((4, 1), jnp.int32)
+
+    def bytes_for(run_cfg):
+        jx = jax.make_jaxpr(
+            lambda p, t, s: tfm.lm_step(p, run_cfg, t, s))(
+                params, tokens, states)
+        return jaxpr_costs(jx).hbm_bytes
+
+    fused = bytes_for(cfg)
+    per_layer = bytes_for(_with_backend(cfg, "paged"))
+    assert fused < per_layer

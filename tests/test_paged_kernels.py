@@ -318,3 +318,62 @@ def test_shared_pages_across_rows_read_identically(rng):
                                **TOL)
     np.testing.assert_allclose(np.asarray(out_gather), np.asarray(oracle),
                                **TOL)
+
+
+def test_native_platform_declarations():
+    """Every kernel family declares where its Pallas body lowers
+    natively; all four are TPU-only today (scalar-prefetch grids have no
+    Triton equivalent) — a future GPU body flips one declaration."""
+    assert set(kops.NATIVE_PLATFORMS) == {"inhibitor", "flash", "paged",
+                                          "wkv6"}
+    for plats in kops.NATIVE_PLATFORMS.values():
+        assert "tpu" in plats
+
+
+def test_interpret_for_tracks_family_declaration(monkeypatch):
+    """interpret_for is per-family and platform-derived: native on TPU,
+    interpret elsewhere; the _interpret test escape hatch overrides every
+    family at once."""
+    monkeypatch.setattr(kops.registry, "_interpret", None)
+    monkeypatch.setattr(kops.registry, "_platform", "tpu")
+    assert not kops.registry.interpret_for("paged")
+    assert not kops.registry.interpret
+    monkeypatch.setattr(kops.registry, "_platform", "cuda")
+    assert kops.registry.interpret_for("paged")     # no Triton body yet
+    assert kops.registry.interpret
+    monkeypatch.setattr(kops.registry, "_interpret", False)
+    assert not kops.registry.interpret_for("paged")
+
+
+def test_choose_records_decision_provenance():
+    """registry.decisions records which launch config won and why:
+    trace-time resolutions stay unpinned, concrete resolutions record
+    timed/default-interpret by platform, overrides always win."""
+    r = kops.KernelRegistry()
+    r._platform = "cpu"
+    key = ("probe", 4, 1, 4, 2, 16)
+    full = ("paged",) + key
+
+    got = r.choose("paged", key)
+    assert r.decisions[full]["source"] == "default-trace"
+    assert full not in r.tuned          # trace-time never pins the cache
+
+    got = r.choose("paged", key, timer=lambda c: 0.0)
+    d = r.decisions[full]
+    assert d["source"] == "default-interpret"       # cpu: nothing to time
+    assert d["platform"] == "cpu" and d["native"] is False
+    assert full in r.tuned
+
+    ov = kops.KernelChoice(pages_per_step=2)
+    got = r.choose("paged", key, override=ov)
+    assert got.pages_per_step == 2
+    assert r.decisions[full]["source"] == "override"
+
+    # native platform: the timer actually ranks candidates and records
+    # a timed decision with the costmodel priors alongside
+    rt = kops.KernelRegistry()
+    rt._platform = "tpu"
+    rt.choose("paged", key, timer=lambda c: float(c.pages_per_step or 1))
+    dt = rt.decisions[("paged",) + key]
+    assert dt["source"] == "timed" and dt["native"] is True
+    assert ("paged",) + key in rt.priors

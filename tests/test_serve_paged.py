@@ -260,3 +260,74 @@ def test_engine_decode_plan_traces_paged_backend(serve_model):
     eng2 = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
                                             allocator="contiguous"))
     assert eng2.decode_plan.backend != "paged"
+
+
+# ---------------------------------------------------------------------------
+# Construction-time warmup (EngineConfig.warmup) and prefill upload audit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("warmup", ["decode", "serve"])
+def test_warmup_pretraces_proven_ladder(rng, serve_model, warmup):
+    """warmup='decode' compiles the decode step's entire proven bucket
+    ladder at construction; warmup='serve' additionally compiles every
+    proven prefill chunk bucket — serving then triggers ZERO further
+    compiles, the measured totals stay exactly at the proven budget, and
+    outputs match a cold engine token-for-token."""
+    cfg, api, params = serve_model
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (5, 3, 17, 9, 1)]
+
+    outs = {}
+    for mode in ("none", warmup):
+        eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                               allocator="paged",
+                                               page_size=8,
+                                               prefill_chunk=8,
+                                               warmup=mode))
+        budget = eng.stats()["retrace_budget"]
+        warm_decode = eng.decode_compiles
+        warm_prefill = eng.prefill_compiles
+        if mode != "none":
+            assert warm_decode == budget["decode_proven"]
+        if mode == "serve":
+            assert warm_prefill == budget["prefill_proven"]
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=4))
+        outs[mode] = {r.request_id: r.output
+                      for r in eng.run_to_completion()}
+        if mode != "none":
+            # the ladder was fully warm: serving recompiled nothing
+            assert eng.decode_compiles == warm_decode
+        if mode == "serve":
+            assert eng.prefill_compiles == warm_prefill
+        assert eng.stats()["retrace_budget"]["within_declared"]
+    assert outs[warmup] == outs["none"]
+
+
+def test_warmup_rejects_unknown_policy(serve_model):
+    cfg, api, params = serve_model
+    with pytest.raises(ValueError, match="warmup"):
+        Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                         warmup="everything"))
+
+
+def test_prefill_table_uploads_at_most_one_per_prefill(rng, serve_model):
+    """Upload audit (S1 gate material): the block-table mirror is pushed
+    once per *prefill*, before the chunk loop — multi-chunk prompts must
+    not multiply uploads, so uploads/prefill-chunk stays <= 1 and the
+    upload count is bounded by the number of admitted prefills."""
+    cfg, api, params = serve_model
+    lens = (17, 23, 9, 13)                  # 3, 3, 2, 2 chunks of 8
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=64,
+                                           allocator="paged", page_size=8,
+                                           prefill_chunk=8))
+    for i, l in enumerate(lens):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size,
+                                           (l,)).astype(np.int32),
+                           max_new_tokens=2))
+    eng.run_to_completion()
+    stats = eng.stats()
+    assert stats["prefill_chunks"] > len(lens)      # genuinely multi-chunk
+    assert stats["table_uploads_prefill"] <= len(lens)
+    assert (stats["table_uploads_prefill"]
+            <= stats["prefill_chunks"])

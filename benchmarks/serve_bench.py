@@ -37,12 +37,24 @@ platform-independent.
 full batch per allocator, gated on tok/s·batch *scaling* and on the
 hard paged >= contiguous throughput requirement (DESIGN.md §14).
 
+``--latency`` runs the Poisson open-loop latency arm instead
+(``BENCH_serve_latency.json``, DESIGN.md §15): mixed long/short traffic
+arrives on a pre-sampled Poisson schedule (tick-indexed, so both arms
+see the bit-identical workload) and the same stream is served under
+whole-prompt admission (``tick_budget=None``) vs chunked interleaved
+admission (``tick_budget`` set).  Reports p50/p99 time-to-first-token
+and inter-token latency per arm and hard-gates on (a) greedy output
+parity across the two modes and (b) interleaved admission cutting the
+in-flight p99 inter-token latency to <= half of whole-prompt admission
+— the "one long prompt stalls every stream" failure mode.
+
 Results are printed as CSV rows (same shape as benchmarks.run) and
 written to ``BENCH_serve_*.json`` so CI records the serving perf
 trajectory.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --sustained
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --latency
 """
 
 from __future__ import annotations
@@ -395,6 +407,135 @@ def sustained_bench(api, params, cfg, *, engine_kw, seed=0):
     }
 
 
+def _latency_arm(api, params, cfg, *, tick_budget, prompts, new_tokens,
+                 arrivals, engine_kw):
+    """Serve one pre-sampled open-loop arrival schedule to completion.
+
+    Arrivals are indexed by engine tick, not wall clock: request ``i``
+    is submitted just before the first ``step()`` whose tick index is
+    ``>= arrivals[i]``, whether or not the engine has caught up.  That
+    keeps the offered workload bit-identical across arms (same prompts,
+    same admission order, same queue pressure) so the output-parity
+    gate is meaningful, while TTFT/ITL are still measured in wall-clock
+    ms by the engine's per-tick timestamps.
+    """
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    eng = Engine(api, params, EngineConfig(tick_budget=tick_budget,
+                                           allocator="paged", **engine_kw))
+    done = []
+    tick = 0
+    nxt = 0
+    n = len(prompts)
+    while nxt < n or eng.active or eng.admitting or len(eng.scheduler):
+        while nxt < n and arrivals[nxt] <= tick:
+            eng.submit(Request(nxt, prompts[nxt],
+                               max_new_tokens=new_tokens[nxt]))
+            nxt += 1
+        done.extend(eng.step())
+        tick += 1
+        if tick > 200_000:
+            raise RuntimeError("latency arm did not drain")
+
+    from repro.analysis.serve_static import engine_desc
+
+    s = eng.stats()
+    lat = {
+        k: {"p50": round(s[f"{k}_p50"], 3),
+            "p99": round(s[f"{k}_p99"], 3),
+            "max": round(max(eng._lat[k], default=0.0), 3),
+            "samples": len(eng._lat[k])}
+        for k in ("ttft_ms", "itl_ms", "queued_ticks")
+    }
+    return {
+        "tick_budget": tick_budget,
+        "ticks": tick,
+        "requests": len(done),
+        "tokens": sum(len(r.output) for r in done),
+        "inflight_peak": engine_kw["max_batch"],
+        "paused_prefills": s["paused_prefills"],
+        "prefill_chunks": s["prefill_chunks"],
+        "engine": engine_desc(eng),
+        "retrace_budget": s["retrace_budget"],
+        **lat,
+    }, {r.request_id: r.output for r in done}
+
+
+def latency_bench(api, params, cfg, *, engine_kw, smoke, seed=0):
+    """Poisson open-loop latency arm (DESIGN.md §15).
+
+    Mixed traffic — a stream of short chat-sized prompts with long
+    decodes, plus a few long prompts dropped into the middle of the
+    stream — arrives on one pre-sampled Poisson (exponential
+    inter-arrival) schedule.  The identical schedule is served twice:
+
+      * **whole** — ``tick_budget=None``: an admission runs the full
+        prefill schedule inside one tick, so every in-flight decode
+        stream stalls for the entire long prompt.
+      * **interleaved** — ``tick_budget`` set: prefill advances at most
+        a budget's worth of (padded) chunk tokens per tick, between
+        decode ticks, so victims keep streaming while the long prompt
+        admits.
+
+    Hard gates: greedy outputs bit-identical across the two modes
+    (chunked admission may not change the model), and the interleaved
+    arm's in-flight p99 inter-token latency must be <= ``ITL_P99_MAX``
+    of the whole-prompt arm's — the headline continuous-batching claim.
+    """
+    import numpy as np
+
+    ITL_P99_MAX = 0.5  # interleaved p99 ITL must be <= half of whole's
+
+    if smoke:
+        n_short, long_plen, budget = 8, 160, 16
+        short_new, long_new, mean_gap = 24, 4, 3.0
+    else:
+        n_short, long_plen, budget = 24, 640, 2 * engine_kw["prefill_chunk"]
+        short_new, long_new, mean_gap = 32, 8, 3.0
+
+    rng = np.random.default_rng(seed)
+    prompts, new_tokens = [], []
+    # long prompts sit a third and two-thirds of the way into the
+    # arrival order so short streams are mid-decode when they land
+    long_at = {n_short // 3, (2 * n_short) // 3}
+    for i in range(n_short):
+        if i in long_at:
+            prompts.append(rng.integers(0, cfg.vocab_size,
+                                        (long_plen,)).astype(np.int32))
+            new_tokens.append(long_new)
+        prompts.append(rng.integers(0, cfg.vocab_size,
+                                    (int(rng.integers(4, 13)),))
+                       .astype(np.int32))
+        new_tokens.append(short_new)
+    gaps = rng.exponential(mean_gap, len(prompts))
+    arrivals = np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+    arms: dict = {}
+    outputs: dict = {}
+    for name, tb in (("whole", None), ("interleaved", budget)):
+        arms[name], outputs[name] = _latency_arm(
+            api, params, cfg, tick_budget=tb, prompts=prompts,
+            new_tokens=new_tokens, arrivals=arrivals, engine_kw=engine_kw)
+
+    whole_p99 = arms["whole"]["itl_ms"]["p99"]
+    inter_p99 = arms["interleaved"]["itl_ms"]["p99"]
+    gates = {
+        "parity": outputs["whole"] == outputs["interleaved"],
+        "itl_p99_cut": inter_p99 <= ITL_P99_MAX * whole_p99,
+    }
+    return {
+        "requests": len(prompts),
+        "long_plen": long_plen,
+        "tick_budget": budget,
+        "mean_gap_ticks": mean_gap,
+        "itl_p99_max_ratio": ITL_P99_MAX,
+        "itl_p99_ratio": round(inter_p99 / max(whole_p99, 1e-9), 4),
+        "arms": arms,
+        "gates": gates,
+        "ok": all(gates.values()),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -403,6 +544,10 @@ def main(argv=None) -> int:
                     help="run ONLY the sustained-load decode arm "
                          "(batch-scaling + hard paged>=contiguous gates; "
                          "writes BENCH_serve_sustained.json)")
+    ap.add_argument("--latency", action="store_true",
+                    help="run ONLY the Poisson open-loop latency arm "
+                         "(interleaved-vs-whole admission TTFT/ITL SLOs; "
+                         "writes BENCH_serve_latency.json)")
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--json", default=None,
@@ -438,6 +583,25 @@ def main(argv=None) -> int:
 
     api = get_model(cfg)
     params = unbox(api.init(jax.random.PRNGKey(args.seed)))
+
+    if args.latency:
+        latency = latency_bench(api, params, cfg, engine_kw=engine_kw,
+                                smoke=args.smoke, seed=args.seed)
+        with open("BENCH_serve_latency.json", "w") as f:
+            json.dump(latency, f, indent=2, sort_keys=True)
+        for name in ("whole", "interleaved"):
+            r = latency["arms"][name]
+            print(f"serve_latency_{name},{r['itl_ms']['p99'] * 1e3:.1f},"
+                  f"ttft_p50={r['ttft_ms']['p50']}ms;"
+                  f"ttft_p99={r['ttft_ms']['p99']}ms;"
+                  f"itl_p50={r['itl_ms']['p50']}ms;"
+                  f"itl_p99={r['itl_ms']['p99']}ms;"
+                  f"paused={r['paused_prefills']}", flush=True)
+        print(f"serve_latency_gates,0,"
+              f"{'OK' if latency['ok'] else 'FAIL ' + str(latency['gates'])}"
+              f";itl_p99_ratio={latency['itl_p99_ratio']}"
+              f" -> BENCH_serve_latency.json", flush=True)
+        return 0 if latency["ok"] else 1
 
     if args.sustained:
         sustained = sustained_bench(api, params, cfg, engine_kw=engine_kw,

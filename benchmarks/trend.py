@@ -44,6 +44,18 @@ METRICS = [
      "sustained contiguous full-batch tok/s", True),
     ("BENCH_serve_sustained.json", "scaling.paged",
      "sustained paged batch scaling", True),
+    # open-loop latency SLOs (DESIGN.md §15) — warn-only here; the hard
+    # interleaved-vs-whole p99-ITL gate lives inside serve_bench --latency
+    ("BENCH_serve_latency.json", "arms.interleaved.ttft_ms.p50",
+     "latency interleaved TTFT p50 ms", False),
+    ("BENCH_serve_latency.json", "arms.interleaved.ttft_ms.p99",
+     "latency interleaved TTFT p99 ms", False),
+    ("BENCH_serve_latency.json", "arms.interleaved.itl_ms.p99",
+     "latency interleaved ITL p99 ms", False),
+    ("BENCH_serve_latency.json", "arms.whole.itl_ms.p99",
+     "latency whole-admission ITL p99 ms", False),
+    ("BENCH_serve_latency.json", "itl_p99_ratio",
+     "latency ITL p99 ratio (interleaved/whole)", False),
     ("BENCH_serve_prefix.json", "arms.cache_on.tok_per_s",
      "prefix cache-on tok/s", True),
     ("BENCH_serve_prefix.json", "arms.cache_on.prefill_compiles",

@@ -10,6 +10,11 @@ host code:
    buckets), using the *same* pure scheduling functions the engine runs
    (``repro.serve.engine.prefill_schedule`` / ``decode_table_width``),
    and proves the compile set finite and within the declared budget.
+   :func:`verify_chunk_resume` extends the proof to continuous batching
+   (DESIGN.md §15): resuming a partially-executed schedule at any chunk
+   boundary (``prefill_schedule(start=pos)``) reproduces the original
+   schedule's suffix exactly, so interleaved chunked prefill adds zero
+   trace signatures beyond the whole-prompt enumeration.
    :func:`verify_engine_signatures` then traces each enumerated
    signature abstractly (``jax.eval_shape``) against a live engine,
    proving each is actually traceable; :func:`cross_check_bench`
@@ -42,11 +47,12 @@ import re
 from pathlib import Path
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 __all__ = [
     "retrace_budget", "enumerate_prefill_buckets",
-    "enumerate_decode_buckets", "verify_engine_signatures",
+    "enumerate_decode_buckets", "verify_chunk_resume",
+    "verify_engine_signatures",
     "audit_sync_sites", "sync_summary", "tick_path_functions",
     "classify_sync_call", "find_sync_tag", "roofline_engine",
     "engine_desc", "analyze_serve", "cross_check_bench",
@@ -94,6 +100,60 @@ def enumerate_decode_buckets(*, max_len: int, page_size: int,
                    for n in range(1, max_len + 1)})
 
 
+def verify_chunk_resume(*, max_len: int, prefill_chunk: int,
+                        bucketed: bool, page_size: Optional[int] = None,
+                        prefix_cache: bool = False) -> Dict[str, Any]:
+    """Prove chunk-granular resume (continuous batching, DESIGN.md §15)
+    adds no trace signatures.
+
+    The engine fixes a request's schedule at staging and indexes into it
+    across ticks, but a paused-then-restaged admission (and the proof of
+    the engine's *right* to do so) rests on the schedule being
+    memoryless in the resume position: for every admissible
+    ``(prompt_len, credit)`` pair, recomputing the schedule at the first
+    chunk boundary (``start = min(credit + chunk, prompt_len)``) must
+    reproduce the original schedule's suffix exactly.  Checking the
+    k=1 boundary suffices by induction — the recomputed schedule is
+    itself an instance of the same recurrence one chunk further along,
+    so suffix equality at every boundary follows from equality at the
+    first.  ``new_widths`` would list any resumed chunk width outside
+    the whole-prompt enumeration (must be empty: resumed execution can
+    then never trace a signature the warmup/proof missed)."""
+    from repro.serve.engine import prefill_schedule
+
+    base_widths: Set[int] = set()
+    resumed_widths: Set[int] = set()
+    resume_points = 0
+    suffix_exact = True
+    for plen in range(1, max_len):
+        starts: Sequence[int] = (0,)
+        if prefix_cache and page_size:
+            cap = ((plen - 1) // page_size) * page_size
+            starts = range(0, cap + 1, page_size)
+        for credit in starts:
+            sched = prefill_schedule(plen, chunk=prefill_chunk,
+                                     max_len=max_len, bucketed=bucketed,
+                                     start=credit)
+            base_widths.update(w for _s, w in sched)
+            if len(sched) < 2:
+                continue          # single-chunk schedules never resume
+            pos1 = min(credit + prefill_chunk, plen)
+            resumed = prefill_schedule(plen, chunk=prefill_chunk,
+                                       max_len=max_len, bucketed=bucketed,
+                                       start=pos1)
+            resume_points += 1
+            if resumed != sched[1:]:
+                suffix_exact = False
+            resumed_widths.update(w for _s, w in resumed)
+    new = sorted(resumed_widths - base_widths)
+    return {
+        "resume_points": resume_points,
+        "suffix_exact": suffix_exact,
+        "new_widths": new,
+        "closed": suffix_exact and not new,
+    }
+
+
 def retrace_budget(*, bucketed: bool, paged: bool, max_len: int,
                    prefill_chunk: int, page_size: Optional[int] = None,
                    pages_per_slot: Optional[int] = None,
@@ -130,17 +190,22 @@ def retrace_budget(*, bucketed: bool, paged: bool, max_len: int,
     proven_total = len(prefill) + proven_decode + pool_copy
     declared_total = (declared if declared is not None
                       else declared_prefill + declared_decode + pool_copy)
+    resume = verify_chunk_resume(
+        max_len=max_len, prefill_chunk=prefill_chunk, bucketed=bucketed,
+        page_size=page_size if paged else None, prefix_cache=prefix_cache)
     return {
         "prefill": {"bucketed": bucketed, "buckets": prefill,
                     "proven": len(prefill), "declared": declared_prefill},
         "decode": {"paged": paged, "buckets": decode,
                    "proven": proven_decode, "declared": declared_decode},
         "pool_copy": {"proven": pool_copy, "declared": pool_copy},
+        "chunk_resume": resume,
         "proven_total": proven_total,
         "declared_total": declared_total,
         "within_budget": (len(prefill) <= declared_prefill
                           and proven_decode <= declared_decode
-                          and proven_total <= declared_total),
+                          and proven_total <= declared_total
+                          and resume["closed"]),
     }
 
 
@@ -221,9 +286,13 @@ _SYNC_TAG_RE = re.compile(
 _TICK_FREQ = {
     "step": "tick", "run_to_completion": "tick", "_flush_tables": "tick",
     "_decode_table_width": "tick", "_select": "tick", "_decode_step": "tick",
+    "_prefill_quota": "tick", "_next_key": "tick",
     "_ensure_pages": "growth", "_mark_tables_dirty": "growth",
-    "_admit": "admission", "_stage_slot": "admission",
-    "_prefill": "admission", "_prefix_credit": "admission",
+    "_run_prefills": "admission", "_advance_one": "admission",
+    "_plan_chunks": "admission", "_batch_cost": "admission",
+    "_reserve_chunks": "admission", "_stage_slot": "admission",
+    "_exec_chunks": "admission", "_complete_admission": "admission",
+    "_unwind_slot": "admission", "_prefix_credit": "admission",
     "_prefill_schedule": "admission", "_prefill_chunk": "admission",
     "_slot_view": "admission", "_merge_view": "admission",
     "_set_view_cursor": "admission", "_prefill_extent": "admission",
@@ -487,6 +556,9 @@ def engine_desc(engine) -> Dict[str, Any]:
         "pages_per_slot": (engine.alloc.pages_per_slot
                            if engine.paged else None),
         "prefix_cache": engine.prefix is not None,
+        # continuous batching: the token-budget pace changes *when*
+        # chunks run, never their trace signatures (verify_chunk_resume)
+        "tick_budget": engine.cfg.tick_budget,
         # warmup="decode" pre-traces the proven ladder at construction,
         # so measured decode_compiles == the proven bound up front (the
         # cross-check budget itself is warmup-independent: warming adds
@@ -603,6 +675,14 @@ def format_serve_report(doc: Dict[str, Any]) -> str:
             f"/{r['decode']['declared']} "
             f"({'within' if r['within_budget'] else 'OVER'} budget, "
             f"total {r['proven_total']}/{r['declared_total']})")
+        cr = r.get("chunk_resume")
+        if cr:
+            lines.append(
+                f"  [{alloc}] chunk resume: {cr['resume_points']} resume "
+                f"points, suffix "
+                f"{'exact' if cr['suffix_exact'] else 'MISMATCH'}, "
+                f"new widths {cr['new_widths']} -> "
+                f"{'closed' if cr['closed'] else 'OPEN'}")
         roof = arm["roofline"]
         dmax = roof["decode"].get("max")
         if dmax:

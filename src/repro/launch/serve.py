@@ -12,7 +12,11 @@ the dense per-slot baseline; the default is the paged block-table cache
 with the radix prefix index on.  ``--shared-prefix N`` makes every
 synthetic prompt share an N-token prefix (system-prompt traffic) so the
 cache has something to hit; ``--scheduler prefix`` admits
-resident-prefix requests first.
+resident-prefix requests first.  ``--tick-budget N`` turns on chunked
+prefill-decode interleaving (DESIGN.md §15): each tick spends at most N
+padded prefill tokens between decode steps, so long prompts admit over
+several ticks instead of stalling every in-flight stream;
+``--chunk-tokens`` (alias of ``--prefill-chunk``) sets the chunk width.
 """
 
 from __future__ import annotations
@@ -42,7 +46,15 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged pool size (default: full capacity)")
-    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--prefill-chunk", "--chunk-tokens", type=int,
+                    default=32, dest="prefill_chunk",
+                    help="prefill chunk width in tokens (page-aligned; "
+                         "--chunk-tokens is an alias)")
+    ap.add_argument("--tick-budget", type=int, default=None,
+                    help="max (padded) prefill tokens executed per engine "
+                         "tick — enables chunked prefill-decode "
+                         "interleaving (DESIGN.md §15); default: whole-"
+                         "prompt admission")
     ap.add_argument("--scheduler", choices=("fifo", "priority", "prefix"),
                     default="fifo", help="admission policy")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
@@ -83,6 +95,7 @@ def main(argv=None):
                               page_size=args.page_size,
                               num_pages=args.num_pages,
                               prefill_chunk=args.prefill_chunk,
+                              tick_budget=args.tick_budget,
                               prefix_cache=args.prefix_cache,
                               scheduler=args.scheduler,
                               greedy=not args.sample,
@@ -117,6 +130,11 @@ def main(argv=None):
              stats["prefix_hit_tokens"], stats["prefix_hit_requests"],
              stats["forked_pages"], stats["evictions"],
              stats["cached_pages"])
+    log.info("latency: ttft p50=%.1fms p99=%.1fms | itl p50=%.2fms "
+             "p99=%.2fms | queued_ticks p99=%.0f | paused_prefills=%d",
+             stats["ttft_ms_p50"], stats["ttft_ms_p99"],
+             stats["itl_ms_p50"], stats["itl_ms_p99"],
+             stats["queued_ticks_p99"], stats["paused_prefills"])
     for r in done[:3]:
         log.info("req %d -> %s...", r.request_id, r.output[:8])
     return 0

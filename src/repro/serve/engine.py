@@ -17,10 +17,24 @@ Design (vLLM-style scheduling on a slot pool, TPU-friendly static shapes):
     prompt lengths; near ``max_len`` the bucketed chunk is left-shifted
     over already-written positions (idempotent rewrites of identical KV
     rows) so the write window never overruns the buffer.
+  * **Continuous batching** (DESIGN.md §15): with ``EngineConfig.
+    tick_budget`` set, prefill chunks are scheduled *between* decode
+    ticks — the scheduler's ``prefill_quota`` token-budget policy decides
+    how many prompt tokens each tick spends on chunked prefill while
+    every active slot keeps decoding, so one long prompt can no longer
+    stall in-flight streams.  A partially-prefilled admission is
+    first-class engine state (``Engine.admitting``: slot claimed, prefix
+    credit mounted, schedule partially executed); page growth and CoW
+    forks happen lazily, per chunk batch actually executed.  With
+    ``tick_budget=None`` (default) the whole schedule still runs inside
+    the admission tick — same code path, same trace signatures.
   * Every engine tick runs one decode step for all active slots together
     (inactive rows compute garbage that is ignored — static shapes, no
     recompilation; under paging their scatter lands on the reserved
-    trash page).
+    trash page).  Mid-prefill rows ride through decode too: their device
+    cursor stays pinned at the resume position, so each tick's garbage
+    write lands inside the next chunk's rewrite window (or on the trash
+    page at a page boundary) — never on a shared or already-final row.
   * A request finishes on EOS or at max_new_tokens — including an EOS
     produced by prefill itself, which finishes the request at admission,
     same tick.  Slots whose cache hits ``max_len`` are hard-stopped
@@ -48,6 +62,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -87,6 +102,29 @@ class Request:
     output: Optional[list] = None
     truncated: bool = False        # hard-stopped at max_len / page pool dry
     arrival: int = -1              # submit order (scheduler tiebreak)
+    # latency accounting (Engine.stats aggregates p50/p99): stamped from
+    # one wall-clock read per tick, so the counters cost no extra syscalls
+    queued_ticks: int = -1         # ticks spent waiting for a slot
+    ttft_ms: float = -1.0          # submit -> first token
+    _t_submit: float = -1.0
+    _t_last: float = -1.0          # previous token's tick timestamp
+    _tick_submit: int = -1
+
+
+@dataclasses.dataclass
+class _PartialPrefill:
+    """A chunked admission in flight: slot claimed, prefix credit
+    mounted, schedule partially executed — first-class engine state
+    (``Engine.admitting``, DESIGN.md §15).  ``pos`` is the resume
+    point: prompt tokens covered so far (device KV rows [0, pos) are
+    final); the slot's device cursor is pinned there between ticks."""
+    req: Request
+    schedule: List[Tuple[int, int]]
+    credit: int = 0                # prefix-cache tokens mounted at staging
+    next_chunk: int = 0            # index of the first unexecuted chunk
+    pos: int = 0                   # tokens covered (== credit at staging)
+    executed: int = 0              # chunks run so far (0 => clean unwind)
+    last_tok: Optional[int] = None # the prefill-produced first token
 
 
 @dataclasses.dataclass
@@ -102,6 +140,15 @@ class EngineConfig:
     prefix_cache: bool = True      # shared-prefix radix index over the
                                    # paged pool (DESIGN.md §11); no-op for
                                    # contiguous slots / recurrent carries
+    tick_budget: Optional[int] = None  # continuous batching: max tokens
+                                   # (decode + padded prefill-chunk
+                                   # widths) one tick may execute.  None:
+                                   # whole-prompt admission (legacy).
+                                   # The scheduler's prefill_quota policy
+                                   # splits it (decode-first by default);
+                                   # ignored for recurrent families,
+                                   # whose carries would absorb the
+                                   # interleaved ticks' pad garbage
     scheduler: Any = "fifo"        # admission policy name or Scheduler
                                    # instance ("fifo"|"priority"|"prefix")
     warmup: str = "none"           # "decode": pre-trace the decode step's
@@ -233,15 +280,33 @@ class Engine:
                      "carries cannot skip prefill)", fam)
         self.scheduler = make_scheduler(cfg.scheduler)
         self.active: Dict[int, Request] = {}     # slot -> request
+        # slot -> in-flight chunked admission (insertion order == staging
+        # order; resumed FIFO each tick before new admissions)
+        self.admitting: Dict[int, _PartialPrefill] = {}
+        if cfg.tick_budget is not None:
+            if cfg.tick_budget < 1:
+                raise ValueError(
+                    f"tick_budget must be >= 1 (or None), got "
+                    f"{cfg.tick_budget}")
+            if not self._bucketed:
+                log.info("family %r prefills exact-length whole prompts "
+                         "(recurrent carries); tick_budget ignored", fam)
         self.counters: Dict[str, int] = {
             "prefix_hit_tokens": 0, "prefix_hit_requests": 0,
             "forked_pages": 0, "prefill_tokens": 0,
             "generated_tokens": 0, "finished_requests": 0,
             "table_uploads": 0, "table_uploads_decode": 0,
             "table_uploads_prefill": 0, "decode_ticks": 0,
-            "prefill_chunks": 0}
+            "prefill_chunks": 0, "paused_prefills": 0}
         self._arrival = 0
+        self._tick = 0
         self._admission_backoff = False
+        self._prefill_stalled = False
+        self._progressed = False
+        # per-request latency samples (finished or streaming): stats()
+        # reports p50/p99 over these
+        self._lat: Dict[str, List[float]] = {
+            "ttft_ms": [], "itl_ms": [], "queued_ticks": []}
         self._key = jax.random.PRNGKey(seed)
         self.decode_plan = self._plan_decode()
         if self.decode_plan is not None:
@@ -302,6 +367,18 @@ class Engine:
         if self.paged:
             s["pages_in_use"] = self.alloc.pages_in_use
             s["high_water_pages"] = self.alloc.high_water_pages
+        s["inflight_prefills"] = len(self.admitting)
+        # per-request latency percentiles, fed by tick timestamps:
+        # ttft_ms (submit -> first token), itl_ms (token -> next token,
+        # in-flight streams included), queued_ticks (submit -> slot)
+        for k, vals in self._lat.items():
+            if vals:
+                arr = np.asarray(vals)
+                s[f"{k}_p50"] = float(np.percentile(arr, 50))
+                s[f"{k}_p99"] = float(np.percentile(arr, 99))
+            else:
+                s[f"{k}_p50"] = s[f"{k}_p99"] = 0.0
+        s["latency_samples"] = {k: len(v) for k, v in self._lat.items()}
         return s
 
     def _paged_eligible(self):
@@ -410,10 +487,21 @@ class Engine:
             self._retrace_budget_cache = {
                 "prefill_proven": b["prefill"]["proven"],
                 "decode_proven": b["decode"]["proven"],
+                "chunk_resume_closed": b["chunk_resume"]["closed"],
                 "within_declared": b["within_budget"]}
         return dict(self._retrace_budget_cache)
 
     # ---- jitted kernels ----
+    def _next_key(self) -> jax.Array:
+        """Per-step sampling key.  Greedy decoding takes argmax — the key
+        is dead — so the host-side ``jax.random.split`` is skipped
+        entirely and every step reuses the root key (bit-identical
+        outputs either way; sampling mode still splits per step)."""
+        if self.cfg.greedy:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def _select(self, logits, key):
         """(n, V) logits -> (n,) int32 next tokens (greedy or sampled)."""
         if self.cfg.greedy:
@@ -521,31 +609,36 @@ class Engine:
             self._mark_tables_dirty()
         return True
 
-    def _prefill(self, slot: int, req: Request, schedule) -> int:
-        """Single-row chunked prefill of ``req`` into ``slot``.  Returns
-        the first generated token."""
+    def _exec_chunks(self, slot: int, part: _PartialPrefill, upto: int,
+                     now: float) -> Optional[Request]:
+        """Run schedule chunks ``[part.next_chunk, upto)`` through the
+        jitted single-row prefill.  The caller reserved the pages
+        (``_reserve_chunks``) and flushed the table mirror, so the view's
+        block-table row is final for every chunk in the batch.  Between
+        ticks the merged view's cursor is pinned to the resume point
+        ``pos`` — an interleaved decode tick's garbage write lands at
+        ``pos``, inside the next chunk's write window (windows always
+        cover the resume position), so it is rewritten idempotently.
+        Returns the finished request when the batch completed the
+        schedule AND its first token was terminal (finish at admission),
+        else None."""
+        req = part.req
         prompt = np.asarray(req.prompt, np.int32)  # sync: host — the prompt is host-resident numpy, nothing crosses the link
         L = len(prompt)
-        # admission pre-reserved pages for the full write extent — push
-        # the batched table mirror BEFORE taking the view, so the view's
-        # block-table row is final for every chunk.  Audited invariant
-        # (bench-gated: table_uploads_prefill <= prefill_chunks): this is
-        # the ONE prefill-side table upload per admission — nothing in
-        # the chunk loop below marks the mirror dirty, so a multi-chunk
-        # prompt still costs a single upload, not one per chunk
-        self._flush_tables("prefill")
         view = self._slot_view(slot)
         nxt = None
-        for i, (start, cb) in enumerate(schedule):
+        last_i = len(part.schedule) - 1
+        for i in range(part.next_chunk, upto):
+            start, cb = part.schedule[i]
             real = min(start + cb, L) - start
             toks = np.zeros((1, cb), np.int32)
             toks[0, :real] = prompt[start:start + real]
             if self._bucketed:
                 view = self._set_view_cursor(view, start)
-            last = L - 1 - start if i == len(schedule) - 1 else real - 1
+            last = L - 1 - start if i == last_i else real - 1
             self._prefill_buckets.add(cb)
             self.counters["prefill_chunks"] += 1
-            self._key, sub = jax.random.split(self._key)
+            sub = self._next_key()
             nxt, view = self._jit_prefill_chunk(
                 self.params,
                 jnp.asarray(toks),   # sync: required — prompt-chunk upload (admission-rate, not per-tick)
@@ -558,10 +651,26 @@ class Engine:
                 kv = self.states.kv
                 self.states = self.states._replace(
                     kv=kv._replace(k=view.kv.k, v=view.kv.v))
+            # each schedule entry covers exactly min(chunk, L - pos) new
+            # tokens (left-shifted windows rewrite, they don't advance)
+            part.pos = min(part.pos + self.cfg.prefill_chunk, L)
+            part.executed += 1
+        part.next_chunk = upto
+        self._progressed = True
+        done = upto == len(part.schedule)
         if self._bucketed:
-            view = self._set_view_cursor(view, L)
+            view = self._set_view_cursor(view, L if done else part.pos)
         self._merge_view(slot, view)
-        return int(nxt)  # sync: required — prefill's first token feeds host-side finish/stream logic
+        # host cursor tracks the resume point so the decode tick's
+        # clamped table width covers the mid-prefill row's page
+        self.alloc.slots[slot].length = part.pos
+        if not done:
+            log.debug("request %d prefilled to %d/%d tokens (chunk "
+                      "%d/%d)", req.request_id, part.pos, L,
+                      part.next_chunk, len(part.schedule))
+            return None
+        part.last_tok = int(nxt)  # sync: required — prefill's first token feeds host-side finish/stream logic
+        return self._complete_admission(slot, now)
 
     # ---- public API ----
     def submit(self, req: Request):
@@ -599,6 +708,8 @@ class Engine:
         req.output = []
         req.truncated = False
         req.arrival = self._arrival
+        req._t_submit = time.perf_counter()
+        req._tick_submit = self._tick
         self._arrival += 1
         self.scheduler.add(req)
 
@@ -669,53 +780,110 @@ class Engine:
         self._mark_tables_dirty()
 
     def _stage_slot(self, slot: int, req: Request, credit: int,
-                    pages: List[int]) -> Optional[List[Tuple[int, int]]]:
-        """Mount the prefix credit, grow the block table over the prefill
-        write extent + first decode row, and CoW-fork any shared page the
-        bucketed schedule would rewrite.  Returns the prefill schedule
-        the fork analysis covered (the caller must prefill exactly it),
-        or None when the page pool ran dry (caller scrubs the slot and
-        backs off or retries uncached)."""
+                    pages: List[int]) -> List[Tuple[int, int]]:
+        """Mount the prefix credit and fix the admission's prefill
+        schedule.  Staging is allocation-free: page growth and CoW forks
+        happen lazily, per chunk batch actually executed
+        (``_reserve_chunks``) — a chunk the token budget defers to a
+        later tick allocates nothing now."""
         if credit:
             self.alloc.map_shared(slot, pages)
             self._mark_tables_dirty()
-        schedule = self._prefill_schedule(len(req.prompt), start=credit)
-        # cover the prefill write extent AND the first decode tick's
-        # KV row (the slot decodes this very tick, before the next
-        # tick's growth pass runs)
-        need = max(max(s + c for s, c in schedule), len(req.prompt) + 1)
-        if self.paged and not self._ensure_pages(slot, need):
-            return None
-        if credit:
+        return self._prefill_schedule(len(req.prompt), start=credit)
+
+    def _reserve_chunks(self, slot: int, part: _PartialPrefill,
+                        upto: int) -> bool:
+        """Grow the block table and CoW-fork shared pages for schedule
+        chunks ``[part.next_chunk, upto)`` — exactly the batch the caller
+        is about to execute this tick.  Returns False when the page pool
+        ran dry even after reclaim (caller unwinds a zero-progress
+        admission or pauses a half-prefilled one; pages grabbed before
+        the exhaustion stay mapped — they are reclaimed with the slot)."""
+        if not self.paged or upto <= part.next_chunk:
+            return True
+        chunks = part.schedule[part.next_chunk:upto]
+        need = max(s + c for s, c in chunks)
+        if upto == len(part.schedule):
+            # the final batch also covers the first decode tick's KV row
+            # (the slot decodes the tick it completes, before the next
+            # growth pass runs)
+            need = max(need, len(part.req.prompt) + 1)
+        if not self._ensure_pages(slot, need):
+            return False
+        if part.credit:
             # copy-on-write: the only engine writes below the credit are
             # near-max_len bucketed chunks left-shifting over already-
             # written positions.  The rewrite is idempotent (same tokens,
             # same positions) but must not scatter into pages the index /
-            # other slots still reference — fork those first.
+            # other slots still reference — fork those first, and only
+            # for the chunks executing this tick (DESIGN.md §15)
             ps = self.cfg.page_size
-            for start, cb in schedule:
-                if start >= credit:
+            for start, cb in chunks:
+                if start >= part.credit:
                     continue
                 lo = start // ps
-                hi = -(-min(start + cb, credit) // ps)
+                hi = -(-min(start + cb, part.credit) // ps)
                 for lp in range(lo, hi):
                     if self.alloc.writable(slot, lp):
                         continue
                     fork = self.alloc.fork(slot, lp)
                     if fork is None:
-                        return None
+                        return False
                     self._copy_page(*fork)
                     self._mark_tables_dirty()
                     self.counters["forked_pages"] += 1
                     log.debug("CoW fork: slot %d logical page %d "
                               "(%d -> %d)", slot, lp, *fork)
-        return schedule
+        return True
 
-    def _append_token(self, req: Request, tok: int):
-        """Record a generated token and fire the streaming callback."""
+    def _prefill_quota(self) -> Optional[int]:
+        """This tick's chunked-prefill token quota (None = unbounded),
+        from the scheduler's token-budget policy.  Recurrent families
+        always prefill whole prompts — their carries would absorb the
+        interleaved ticks' pad garbage — so the budget only paces
+        cursor-guarded (bucketed) families."""
+        if not self._bucketed:
+            return None
+        fn = getattr(self.scheduler, "prefill_quota", None)
+        if fn is None:     # custom Scheduler predating the budget policy
+            budget = self.cfg.tick_budget
+            return (None if budget is None
+                    else max(0, budget - len(self.active)))
+        return fn(self, len(self.active))
+
+    def _plan_chunks(self, part: _PartialPrefill, quota: Optional[int],
+                     spent: int) -> int:
+        """How far into the partial's schedule this tick may execute:
+        returns ``upto`` (chunk index).  The budget charges *padded*
+        widths (what jit executes).  The tick's first chunk always fits
+        when the quota is positive — overshoot is bounded by one bucket
+        — so a small budget slows admission instead of stalling it."""
+        upto, cost = part.next_chunk, 0
+        for _s, cb in part.schedule[part.next_chunk:]:
+            if quota is not None and spent + cost + cb > quota and (
+                    spent or cost or quota <= 0):
+                break
+            upto += 1
+            cost += cb
+        return upto
+
+    def _batch_cost(self, part: _PartialPrefill, upto: int) -> int:
+        return sum(cb for _s, cb in part.schedule[part.next_chunk:upto])
+
+    def _append_token(self, req: Request, tok: int,
+                      now: Optional[float] = None):
+        """Record a generated token, stamp its latency sample, and fire
+        the streaming callback."""
         tok = int(tok)  # sync: host — tok is already a host-side numpy scalar here
         req.output.append(tok)
         self.counters["generated_tokens"] += 1
+        if now is not None:
+            if len(req.output) == 1:
+                req.ttft_ms = (now - req._t_submit) * 1e3
+                self._lat["ttft_ms"].append(req.ttft_ms)
+            else:
+                self._lat["itl_ms"].append((now - req._t_last) * 1e3)
+            req._t_last = now
         if req.on_token is not None:
             try:
                 req.on_token(req, tok)
@@ -724,12 +892,108 @@ class Engine:
                     "on_token callback failed for request %d",
                     req.request_id)
 
-    def _admit(self) -> List[Request]:
+    def _unwind_slot(self, slot: int):
+        """Give a claimed slot (and every page it mapped) back, and scrub
+        its device row so the inactive row's decode scatter lands on the
+        trash page instead of pages the old mapping pointed at."""
+        self.alloc.release(slot)
+        if self.paged:
+            self._scrub_slot_device(slot)
+
+    def _complete_admission(self, slot: int,
+                            now: float) -> Optional[Request]:
+        """The partial finished its whole schedule: promote it to an
+        active (decoding) slot and account the admission.  Returns the
+        request when its first (prefill-produced) token was terminal —
+        EOS or max_new_tokens=1 — i.e. finish at admission."""
+        part = self.admitting.pop(slot)
+        req = part.req
+        self.active[slot] = req
+        self.alloc.slots[slot].length = len(req.prompt)
+        self.counters["prefill_tokens"] += len(req.prompt) - part.credit
+        if part.credit:
+            self.counters["prefix_hit_tokens"] += part.credit
+            self.counters["prefix_hit_requests"] += 1
+        self._append_token(req, part.last_tok, now)
+        nxt = req.output[-1]
+        done = (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and nxt == req.eos_id))
+        if done:
+            log.debug("request %d finished at admission", req.request_id)
+            return self._finish(slot)
+        log.debug("admitted request %d into slot %d (prefix credit "
+                  "%d tokens)", req.request_id, slot, part.credit)
+        return None
+
+    def _advance_one(self, slot: int, quota: Optional[int], spent: int,
+                     now: float,
+                     reserved_upto: Optional[int] = None
+                     ) -> Tuple[int, Optional[Request]]:
+        """Advance one in-progress admission by this tick's share of the
+        token budget: plan the chunk batch, reserve its pages/forks,
+        execute.  Returns (padded tokens spent, finished request or
+        None).  Reservation failure on a zero-progress credit admission
+        re-stages uncached (the cache must never block an admission an
+        empty cache would allow); any other failure pauses the partial in
+        place — slot, pages, and executed chunks are all kept, and the
+        request resumes when the pool frees up."""
+        part = self.admitting[slot]
+        upto = reserved_upto
+        if upto is not None:
+            if upto == part.next_chunk:
+                return 0, None          # staged with zero budget left
+        else:
+            upto = self._plan_chunks(part, quota, spent)
+            if upto == part.next_chunk:
+                return 0, None          # budget spent: defer to next tick
+            if not self._reserve_chunks(slot, part, upto):
+                if part.credit and part.executed == 0:
+                    # scrub the mounted credit and retry uncached, still
+                    # as the same in-progress admission (same slot id)
+                    req = part.req
+                    del self.admitting[slot]
+                    self._unwind_slot(slot)
+                    slot2 = self.alloc.claim(req.request_id)
+                    fresh = _PartialPrefill(
+                        req=req, schedule=self._stage_slot(slot2, req, 0, []))
+                    self.admitting[slot2] = fresh
+                    self.states = _reset_slot(self.states, slot2)
+                    if self.paged:
+                        self._mark_tables_dirty()
+                    return self._advance_one(slot2, quota, spent, now)
+                self._prefill_stalled = True
+                self.counters["paused_prefills"] += 1
+                log.debug("request %d paused mid-prefill at %d/%d tokens "
+                          "(page pool dry)", part.req.request_id, part.pos,
+                          len(part.req.prompt))
+                return 0, None
+        cost = self._batch_cost(part, upto)
+        # the batch's table edits (growth + forks) ride ONE upload
+        self._flush_tables("prefill")
+        return cost, self._exec_chunks(slot, part, upto, now)
+
+    def _run_prefills(self, quota: Optional[int],
+                      now: float) -> List[Request]:
+        """The tick's chunked-prefill pass: resume in-progress admissions
+        first (FIFO in staging order), then admit from the scheduler
+        while slots and budget allow.  Admission itself (claim + stage)
+        is allocation-free, so new requests keep entering ``admitting``
+        even after the budget is spent — their chunks run on later
+        ticks."""
         finished: List[Request] = []
         # distinguishes "admission failed on an offered request" (a stuck
         # engine if nothing is active) from "the scheduler deferred"
         # (next() -> None — a policy choice, keep ticking)
         self._admission_backoff = False
+        self._prefill_stalled = False
+        spent = 0
+        for slot in list(self.admitting):
+            if slot not in self.admitting:
+                continue        # re-staged uncached under a new slot id
+            cost, fin = self._advance_one(slot, quota, spent, now)
+            spent += cost
+            if fin is not None:
+                finished.append(fin)
         while len(self.scheduler):
             req = self.scheduler.next(self)
             if req is None:
@@ -739,54 +1003,84 @@ class Engine:
                 self._admission_backoff = True
                 break
             credit, pages = self._prefix_credit(req)
-            schedule = self._stage_slot(slot, req, credit, pages)
-            if schedule is None and credit:
-                # pool dry with the credit mounted (fresh suffix pages or
-                # CoW forks short): the cache must never block an
-                # admission an empty cache would allow — scrub the slot
-                # and retry uncached (eviction freed what it could).  The
-                # failed attempt may already have mirrored its table row
-                # into device state — zero it, or this (inactive) row's
-                # decode scatter would corrupt the mounted shared pages
-                self.alloc.release(slot)
-                if self.paged:
-                    self._scrub_slot_device(slot)
-                slot = self.alloc.claim(req.request_id)
-                credit, pages = 0, []
-                schedule = self._stage_slot(slot, req, credit, pages)
-            if schedule is None:
-                # free list dry: back off, retry when a slot releases pages
-                self.alloc.release(slot)
-                if self.paged:
-                    self._scrub_slot_device(slot)
-                self._admission_backoff = True
-                break
+            part = _PartialPrefill(
+                req=req, schedule=self._stage_slot(slot, req, credit, pages),
+                credit=credit, pos=credit)
+            # reserve the first chunk batch BEFORE dequeuing: a pool-dry
+            # admission unwinds with the request still queued (retried
+            # uncached when a credit was mounted, backed off otherwise)
+            upto = self._plan_chunks(part, quota, spent)
+            if not self._reserve_chunks(slot, part, upto):
+                self._unwind_slot(slot)
+                if credit:
+                    # the cache must never block an admission an empty
+                    # cache would allow — retry uncached (eviction freed
+                    # what it could)
+                    slot = self.alloc.claim(req.request_id)
+                    credit, pages = 0, []
+                    part = _PartialPrefill(
+                        req=req,
+                        schedule=self._stage_slot(slot, req, 0, []))
+                    upto = self._plan_chunks(part, quota, spent)
+                    if not self._reserve_chunks(slot, part, upto):
+                        self._unwind_slot(slot)
+                        self._admission_backoff = True
+                        break
+                else:
+                    self._admission_backoff = True
+                    break
             self.scheduler.remove(req)
-            self.active[slot] = req
-            # reset this slot's cursor/recurrent state, then prefill the
-            # uncached suffix (device table row = shared + fresh + forks)
+            req.queued_ticks = max(0, self._tick - req._tick_submit - 1)
+            self._lat["queued_ticks"].append(req.queued_ticks)
+            self.admitting[slot] = part
+            self._progressed = True   # claiming + staging IS progress
+            # reset this slot's cursor/recurrent state before any chunk
+            # runs (device table row = shared + fresh + forks)
             self.states = _reset_slot(self.states, slot)
+            if self._bucketed and part.pos:
+                # pin the device cursor at the resume point right away: a
+                # credit-mounted partial that executes no chunk this tick
+                # still rides the decode step, and an unpinned (zero)
+                # cursor would scatter its garbage row into the first
+                # SHARED page instead of past the mount (page-aligned
+                # credit → the write lands on an unmapped logical page →
+                # trash page 0)
+                kv = self.states.kv
+                self.states = self.states._replace(kv=kv._replace(
+                    length=kv.length.at[:, slot].set(part.pos)))
             if self.paged:
                 self._mark_tables_dirty()
-            # the schedule the fork analysis covered — prefill exactly it
-            nxt = self._prefill(slot, req, schedule)
-            self.alloc.slots[slot].length = len(req.prompt)
-            self.counters["prefill_tokens"] += len(req.prompt) - credit
-            if credit:
-                self.counters["prefix_hit_tokens"] += credit
-                self.counters["prefix_hit_requests"] += 1
-            self._append_token(req, nxt)
-            # EOS/max_new_tokens can trigger on the very first
-            # (prefill-produced) token — finish at admission, same tick
-            done = (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and nxt == req.eos_id))
-            if done:
-                finished.append(self._finish(slot))
-                log.debug("request %d finished at admission", req.request_id)
-            else:
-                log.debug("admitted request %d into slot %d (prefix credit "
-                          "%d tokens)", req.request_id, slot, credit)
+            cost, fin = self._advance_one(slot, quota, spent, now,
+                                          reserved_upto=upto)
+            spent += cost
+            if fin is not None:
+                finished.append(fin)
         return finished
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a request wherever it lives: still queued (dequeue),
+        mid-prefill (unwind the slot — nothing is cached; the partial KV
+        rows were never validated by a finish), or actively decoding
+        (finish now with ``truncated=True``; the generated prefix is
+        cached as usual).  Returns False when the id is unknown (already
+        finished counts as unknown)."""
+        for req in self.scheduler.pending():
+            if req.request_id == request_id:
+                self.scheduler.remove(req)
+                req.truncated = True
+                return True
+        for slot, part in list(self.admitting.items()):
+            if part.req.request_id == request_id:
+                del self.admitting[slot]
+                self._unwind_slot(slot)
+                part.req.truncated = True
+                return True
+        for slot, req in list(self.active.items()):
+            if req.request_id == request_id:
+                req.truncated = True
+                self._finish(slot)
+                return True
+        return False
 
     def _finish(self, slot: int):
         req = self.active.pop(slot)
@@ -818,6 +1112,9 @@ class Engine:
         # max_len hard-stop: decoding past it would clamp the write
         # offset and corrupt the newest rows.  Newly admitted slots are
         # covered through prompt_len + 1 by the admission ensure.
+        self._tick += 1
+        self._progressed = False
+        now = time.perf_counter()
         finished: List[Request] = []
         for slot in list(self.active):
             req = self.active[slot]
@@ -828,13 +1125,13 @@ class Engine:
                 finished.append(self._finish(slot))
                 log.debug("request %d hard-stopped at max_len/page cap",
                           req.request_id)
-        finished.extend(self._admit())
+        finished.extend(self._run_prefills(self._prefill_quota(), now))
         if not self.active:
             return finished
         last = np.zeros((self.cfg.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             last[slot, 0] = req.output[-1]
-        self._key, sub = jax.random.split(self._key)
+        sub = self._next_key()
         # the tick's ONE batched block-table upload (replaces the old
         # per-slot jnp.asarray loop over grown slots), then clamp the
         # decode tick's block-table width to the bucketed batch
@@ -863,10 +1160,28 @@ class Engine:
                 kv=kv._replace(block_tables=full_tables))
         self.states = new_states
         self.counters["decode_ticks"] += 1
+        if self.admitting and self._bucketed:
+            # mid-prefill rows rode this decode tick as inactive batch
+            # rows: the step advanced their device cursors past the
+            # resume point and scattered one garbage KV row at it.  The
+            # garbage is harmless — the next chunk's window rewrites that
+            # position (windows always cover the resume point) — but the
+            # cursor must be re-pinned to ``pos`` every tick, or an
+            # admission idling across several ticks would drift its
+            # cursor and scatter garbage ABOVE the resume point, beyond
+            # the next chunk's rewrite extent (device-side edit, no
+            # transfer).
+            kv = self.states.kv
+            length = kv.length
+            for slot, part in self.admitting.items():
+                length = length.at[:, slot].set(part.pos)
+            self.states = self.states._replace(
+                kv=kv._replace(length=length))
+        self._progressed = True
         nxt = np.asarray(nxt)  # sync: required — the tick's one d2h readback (next tokens drive host finish logic)
         for slot in list(self.active):
             req = self.active[slot]
-            self._append_token(req, nxt[slot])
+            self._append_token(req, nxt[slot], now)
             self.alloc.slots[slot].length += 1
             done = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None
@@ -889,7 +1204,7 @@ class Engine:
         time), so its transfers are not per-tick sync-contract traffic;
         outputs are discarded and ``self.states`` is untouched (inactive
         rows' scatters land on trash page 0 by design)."""
-        self._key, sub = jax.random.split(self._key)
+        sub = self._next_key()
         last = jnp.zeros((self.cfg.max_batch, 1), jnp.int32)
         if not self.paged:
             self._jit_decode(self.params, last, self.states, sub)
@@ -928,7 +1243,7 @@ class Engine:
             if self._bucketed:
                 view = self._set_view_cursor(view, 0)
             self._prefill_buckets.add(cb)
-            self._key, sub = jax.random.split(self._key)
+            sub = self._next_key()
             self._jit_prefill_chunk(self.params,
                                     jnp.zeros((1, cb), jnp.int32),
                                     view, jnp.int32(0), sub)
@@ -951,42 +1266,55 @@ class Engine:
         self._decode_step(self.params, last, states_in, key)
 
     def _decode_table_width(self) -> int:
-        """Bucketed high-water page count across active slots: the widest
-        block table any row needs for this tick's read + one written KV
-        row, rounded up to a power of two (bounds decode retraces)."""
-        longest = max(self.alloc.slots[s].length for s in self.active) + 1
+        """Bucketed high-water page count across active AND mid-prefill
+        slots: the widest block table any row needs for this tick's read
+        + one written KV row, rounded up to a power of two (bounds decode
+        retraces).  Admitting rows count because their pinned-cursor
+        garbage write scatters at ``pos`` — were the clamped table
+        narrower than ``pos``'s page, the clamped index would land that
+        write on one of the slot's own already-written pages."""
+        rows = [self.alloc.slots[s].length for s in self.active]
+        # part.pos, not slots[s].length: a credit-mounted partial that has
+        # not executed a chunk yet writes its garbage row at pos=credit
+        rows += [part.pos for part in self.admitting.values()]
+        longest = max(rows) + 1
         return decode_table_width(longest, page_size=self.cfg.page_size,
                                   pages_per_slot=self.alloc.pages_per_slot)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
-            was_idle = not self.active
             out = self.step()
             done.extend(out)
-            if not self.active and not len(self.scheduler):
+            if (not self.active and not self.admitting
+                    and not len(self.scheduler)):
                 break
-            if (was_idle and not self.active and not out
-                    and self._admission_backoff):
+            if (not self.active and not out and not self._progressed
+                    and (self._admission_backoff
+                         or self._prefill_stalled)):
                 # the tick changed nothing: no active slot to free pages,
-                # nothing finished, and admission failed on a request the
-                # scheduler actually offered — every later tick would be
+                # nothing finished, no partial prefill advanced (a
+                # partially-prefilled admission advancing IS progress —
+                # self._progressed), and an admission failed or a partial
+                # stalled on the dry pool — every later tick would be
                 # identical, so raise instead of silently burning
                 # max_ticks (this state means a leak or an externally
                 # held resource; healthy admission always makes progress
                 # from an idle engine, since the prefix cache is fully
                 # evictable and submit() rejects prompts the pool could
                 # never hold).  A scheduler that merely deferred
-                # (next() -> None) keeps ticking: deferral is a policy
-                # choice, not a stuck engine.
+                # (next() -> None, or a zero prefill quota) keeps
+                # ticking: deferral is a policy choice, not a stuck
+                # engine.
                 head = self.scheduler.next(self)
                 head_desc = (f"id={head.request_id}, "
                              f"prompt_len={len(head.prompt)}"
                              if head is not None else "deferred")
                 raise RuntimeError(
                     f"engine cannot make progress: {len(self.scheduler)} "
-                    f"request(s) queued (head: {head_desc}), no active "
-                    f"slots, and admission backed off"
+                    f"request(s) queued (head: {head_desc}), "
+                    f"{len(self.admitting)} mid-prefill, no active "
+                    f"slots, and admission backed off or stalled"
                     + (f" [pages_in_use={self.alloc.pages_in_use}/"
                        f"{self.alloc.num_pages - 1}]" if self.paged else
                        ""))

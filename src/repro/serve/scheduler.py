@@ -24,6 +24,17 @@ are registered by name (``register_scheduler``) and resolved by
 ``make_scheduler``, which also accepts a ready-made instance, so a custom
 policy is a leaf change — no engine edits.
 
+Continuous batching (DESIGN.md §15): ``prefill_quota(engine,
+decode_slots)`` is the **token-budget-per-tick policy** — each engine
+tick asks the scheduler how many prompt tokens chunked prefill may
+execute this tick, given that ``decode_slots`` active requests will each
+decode one token.  The default (decode-first: ``tick_budget`` minus the
+decode slots, unbounded when ``EngineConfig.tick_budget`` is None) is
+inherited by every policy here, so admission *order* and tick *budget*
+compose independently; a custom policy can return 0 to defer prefill
+entirely — the engine treats that as a scheduling choice, not a stuck
+engine.
+
 Starvation: ``priority`` and ``prefix`` are deliberately simple (no
 aging); a starving workload should submit with adjusted priorities or
 pick ``fifo``.
@@ -54,6 +65,13 @@ class Scheduler(Protocol):
     def pending(self) -> List["object"]:
         """Queued requests, in arrival order."""
 
+    def prefill_quota(self, engine, decode_slots: int) -> Optional[int]:
+        """Prompt-token budget for this tick's chunked prefill (None =
+        unbounded — prefill whole prompts at admission).  ``decode_slots``
+        is the number of active requests that will decode one token each
+        this tick; the budget charges prefill by *padded* chunk widths
+        (the tokens jit actually executes)."""
+
     def __len__(self) -> int:
         ...
 
@@ -71,6 +89,17 @@ class FIFOScheduler:
 
     def next(self, engine) -> Optional[object]:
         return self._q[0] if self._q else None
+
+    def prefill_quota(self, engine, decode_slots: int) -> Optional[int]:
+        """Default token-budget policy (inherited by every registered
+        scheduler): decode gets first claim on the tick budget — each
+        active slot produces exactly one token per tick — and chunked
+        prefill spends what is left.  ``tick_budget=None`` keeps the
+        legacy whole-prompt admission (unbounded prefill per tick)."""
+        budget = engine.cfg.tick_budget
+        if budget is None:
+            return None
+        return max(0, budget - decode_slots)
 
     def remove(self, req) -> None:
         self._q.remove(req)

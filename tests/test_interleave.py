@@ -1,0 +1,396 @@
+"""Continuous batching: chunked prefill-decode interleaving
+(DESIGN.md §15).
+
+With ``EngineConfig.tick_budget`` set, prefill runs in chunk batches
+scheduled *between* decode ticks via the scheduler's ``prefill_quota``
+token-budget policy; a partially-prefilled admission is first-class
+engine state (``Engine.admitting``).  Covers:
+
+* greedy bit-parity: interleaved admission produces exactly the
+  whole-prompt outputs (and the sequential oracle's);
+* a long prompt no longer stalls in-flight decode — the victim stream
+  gains tokens on every tick the long prompt spends admitting;
+* lazy CoW: forks happen only for the chunk batch actually executed,
+  never at staging;
+* page-pool backpressure pauses a half-prefilled request in place (no
+  leaked pages / device rows) and resumes it to the exact output;
+* mid-prefill cancellation, finish-at-admission across ticks, deferring
+  quota policies vs the stuck-engine guard, latency counters, and the
+  greedy sampling-key skip.
+"""
+
+import numpy as np
+import pytest
+
+
+def _mk_engine(serve_model, **kw):
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg, api, params = serve_model
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    return Engine(api, params, EngineConfig(**kw))
+
+
+def _prompts(seed, lens):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 127, n).astype(np.int32) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# parity: interleaved == whole-prompt == sequential oracle
+# ---------------------------------------------------------------------------
+
+def test_greedy_parity_chunked_vs_whole(serve_model, greedy_ref):
+    from repro.serve.engine import Request
+
+    prompts = _prompts(10, (3, 17, 40, 9))
+    outs = {}
+    for mode, budget in (("whole", None), ("interleaved", 12)):
+        eng = _mk_engine(serve_model, tick_budget=budget)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=8))
+        outs[mode] = {r.request_id: r.output
+                      for r in eng.run_to_completion()}
+    assert outs["interleaved"] == outs["whole"]
+    for i, p in enumerate(prompts):
+        assert outs["whole"][i] == greedy_ref(p, 8), f"request {i}"
+
+
+def test_interleaved_tick_budget_caps_prefill_per_tick(serve_model):
+    """A 40-token prompt under tick_budget=8 takes several ticks to
+    admit, reported via Engine.admitting / inflight_prefills."""
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model, tick_budget=8)
+    [p] = _prompts(11, (40,))
+    eng.submit(Request(0, p, max_new_tokens=4))
+    eng.step()
+    assert len(eng.admitting) == 1           # staged, partially prefilled
+    assert not eng.active
+    part = next(iter(eng.admitting.values()))
+    assert 0 < part.pos < 40
+    ticks = 1
+    while eng.admitting:
+        eng.step()
+        ticks += 1
+    assert ticks > 1                          # admission really spanned ticks
+    assert eng.stats()["inflight_prefills"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the SLO property: long prompts don't stall in-flight streams
+# ---------------------------------------------------------------------------
+
+def test_long_prompt_does_not_stall_victim_decode(serve_model):
+    """Deterministic (tick-counted, not timed): while the long prompt is
+    mid-admission, the already-decoding victim gains one token per tick."""
+    from repro.serve.engine import Request
+
+    long_p, short_p = _prompts(12, (48, 4))
+    eng = _mk_engine(serve_model, tick_budget=16)
+    eng.submit(Request(0, short_p, max_new_tokens=40))
+    eng.step()                                # victim admitted + decoding
+    assert 0 in {s for s in eng.active}
+    eng.submit(Request(1, long_p, max_new_tokens=4))
+    victim = eng.active[list(eng.active)[0]]
+    while True:
+        before = len(victim.output)
+        eng.step()
+        if not eng.admitting:
+            break
+        # the long prompt is mid-prefill and the victim still decoded
+        assert len(victim.output) == before + 1
+    assert len(victim.output) > before
+
+
+def test_whole_prompt_admission_stalls_victim_baseline(serve_model):
+    """The contrast case the SLO gate measures: with tick_budget=None the
+    long prompt admits in ONE tick (all chunks inside it) — the paper's
+    'tail TTFT unbounded in prompt length' failure mode collapses into a
+    single engine tick here, visible as a multi-chunk admission tick."""
+    from repro.serve.engine import Request
+
+    long_p, short_p = _prompts(13, (48, 4))
+    eng = _mk_engine(serve_model)             # tick_budget=None
+    eng.submit(Request(0, short_p, max_new_tokens=40))
+    eng.step()
+    chunks_before = eng.stats()["prefill_chunks"]
+    eng.submit(Request(1, long_p, max_new_tokens=4))
+    eng.step()
+    assert not eng.admitting                  # admitted whole, same tick
+    assert eng.stats()["prefill_chunks"] - chunks_before >= 6
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill x prefix credit / CoW
+# ---------------------------------------------------------------------------
+
+def test_forks_only_below_executed_chunk(serve_model, greedy_ref):
+    """Lazy CoW: staging a credit admission forks nothing; the fork
+    lands on the tick the below-credit chunk actually executes."""
+    from repro.serve.engine import Engine, EngineConfig, Request
+    from repro.serve.scheduler import FIFOScheduler
+
+    class Gate(FIFOScheduler):
+        quota = None                          # test-controlled
+
+        def prefill_quota(self, engine, decode_slots):
+            return self.quota
+
+    # ps=2, max_len=16, chunk=8 (same geometry as the eager-CoW test in
+    # test_prefix_cache): A caches 10 tokens; B extends to 15, its final
+    # chunk buckets to 8 and left-shifts to position 8 < credit 10 ->
+    # the page holding rows 8-9 must fork, but only when it executes
+    cfg, api, params = serve_model
+    sched = Gate()
+    eng = Engine(api, params, EngineConfig(max_batch=2, max_len=16,
+                                           page_size=2, prefill_chunk=8,
+                                           scheduler=sched, tick_budget=8))
+    rng = np.random.default_rng(14)
+    pa = rng.integers(1, 127, 10).astype(np.int32)
+    pb = np.concatenate([pa, rng.integers(1, 127, 5).astype(np.int32)])
+    eng.submit(Request(0, pa, max_new_tokens=1))
+    eng.run_to_completion()                   # caches pa's 5 pages
+    assert eng.stats()["cached_pages"] > 0
+
+    sched.quota = 0                           # stage B, defer its chunks
+    eng.submit(Request(1, pb, max_new_tokens=1))
+    eng.step()
+    part = next(iter(eng.admitting.values()))
+    assert part.credit == 10 and part.executed == 0
+    assert eng.stats()["forked_pages"] == 0   # staged, nothing forked yet
+    eng.step()                                # idles: still no fork
+    assert eng.stats()["forked_pages"] == 0
+
+    sched.quota = None                        # release the chunk
+    done = eng.run_to_completion()
+    s = eng.stats()
+    assert s["prefix_hit_requests"] == 1
+    assert s["forked_pages"] == 1             # fork rode the executed chunk
+    assert done[0].output == greedy_ref(pb, 1, max_len=16)
+    assert eng.prefix.match(pa, touch=False)[0] == 10   # entry intact
+
+
+def test_chunked_credit_parity_with_cold_outputs(serve_model):
+    """Chunked admission over a mounted credit decodes the same tokens
+    as the cold (uncached, whole-prompt) engine."""
+    from repro.serve.engine import Request
+
+    [warm] = _prompts(15, (60,))
+    cold = _mk_engine(serve_model, prefix_cache=False)
+    cold.submit(Request(0, warm, max_new_tokens=3))
+    ref = cold.run_to_completion()[0].output
+
+    eng = _mk_engine(serve_model, max_batch=2, tick_budget=8)
+    eng.submit(Request(0, warm, max_new_tokens=3))
+    eng.run_to_completion()
+    eng.submit(Request(1, warm, max_new_tokens=3))
+    out = eng.run_to_completion()[0]
+    assert eng.stats()["prefix_hit_requests"] == 1
+    assert out.output == ref
+
+
+# ---------------------------------------------------------------------------
+# backpressure: pausing a half-prefilled request
+# ---------------------------------------------------------------------------
+
+def test_pool_backpressure_pauses_half_prefilled_request(serve_model):
+    """An undersized pool pauses a mid-prefill request without leaking
+    pages or device-table rows; it resumes to the exact output when the
+    blocking request finishes."""
+    from repro.serve.engine import Request
+
+    # pool: 9 usable pages.  Blocker holds 5 (32 tokens + decode row);
+    # the 40-token newcomer needs 6 -> it must pause mid-prefill.
+    eng = _mk_engine(serve_model, max_batch=2, num_pages=10,
+                     prefix_cache=False, tick_budget=16)
+    blocker_p, late_p = _prompts(16, (32, 40))
+
+    ref = _mk_engine(serve_model, prefix_cache=False)
+    ref.submit(Request(0, late_p, max_new_tokens=3))
+    want = ref.run_to_completion()[0].output
+
+    eng.submit(Request(0, blocker_p, max_new_tokens=12))
+    eng.step()
+    eng.submit(Request(1, late_p, max_new_tokens=3))
+    out = {r.request_id: r for r in eng.run_to_completion()}
+    s = eng.stats()
+    assert s["paused_prefills"] > 0           # the pause really happened
+    assert out[1].output == want              # resumed to the exact output
+    assert not out[1].truncated
+    # nothing leaked: all slots released, every page back on the free list
+    assert eng.alloc.pages_in_use == 0
+    assert not eng.active and not eng.admitting
+
+
+def test_paused_prefill_is_progress_not_stuck(serve_model):
+    """A stalled partial with active slots keeps ticking (decode frees
+    pages eventually); only a truly dead engine raises."""
+    from repro.serve.engine import Request
+
+    # 9 usable pages: the 24+8-token blocker needs 4 (covered by its
+    # prefill reserve — it never grows), the 40-token newcomer needs 6,
+    # so the newcomer pauses mid-prefill and resumes after the finish
+    eng = _mk_engine(serve_model, max_batch=2, num_pages=10,
+                     prefix_cache=False, tick_budget=16)
+    big1, big2 = _prompts(17, (24, 40))
+    eng.submit(Request(0, big1, max_new_tokens=8))
+    eng.submit(Request(1, big2, max_new_tokens=3))
+    done = eng.run_to_completion()            # must not raise
+    assert sorted(r.request_id for r in done) == [0, 1]
+    assert all(not r.truncated for r in done)
+    assert eng.stats()["paused_prefills"] > 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation + finish-at-admission
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_prefill_releases_everything(serve_model):
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model, tick_budget=8, prefix_cache=False)
+    [p] = _prompts(18, (40,))
+    req = Request(0, p, max_new_tokens=4)
+    eng.submit(req)
+    eng.step()
+    assert eng.admitting                      # mid-prefill
+    held = eng.alloc.pages_in_use
+    assert held > 0
+    assert eng.cancel(0)
+    assert not eng.admitting
+    assert eng.alloc.pages_in_use == 0        # pages all released
+    assert req.truncated
+    # the freed slot admits the next request cleanly (device row scrubbed)
+    eng.submit(Request(1, p[:6], max_new_tokens=2))
+    done = eng.run_to_completion()
+    assert [r.request_id for r in done] == [1]
+    assert eng.cancel(0) is False             # unknown/already gone
+
+
+def test_cancel_queued_and_active(serve_model):
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model, max_batch=1)
+    a, b = _prompts(19, (6, 6))
+    eng.submit(Request(0, a, max_new_tokens=30))
+    eng.step()
+    eng.submit(Request(1, b, max_new_tokens=5))   # queued (slot busy)
+    assert eng.cancel(1)                      # dequeue before admission
+    assert len(eng.scheduler) == 0
+    assert eng.cancel(0)                      # active -> truncated finish
+    assert not eng.active
+    assert eng.run_to_completion() == []
+
+
+def test_finish_at_admission_spans_ticks(serve_model):
+    """max_new_tokens=1 finishes on the prefill-produced token even when
+    the chunked admission took several ticks to get there."""
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model, tick_budget=8)
+    [p] = _prompts(20, (40,))
+    eng.submit(Request(0, p, max_new_tokens=1))
+    ticks = 0
+    done = []
+    while not done and ticks < 50:
+        done = eng.step()
+        ticks += 1
+    assert ticks > 1                          # the admission spanned ticks
+    assert [r.request_id for r in done] == [0]
+    assert len(done[0].output) == 1
+    assert not eng.active and not eng.admitting
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy: deferral + custom quotas
+# ---------------------------------------------------------------------------
+
+def test_zero_quota_policy_defers_without_stuck_error(serve_model):
+    """prefill_quota -> 0 defers chunk execution but still stages the
+    admission; the no-progress guard must treat that as progress."""
+    from repro.serve.engine import Request
+    from repro.serve.scheduler import FIFOScheduler
+
+    class StingyThenFair(FIFOScheduler):
+        name = "stingy"
+
+        def __init__(self):
+            super().__init__()
+            self.calls = 0
+
+        def prefill_quota(self, engine, decode_slots):
+            self.calls += 1
+            return 0 if self.calls <= 3 else None
+
+    sched = StingyThenFair()
+    eng = _mk_engine(serve_model, scheduler=sched, tick_budget=8)
+    [p] = _prompts(21, (12,))
+    eng.submit(Request(0, p, max_new_tokens=3))
+    done = eng.run_to_completion()            # must not raise
+    assert [r.request_id for r in done] == [0]
+    assert sched.calls > 3                    # the deferral window was real
+
+
+def test_default_quota_is_decode_first(serve_model):
+    from repro.serve.scheduler import FIFOScheduler
+
+    eng = _mk_engine(serve_model, tick_budget=10)
+    sched = FIFOScheduler()
+    assert sched.prefill_quota(eng, 0) == 10
+    assert sched.prefill_quota(eng, 4) == 6
+    assert sched.prefill_quota(eng, 99) == 0
+    eng_unbounded = _mk_engine(serve_model)
+    assert sched.prefill_quota(eng_unbounded, 2) is None
+
+
+# ---------------------------------------------------------------------------
+# satellites: latency counters + greedy key skip
+# ---------------------------------------------------------------------------
+
+def test_latency_stats_populated(serve_model):
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model, tick_budget=16)
+    for i, p in enumerate(_prompts(22, (9, 20))):
+        eng.submit(Request(i, p, max_new_tokens=5))
+    done = eng.run_to_completion()
+    s = eng.stats()
+    assert s["latency_samples"]["ttft_ms"] == 2
+    assert s["latency_samples"]["itl_ms"] == 2 * 4   # 5 tokens -> 4 gaps
+    assert s["ttft_ms_p50"] > 0 and s["ttft_ms_p99"] >= s["ttft_ms_p50"]
+    assert s["itl_ms_p50"] > 0
+    assert s["queued_ticks_p50"] >= 0
+    for r in done:
+        assert r.ttft_ms > 0
+        assert r.queued_ticks >= 0
+
+
+def test_greedy_skips_sampling_key_splits(serve_model):
+    """EngineConfig.greedy=True never touches jax.random.split on the
+    tick path: the root key object is reused as-is."""
+    from repro.serve.engine import Request
+
+    eng = _mk_engine(serve_model)
+    key_before = np.asarray(eng._key).copy()
+    [p] = _prompts(23, (12,))
+    eng.submit(Request(0, p, max_new_tokens=6))
+    eng.run_to_completion()
+    assert np.array_equal(np.asarray(eng._key), key_before)
+
+    sampling = _mk_engine(serve_model, greedy=False, temperature=0.8)
+    key_before = np.asarray(sampling._key).copy()
+    sampling.submit(Request(0, p, max_new_tokens=3))
+    sampling.run_to_completion()
+    assert not np.array_equal(np.asarray(sampling._key), key_before)
+
+
+def test_tick_budget_validation(serve_model):
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg, api, params = serve_model
+    with pytest.raises(ValueError, match="tick_budget"):
+        Engine(api, params, EngineConfig(tick_budget=0))

@@ -74,6 +74,23 @@ def test_retrace_budget_within_for_bucketed_paged():
     assert b["proven_total"] <= b["declared_total"]
 
 
+def test_chunk_resume_proof_closed_and_in_budget():
+    """Continuous batching's proof obligation: resuming a schedule at a
+    chunk boundary reproduces its suffix exactly and introduces no chunk
+    width outside the whole-prompt enumeration."""
+    from repro.analysis.serve_static import (retrace_budget,
+                                             verify_chunk_resume)
+
+    r = verify_chunk_resume(max_len=64, prefill_chunk=8, bucketed=True,
+                            page_size=8, prefix_cache=True)
+    assert r["closed"] and r["suffix_exact"] and r["new_widths"] == []
+    assert r["resume_points"] > 0
+    b = retrace_budget(bucketed=True, paged=True, max_len=64,
+                       prefill_chunk=8, page_size=8, pages_per_slot=8,
+                       prefix_cache=True)
+    assert b["chunk_resume"]["closed"] and b["within_budget"]
+
+
 def test_schedule_helpers_match_engine_methods(serve_model):
     """The module-level pure functions ARE what the engine runs — the
     proof enumerates the engine's actual behavior, not a model of it."""
@@ -189,7 +206,7 @@ def test_cli_smoke_and_unbucketed_exit_codes(tmp_path):
                    "--out", str(out)])
     assert rc == 0
     doc = json.loads(out.read_text())
-    assert doc["ok"] and doc["schema"] == 1
+    assert doc["ok"] and doc["schema"] == 2
 
     rc = cli.main(["--config", "rwkv6-7b", "--reduced",
                    "--max-batch", "2", "--max-len", "32",
@@ -232,10 +249,10 @@ def test_sync_inventory_stable():
     got = {(s["func"], s["api"], s["kind"], s["cls"])
            for s in audit["sites"]}
     assert got == {
-        ("_prefill", "np.asarray", "d2h", "host"),
-        ("_prefill", "jnp.asarray", "h2d", "required"),
-        ("_prefill", "jnp.int32", "h2d", "eliminable"),
-        ("_prefill", "int()", "d2h", "required"),
+        ("_exec_chunks", "np.asarray", "d2h", "host"),
+        ("_exec_chunks", "jnp.asarray", "h2d", "required"),
+        ("_exec_chunks", "jnp.int32", "h2d", "eliminable"),
+        ("_exec_chunks", "int()", "d2h", "required"),
         ("_copy_page", "jnp.int32", "h2d", "required"),
         ("_flush_tables", "jnp.asarray", "h2d", "required"),
         ("_append_token", "int()", "d2h", "host"),
@@ -288,9 +305,12 @@ def test_tick_path_closure_contains_hot_functions():
     funcs = tick_path_functions(tree)
     # _prefill_chunk/_decode_step run under jax.jit — the closure tracks
     # eager Python calls only, so the jitted bodies are rightly absent
-    assert {"step", "_admit", "_prefill", "_flush_tables", "_finish",
-            "_copy_page", "_ensure_pages", "_stage_slot"} <= funcs
+    assert {"step", "_run_prefills", "_advance_one", "_exec_chunks",
+            "_reserve_chunks", "_complete_admission", "_flush_tables",
+            "_finish", "_copy_page", "_ensure_pages",
+            "_stage_slot"} <= funcs
     assert "submit" not in funcs           # caller-side, not tick path
+    assert "cancel" not in funcs           # caller-side, not tick path
 
 
 # ---------------------------------------------------------------------------

@@ -99,7 +99,19 @@ def run_arm(api, params, cfg, *, allocator, prompts, new_tokens,
     tokens = sum(len(r.output) for r in done)
     stats = eng.stats()
     decode_ticks = max(stats["decode_ticks"], 1)
+    telemetry = {}
+    if eng.tel is not None and eng.tel.events is not None:
+        # validate the recorded span tree in-process: the tracing arm's
+        # gate is not just "it didn't crash" but "the trace is
+        # well-formed Chrome trace-event JSON with balanced spans"
+        from repro.serve.telemetry import (to_chrome_trace,
+                                           validate_chrome_trace)
+        v = validate_chrome_trace(to_chrome_trace(eng.tel))
+        telemetry = {"telemetry_events": len(eng.tel.events),
+                     "trace_valid": v["ok"],
+                     "trace_errors": v["errors"][:5]}
     return {
+        **telemetry,
         "allocator": allocator,
         "requests": len(done),
         "tokens": tokens,
@@ -374,6 +386,30 @@ def sustained_bench(api, params, cfg, *, engine_kw, seed=0):
         # reseed so both allocators see identical prompt streams
         rng = np.random.default_rng(seed)
 
+    # ---- tracing-overhead arm (DESIGN.md §16) ----
+    # the identical paged full-batch workload served twice: telemetry
+    # absent (eng.tel is None — every hook is a single None check) vs
+    # full span tracing on.  Both must produce bit-identical outputs,
+    # the enabled trace must validate as well-formed Chrome trace-event
+    # JSON, and the enabled arm must keep TRACING_BUDGET of the disabled
+    # throughput — the declared instrumentation budget; the measured
+    # overhead % is also trend-tracked warn-only so drift is visible
+    # long before the hard gate trips.
+    TRACING_BUDGET = 0.60
+    rng = np.random.default_rng(seed + 1)
+    tkw = {**engine_kw, "max_batch": full_batch}
+    tprompts = [rng.integers(0, cfg.vocab_size,
+                             (prompt_len,)).astype(np.int32)
+                for _ in range(2 * full_batch)]
+    tracing_arms: dict = {}
+    tracing_outs: dict = {}
+    for name, extra in (("off", {}), ("on", {"telemetry": True})):
+        tracing_arms[name], tracing_outs[name] = run_arm(
+            api, params, cfg, allocator="paged", prompts=tprompts,
+            new_tokens=new_tokens, engine_kw={**tkw, **extra})
+    t_off = tracing_arms["off"]["tok_per_s"]
+    t_on = tracing_arms["on"]["tok_per_s"]
+
     gates = {
         # exactness first: scaling numbers mean nothing off a wrong model
         "parity_single": (outputs["paged"]["single"]
@@ -391,6 +427,14 @@ def sustained_bench(api, params, cfg, *, engine_kw, seed=0):
         "paged_beats_contiguous": (
             arms["paged"]["full"]["tok_per_s"]
             >= arms["contiguous"]["full"]["tok_per_s"]),
+        # observability contract: tracing changes nothing but wall time,
+        # the recorded timeline is well-formed, and the cost of tracing
+        # stays inside the declared budget
+        "tracing_parity": tracing_outs["off"] == tracing_outs["on"],
+        "tracing_trace_valid": bool(tracing_arms["on"].get("trace_valid")),
+        "tracing_enabled_budget": t_on >= TRACING_BUDGET * t_off,
+        "tracing_disabled_noise": (
+            t_off >= TRACING_BUDGET * arms["paged"]["full"]["tok_per_s"]),
     }
     return {
         "prompt_len": prompt_len,
@@ -402,6 +446,15 @@ def sustained_bench(api, params, cfg, *, engine_kw, seed=0):
             alloc: round(arms[alloc]["full"]["tok_per_s"]
                          / max(arms[alloc]["single"]["tok_per_s"], 1e-9), 3)
             for alloc in ("contiguous", "paged")},
+        "tracing": {
+            "budget_ratio": TRACING_BUDGET,
+            "off": {"tok_per_s": t_off},
+            "on": {"tok_per_s": t_on,
+                   "events": tracing_arms["on"].get("telemetry_events"),
+                   "trace_valid": tracing_arms["on"].get("trace_valid")},
+            "overhead_pct": round(100.0 * (1.0 - t_on / max(t_off, 1e-9)),
+                                  2),
+        },
         "gates": gates,
         "ok": all(gates.values()),
     }
@@ -443,8 +496,8 @@ def _latency_arm(api, params, cfg, *, tick_budget, prompts, new_tokens,
     lat = {
         k: {"p50": round(s[f"{k}_p50"], 3),
             "p99": round(s[f"{k}_p99"], 3),
-            "max": round(max(eng._lat[k], default=0.0), 3),
-            "samples": len(eng._lat[k])}
+            "max": round(eng._lat[k].max, 3),
+            "samples": eng._lat[k].count}
         for k in ("ttft_ms", "itl_ms", "queued_ticks")
     }
     return {
@@ -615,6 +668,12 @@ def main(argv=None) -> int:
                       f"{1e6 * r['wall_s'] / max(r['tokens'], 1):.1f},"
                       f"tok_per_s={r['tok_per_s']};batch={r['batch']}",
                       flush=True)
+        tr = sustained["tracing"]
+        print(f"serve_tracing,{tr['overhead_pct']:.2f},"
+              f"off={tr['off']['tok_per_s']}tok/s;"
+              f"on={tr['on']['tok_per_s']}tok/s;"
+              f"events={tr['on']['events']};"
+              f"trace_valid={tr['on']['trace_valid']}", flush=True)
         print(f"serve_sustained_gates,0,"
               f"{'OK' if sustained['ok'] else 'FAIL ' + str(sustained['gates'])}"
               f" -> BENCH_serve_sustained.json", flush=True)

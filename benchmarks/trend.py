@@ -44,6 +44,13 @@ METRICS = [
      "sustained contiguous full-batch tok/s", True),
     ("BENCH_serve_sustained.json", "scaling.paged",
      "sustained paged batch scaling", True),
+    # tracing overhead (DESIGN.md §16) — warn-only drift tracking; the
+    # hard enabled-within-budget gate lives inside serve_bench
+    # --sustained ("tracing_enabled_budget")
+    ("BENCH_serve_sustained.json", "tracing.overhead_pct",
+     "serve tracing overhead %", False),
+    ("BENCH_serve_sustained.json", "tracing.on.tok_per_s",
+     "serve tracing-on tok/s", True),
     # open-loop latency SLOs (DESIGN.md §15) — warn-only here; the hard
     # interleaved-vs-whole p99-ITL gate lives inside serve_bench --latency
     ("BENCH_serve_latency.json", "arms.interleaved.ttft_ms.p50",

@@ -29,13 +29,17 @@ LANE003  no bare ``hash()`` anywhere: Python's string hashing is salted
 LANE004  no untagged host-sync primitive (``.item()``, ``int()``/
          ``float()`` coercion, ``np.asarray`` on device values,
          ``jnp.asarray`` uploads) inside the tick-path functions of
-         ``serve/engine.py``.  Every sync the tick path keeps must
+         ``serve/engine.py`` or the telemetry emit path of
+         ``serve/telemetry.py``.  Every sync these paths keep must
          carry a ``# sync: <required|eliminable|host> — <reason>`` tag
          on its line — the serve-path analyzer
          (``repro.analysis.serve_static``) audits the tagged inventory
          and CI gates on the per-tick counts, so a new sync can't land
          silently.  The tick path is the static call-graph closure of
-         ``Engine.step`` / ``run_to_completion``.
+         ``Engine.step`` / ``run_to_completion``; the telemetry emit
+         path is the closure of the Tracer/Histogram hooks the engine
+         may call per tick (``TELEMETRY_SYNC_ROOTS``), whose declared
+         contract is zero h2d + zero d2h.
 
 Run as ``python -m repro.analysis.lint [paths...]`` (default
 ``src/repro``); exits non-zero listing every violation.
@@ -139,17 +143,23 @@ def _check_function(fn, path: str, out: List[Violation]) -> None:
 
 def _check_sync_discipline(tree: ast.Module, src: str, path: str,
                            out: List[Violation]) -> None:
-    """LANE004: tick-path host-sync sites in serve/engine.py must carry
-    a ``# sync:`` tag (classification + tag grammar live in
-    serve_static, shared with the analyzer so the lint and the audit
-    can never disagree about what counts as a sync)."""
-    if not path.replace("\\", "/").endswith("serve/engine.py"):
-        return
-    from repro.analysis.serve_static import (classify_sync_call,
+    """LANE004: tick-path host-sync sites in serve/engine.py — and the
+    telemetry emit path in serve/telemetry.py — must carry a
+    ``# sync:`` tag (classification + tag grammar live in serve_static,
+    shared with the analyzer so the lint and the audit can never
+    disagree about what counts as a sync)."""
+    norm = path.replace("\\", "/")
+    from repro.analysis.serve_static import (TELEMETRY_SYNC_ROOTS,
+                                             classify_sync_call,
                                              find_sync_tag,
                                              tick_path_functions)
 
-    funcs = tick_path_functions(tree)
+    if norm.endswith("serve/engine.py"):
+        funcs = tick_path_functions(tree)
+    elif norm.endswith("serve/telemetry.py"):
+        funcs = tick_path_functions(tree, roots=TELEMETRY_SYNC_ROOTS)
+    else:
+        return
     lines = src.splitlines()
     for node in ast.walk(tree):
         if not isinstance(node, ast.FunctionDef) or node.name not in funcs:

@@ -100,6 +100,18 @@ def main(argv=None) -> int:
             f"{audit['declared_per_tick']['h2d']}, "
             f"d2h={audit['per_tick']['d2h']}/"
             f"{audit['declared_per_tick']['d2h']}")
+    tel = doc["sync_audit_telemetry"]
+    for site in tel["unallowlisted"]:
+        failures.append(
+            f"untagged sync in telemetry emit path: "
+            f"{site['path']}:{site['line']} {site['api']} "
+            f"({site['kind']}) in {site['func']}()")
+    if not tel["ok"] and not tel["unallowlisted"]:
+        failures.append(
+            f"telemetry emit path is not transfer-free: "
+            f"h2d={tel['per_tick']['h2d']}, d2h={tel['per_tick']['d2h']} "
+            f"(declared 0 + 0 — instrumentation must never add "
+            f"host<->device traffic to the tick path)")
     if args.check_bench:
         with open(args.check_bench) as f:
             doc["cross_check"] = cross_check_bench(json.load(f))

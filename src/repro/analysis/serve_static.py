@@ -54,7 +54,8 @@ __all__ = [
     "enumerate_decode_buckets", "verify_chunk_resume",
     "verify_engine_signatures",
     "audit_sync_sites", "sync_summary", "tick_path_functions",
-    "classify_sync_call", "find_sync_tag", "roofline_engine",
+    "classify_sync_call", "find_sync_tag", "audit_telemetry_file",
+    "TELEMETRY_SYNC_ROOTS", "roofline_engine",
     "engine_desc", "analyze_serve", "cross_check_bench",
     "format_serve_report",
 ]
@@ -301,6 +302,8 @@ _TICK_FREQ = {
     "_finish": "finish", "_scrub_slot_device": "finish",
     "_append_token": "token", "_reset_slot": "admission",
     "_tune_decode_bucket": "bucket", "retrace_budget": "stats",
+    "_kernel_provenance": "bucket", "_reclaim_pages": "growth",
+    "_dump_on_error": "error", "_check_compile_soundness": "drain",
 }
 
 
@@ -424,10 +427,15 @@ def audit_sync_sites(src: str, path: str = "serve/engine.py",
 PER_TICK_DECLARED = {"h2d": 2, "d2h": 1}
 
 
-def sync_summary(sites: Sequence[SyncSite]) -> Dict[str, Any]:
+def sync_summary(sites: Sequence[SyncSite],
+                 declared: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, Any]:
     """Aggregate the inventory into the CI gate: untagged sites are
     violations; per-tick counts (freq == "tick", class != host) must
-    stay within the declared contract."""
+    stay within the declared contract (``declared`` overrides the
+    engine's 2 h2d + 1 d2h — the telemetry audit declares 0 + 0)."""
+    if declared is None:
+        declared = PER_TICK_DECLARED
     untagged = [s for s in sites if not s.cls]
     per_tick = {
         "h2d": sum(1 for s in sites
@@ -446,7 +454,7 @@ def sync_summary(sites: Sequence[SyncSite]) -> Dict[str, Any]:
         "eliminable": [s._asdict() for s in sites
                        if s.cls == "eliminable"],
         "per_tick": per_tick,
-        "declared_per_tick": dict(PER_TICK_DECLARED),
+        "declared_per_tick": dict(declared),
         # S1 before/after: the replaced per-slot upload loop cost one
         # h2d transfer per grown slot per tick (<= max_batch); the
         # batched flush is a single full-table upload
@@ -454,8 +462,8 @@ def sync_summary(sites: Sequence[SyncSite]) -> Dict[str, Any]:
             "before": "one per grown/scrubbed slot (<= max_batch)",
             "after": table_flushes},
         "ok": (not untagged
-               and per_tick["h2d"] <= PER_TICK_DECLARED["h2d"]
-               and per_tick["d2h"] <= PER_TICK_DECLARED["d2h"]
+               and per_tick["h2d"] <= declared["h2d"]
+               and per_tick["d2h"] <= declared["d2h"]
                and table_flushes <= 1),
     }
 
@@ -469,6 +477,41 @@ def audit_engine_file(path: Optional[str] = None) -> Dict[str, Any]:
     rel = str(path).replace("\\", "/")
     rel = rel[rel.rfind("repro/"):] if "repro/" in rel else rel
     return sync_summary(audit_sync_sites(src, rel))
+
+
+#: the telemetry emit path: every Tracer/Histogram/MetricsRegistry
+#: method the engine may call per tick / per event while serving.  The
+#: audit closes the call graph from these roots over serve/telemetry.py
+#: — export/validation/CLI code is deliberately outside (it runs when a
+#: trace is written, not while serving).
+TELEMETRY_SYNC_ROOTS = (
+    "_emit", "now", "begin", "end", "instant", "complete", "counter",
+    "set_meta", "set_thread_name", "request_submit", "request_admitted",
+    "request_chunks", "request_paused", "request_resumed",
+    "request_restaged", "request_decode", "request_finish",
+    "request_cancel", "record", "histogram",
+)
+
+#: instrumentation must be transfer-free: the telemetry emit path may
+#: perform ZERO host<->device syncs — the engine's own 2 h2d + 1 d2h
+#: per-tick contract is audited separately and must not grow
+TELEMETRY_PER_TICK_DECLARED = {"h2d": 0, "d2h": 0}
+
+
+def audit_telemetry_file(path: Optional[str] = None) -> Dict[str, Any]:
+    """Host-sync audit of ``repro.serve.telemetry``'s emit path: proves
+    the instrumentation the engine calls while serving performs no
+    host<->device transfers (declared contract 0 h2d + 0 d2h; host-
+    tagged sites — python-float coercions on host scalars — are
+    inventoried but excluded, same rules as the engine audit)."""
+    if path is None:
+        import repro.serve.telemetry as tel_mod
+        path = tel_mod.__file__
+    src = Path(path).read_text(encoding="utf-8")
+    rel = str(path).replace("\\", "/")
+    rel = rel[rel.rfind("repro/"):] if "repro/" in rel else rel
+    sites = audit_sync_sites(src, rel, roots=TELEMETRY_SYNC_ROOTS)
+    return sync_summary(sites, declared=TELEMETRY_PER_TICK_DECLARED)
 
 
 # --------------------------------------------------------------------------
@@ -619,7 +662,12 @@ def analyze_serve(config_name: str, *,
         ok = ok and arm_ok
     audit = audit_engine_file()
     doc["sync_audit"] = audit
-    doc["ok"] = ok and audit["ok"]
+    # the telemetry emit path is audited under its own (stricter)
+    # contract: instrumentation adds ZERO h2d/d2h — the per-tick budget
+    # above stays the engine's alone even with tracing compiled in
+    audit_tel = audit_telemetry_file()
+    doc["sync_audit_telemetry"] = audit_tel
+    doc["ok"] = ok and audit["ok"] and audit_tel["ok"]
     return doc
 
 
@@ -705,6 +753,16 @@ def format_serve_report(doc: Dict[str, Any]) -> str:
         f"d2h={audit['per_tick']['d2h']}/"
         f"{audit['declared_per_tick']['d2h']}, "
         f"table uploads/tick={audit['block_table_uploads_per_tick']['after']}")
+    tel = doc.get("sync_audit_telemetry")
+    if tel:
+        lines.append(
+            f"  telemetry audit: {tel['n_sites']} sites, "
+            f"{len(tel['unallowlisted'])} untagged, emit-path "
+            f"h2d={tel['per_tick']['h2d']}/"
+            f"{tel['declared_per_tick']['h2d']} "
+            f"d2h={tel['per_tick']['d2h']}/"
+            f"{tel['declared_per_tick']['d2h']} "
+            f"({'transfer-free' if tel['ok'] else 'VIOLATED'})")
     if "cross_check" in doc:
         cc = doc["cross_check"]
         lines.append(f"  bench cross-check: arms={cc['checked']} "

@@ -17,12 +17,23 @@ prefill-decode interleaving (DESIGN.md §15): each tick spends at most N
 padded prefill tokens between decode steps, so long prompts admit over
 several ticks instead of stalling every in-flight stream;
 ``--chunk-tokens`` (alias of ``--prefill-chunk``) sets the chunk width.
+
+Observability (DESIGN.md §16): ``--trace-out trace.json`` records the
+full span timeline (request lifecycles, tick phases, kernel/plan
+provenance) as Chrome trace-event JSON — load it at ui.perfetto.dev or
+validate/summarize with ``python -m repro.serve.telemetry trace.json``.
+``--metrics-json`` dumps the engine's counter + histogram registry;
+``--log-json`` prints one JSON line of tick stats per engine tick and
+arms the flight recorder, whose ring-buffer dump path is logged when
+the engine dies (no-progress, soundness cross-check).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import logging
+import sys
 import time
 
 import jax
@@ -66,6 +77,16 @@ def main(argv=None):
                     help="temperature sampling instead of greedy decode")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON timeline here "
+                         "(Perfetto-loadable; validate with "
+                         "python -m repro.serve.telemetry PATH)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine metrics registry (counters + "
+                         "bounded histograms) plus stats() here")
+    ap.add_argument("--log-json", action="store_true",
+                    help="one JSON line of tick stats per engine tick on "
+                         "stdout; also arms the crash flight recorder")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -75,6 +96,18 @@ def main(argv=None):
     from repro.models.registry import get_model
     from repro.nn.module import unbox
     from repro.serve.engine import Engine, EngineConfig, Request
+    from repro.serve.telemetry import TelemetryConfig, write_trace
+
+    # telemetry is opt-in: full span tracing when a trace sink is given,
+    # flight-recorder-only (bounded ring, no event list) under
+    # --log-json, and entirely absent otherwise — the engine hooks are
+    # `if tel is None` guarded, so off means zero events and zero
+    # allocation (proven by the analyzer's telemetry sync audit).
+    telemetry = None
+    if args.trace_out:
+        telemetry = TelemetryConfig(trace=True)
+    elif args.log_json:
+        telemetry = TelemetryConfig(trace=False)
 
     name = args.arch if not args.attention else f"{args.arch}@{args.attention}"
     cfg = get_config(name)
@@ -99,7 +132,8 @@ def main(argv=None):
                               prefix_cache=args.prefix_cache,
                               scheduler=args.scheduler,
                               greedy=not args.sample,
-                              temperature=args.temperature),
+                              temperature=args.temperature,
+                              telemetry=telemetry),
                  seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
@@ -112,7 +146,32 @@ def main(argv=None):
                             (plen - shared_len,)).astype(np.int32)
         prompt = np.concatenate([shared, tail])
         eng.submit(Request(i, prompt, max_new_tokens=args.new_tokens))
-    done = eng.run_to_completion()
+
+    on_tick = None
+    if args.log_json:
+        def on_tick(e, finished):
+            # one line per tick, stable keys — cheap counter reads only,
+            # never a full stats() (which walks the allocator)
+            print(json.dumps({
+                "tick": e._tick, "active": len(e.active),
+                "admitting": len(e.admitting),
+                "queued": len(e.scheduler), "finished": len(finished),
+                "finished_total": e.counters["finished_requests"],
+                "generated_tokens": e.counters["generated_tokens"],
+                "prefill_tokens": e.counters["prefill_tokens"],
+                "table_uploads": e.counters["table_uploads"],
+                "paused_prefills": e.counters["paused_prefills"],
+            }, sort_keys=True), flush=True)
+    try:
+        done = eng.run_to_completion(on_tick=on_tick)
+    except RuntimeError as err:
+        # _dump_on_error already wrote the flight recorder and embedded
+        # its path in the message; restate it loudly for log scrapers
+        log.error("engine aborted: %s", err)
+        if "[flight recorder:" in str(err):
+            path = str(err).rsplit("[flight recorder: ", 1)[1].rstrip("]")
+            print(f"FLIGHT RECORDER: {path}", file=sys.stderr)
+        return 1
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
     log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
@@ -137,6 +196,16 @@ def main(argv=None):
              stats["queued_ticks_p99"], stats["paused_prefills"])
     for r in done[:3]:
         log.info("req %d -> %s...", r.request_id, r.output[:8])
+    if args.trace_out:
+        write_trace(eng.tel, args.trace_out)
+        log.info("trace: wrote %s (%d events) — load at ui.perfetto.dev "
+                 "or run `python -m repro.serve.telemetry %s`",
+                 args.trace_out, len(eng.tel.events), args.trace_out)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump({"stats": stats, "metrics": eng.metrics.snapshot()},
+                      f, indent=2, sort_keys=True)
+        log.info("metrics: wrote %s", args.metrics_json)
     return 0
 
 

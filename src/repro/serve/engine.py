@@ -74,6 +74,7 @@ from repro.models.registry import ModelApi
 from repro.serve.kvcache import PagedAllocator, SlotAllocator
 from repro.serve.prefix import PrefixIndex
 from repro.serve.scheduler import make_scheduler
+from repro.serve.telemetry import MetricsRegistry, dump_flight, make_tracer
 
 log = logging.getLogger("repro.serve")
 
@@ -125,6 +126,8 @@ class _PartialPrefill:
     pos: int = 0                   # tokens covered (== credit at staging)
     executed: int = 0              # chunks run so far (0 => clean unwind)
     last_tok: Optional[int] = None # the prefill-produced first token
+    paused: bool = False           # pool-dry pause seen since last chunk
+                                   # batch (telemetry emits resumed once)
 
 
 @dataclasses.dataclass
@@ -151,6 +154,14 @@ class EngineConfig:
                                    # interleaved ticks' pad garbage
     scheduler: Any = "fifo"        # admission policy name or Scheduler
                                    # instance ("fifo"|"priority"|"prefix")
+    telemetry: Any = None          # observability (DESIGN.md §16): None/
+                                   # False disables every hook (zero
+                                   # overhead — no events, no timestamps,
+                                   # no allocation); True/"on" records
+                                   # the full span trace + flight ring;
+                                   # "flight" keeps only the crash ring;
+                                   # or a telemetry.TelemetryConfig /
+                                   # Tracer instance
     warmup: str = "none"           # "decode": pre-trace the decode step's
                                    # proven signature ladder (and autotune
                                    # native kernels) at construction, so
@@ -274,7 +285,7 @@ class Engine:
         self.prefix: Optional[PrefixIndex] = None
         if self.paged and cfg.prefix_cache and fam in _KV_FAMILIES:
             self.prefix = PrefixIndex(self.alloc)
-            self.alloc.attach_reclaimer(self.prefix.evict)
+            self.alloc.attach_reclaimer(self._reclaim_pages)
         elif cfg.prefix_cache and self.paged:
             log.info("prefix cache unavailable for family %r (recurrent "
                      "carries cannot skip prefill)", fam)
@@ -291,28 +302,55 @@ class Engine:
             if not self._bucketed:
                 log.info("family %r prefills exact-length whole prompts "
                          "(recurrent carries); tick_budget ignored", fam)
-        self.counters: Dict[str, int] = {
+        # metrics registry (DESIGN.md §16): the counters dict is owned by
+        # the registry and aliased here, so every existing counter key
+        # keeps working while --metrics-json gets one unified snapshot
+        self.metrics = MetricsRegistry()
+        self.metrics.counters.update({
             "prefix_hit_tokens": 0, "prefix_hit_requests": 0,
             "forked_pages": 0, "prefill_tokens": 0,
             "generated_tokens": 0, "finished_requests": 0,
             "table_uploads": 0, "table_uploads_decode": 0,
             "table_uploads_prefill": 0, "decode_ticks": 0,
-            "prefill_chunks": 0, "paused_prefills": 0}
+            "prefill_chunks": 0, "paused_prefills": 0})
+        self.counters: Dict[str, int] = self.metrics.counters
         self._arrival = 0
         self._tick = 0
         self._admission_backoff = False
         self._prefill_stalled = False
         self._progressed = False
-        # per-request latency samples (finished or streaming): stats()
-        # reports p50/p99 over these
-        self._lat: Dict[str, List[float]] = {
-            "ttft_ms": [], "itl_ms": [], "queued_ticks": []}
+        # per-request latency samples (finished or streaming): bounded
+        # reservoir histograms — stats() reports p50/p99 over the
+        # reservoir, O(capacity) memory however long the engine runs
+        self._lat = {k: self.metrics.histogram(k)
+                     for k in ("ttft_ms", "itl_ms", "queued_ticks")}
+        # span tracer + flight recorder, or None (the zero-overhead
+        # default): every hook below is one attribute load + is-None
+        # guard, and the emit path is statically audited to perform no
+        # host<->device transfers (analysis.serve_static
+        # .audit_telemetry_file)
+        self.tel = make_tracer(cfg.telemetry)
         self._key = jax.random.PRNGKey(seed)
         self.decode_plan = self._plan_decode()
         if self.decode_plan is not None:
             log.info("engine decode %s [max_batch=%d max_len=%d alloc=%s]",
                      self.decode_plan.trace_line(), cfg.max_batch,
                      cfg.max_len, "paged" if self.paged else "contiguous")
+        if self.tel is not None:
+            self.tel.set_meta("engine", {
+                "family": fam, "max_batch": cfg.max_batch,
+                "max_len": cfg.max_len,
+                "allocator": "paged" if self.paged else "contiguous",
+                "page_size": cfg.page_size,
+                "prefill_chunk": self.cfg.prefill_chunk,
+                "tick_budget": cfg.tick_budget,
+                "prefix_cache": self.prefix is not None})
+            if self.decode_plan is not None:
+                # plan provenance rides the trace: why this backend
+                self.tel.set_meta("decode_plan", {
+                    "mechanism": self.decode_plan.mechanism,
+                    "backend": self.decode_plan.backend,
+                    "reason": self.decode_plan.reason})
         # trace-counting wrappers: the wrapped python body runs only while
         # jax traces a NEW input signature, so these counters are live
         # compile counts — checked against the proven retrace budget
@@ -370,16 +408,24 @@ class Engine:
         s["inflight_prefills"] = len(self.admitting)
         # per-request latency percentiles, fed by tick timestamps:
         # ttft_ms (submit -> first token), itl_ms (token -> next token,
-        # in-flight streams included), queued_ticks (submit -> slot)
-        for k, vals in self._lat.items():
-            if vals:
-                arr = np.asarray(vals)
-                s[f"{k}_p50"] = float(np.percentile(arr, 50))
-                s[f"{k}_p99"] = float(np.percentile(arr, 99))
-            else:
-                s[f"{k}_p50"] = s[f"{k}_p99"] = 0.0
-        s["latency_samples"] = {k: len(v) for k, v in self._lat.items()}
+        # in-flight streams included), queued_ticks (submit -> slot).
+        # Backed by bounded reservoir histograms (telemetry.Histogram);
+        # latency_samples reports the true observation counts
+        for k, h in self._lat.items():
+            s[f"{k}_p50"] = h.percentile(50)
+            s[f"{k}_p99"] = h.percentile(99)
+        s["latency_samples"] = {k: h.count for k, h in self._lat.items()}
         return s
+
+    def _reclaim_pages(self, need: int) -> int:
+        """Allocator reclaim hook: LRU-evict cached prefix pages, and
+        surface the eviction on the tick timeline when tracing (the
+        allocator calls this only under pool pressure — never on the
+        steady-state path, so the hook costs nothing per tick)."""
+        freed = self.prefix.evict(need)
+        if self.tel is not None and freed:
+            self.tel.instant("eviction", need_pages=need, freed_pages=freed)
+        return freed
 
     def _paged_eligible(self):
         """(ok, why_not) for backing this model's decode with the paged
@@ -625,6 +671,16 @@ class Engine:
         req = part.req
         prompt = np.asarray(req.prompt, np.int32)  # sync: host — the prompt is host-resident numpy, nothing crosses the link
         L = len(prompt)
+        tr = self.tel
+        lo = part.next_chunk
+        if part.paused:
+            part.paused = False
+            if tr is not None:
+                tr.request_resumed(req.request_id, part.pos)
+        # start the chunk-batch X span AFTER the resumed instant: the X
+        # event is emitted at its start timestamp, so anything recorded
+        # between t0 and emission would read as time going backwards
+        t0 = tr.now() if tr is not None else 0.0
         view = self._slot_view(slot)
         nxt = None
         last_i = len(part.schedule) - 1
@@ -664,6 +720,9 @@ class Engine:
         # host cursor tracks the resume point so the decode tick's
         # clamped table width covers the mid-prefill row's page
         self.alloc.slots[slot].length = part.pos
+        if tr is not None:
+            tr.request_chunks(req.request_id, t0, lo, upto, part.pos,
+                              len(part.schedule))
         if not done:
             log.debug("request %d prefilled to %d/%d tokens (chunk "
                       "%d/%d)", req.request_id, part.pos, L,
@@ -712,6 +771,9 @@ class Engine:
         req._tick_submit = self._tick
         self._arrival += 1
         self.scheduler.add(req)
+        if self.tel is not None:
+            self.tel.request_submit(req.request_id, plen,
+                                    req.max_new_tokens, req.priority)
 
     def _prefix_credit(self, req: Request) -> Tuple[int, List[int]]:
         """(tokens, pages) of the longest usable cached prefix of the
@@ -738,6 +800,8 @@ class Engine:
             kv.k, kv.v,
             jnp.int32(old), jnp.int32(new))  # sync: required — page-id scalars for the donated CoW copy (fork-rate, not per-tick)
         self.states = self.states._replace(kv=kv._replace(k=k, v=v))
+        if self.tel is not None:
+            self.tel.instant("cow_fork", old_page=old, new_page=new)
 
     def _mark_tables_dirty(self):
         """Flag the device block-table mirror stale.  The host tables
@@ -765,6 +829,8 @@ class Engine:
         self._tables_dirty = False
         self.counters["table_uploads"] += 1
         self.counters[f"table_uploads_{where}"] += 1
+        if self.tel is not None:
+            self.tel.instant("table_upload", where=where)
 
     def _scrub_slot_device(self, slot: int):
         """Retire an inactive slot's device row: the row keeps flowing
@@ -880,9 +946,9 @@ class Engine:
         if now is not None:
             if len(req.output) == 1:
                 req.ttft_ms = (now - req._t_submit) * 1e3
-                self._lat["ttft_ms"].append(req.ttft_ms)
+                self._lat["ttft_ms"].record(req.ttft_ms)
             else:
-                self._lat["itl_ms"].append((now - req._t_last) * 1e3)
+                self._lat["itl_ms"].record((now - req._t_last) * 1e3)
             req._t_last = now
         if req.on_token is not None:
             try:
@@ -909,6 +975,8 @@ class Engine:
         part = self.admitting.pop(slot)
         req = part.req
         self.active[slot] = req
+        if self.tel is not None:
+            self.tel.request_decode(req.request_id, part.credit)
         self.alloc.slots[slot].length = len(req.prompt)
         self.counters["prefill_tokens"] += len(req.prompt) - part.credit
         if part.credit:
@@ -960,9 +1028,14 @@ class Engine:
                     self.states = _reset_slot(self.states, slot2)
                     if self.paged:
                         self._mark_tables_dirty()
+                    if self.tel is not None:
+                        self.tel.request_restaged(req.request_id)
                     return self._advance_one(slot2, quota, spent, now)
                 self._prefill_stalled = True
+                part.paused = True
                 self.counters["paused_prefills"] += 1
+                if self.tel is not None:
+                    self.tel.request_paused(part.req.request_id, part.pos)
                 log.debug("request %d paused mid-prefill at %d/%d tokens "
                           "(page pool dry)", part.req.request_id, part.pos,
                           len(part.req.prompt))
@@ -994,6 +1067,9 @@ class Engine:
             spent += cost
             if fin is not None:
                 finished.append(fin)
+        tr = self.tel
+        if tr is not None:
+            tr.begin("scheduler", queued=len(self.scheduler))
         while len(self.scheduler):
             req = self.scheduler.next(self)
             if req is None:
@@ -1031,8 +1107,11 @@ class Engine:
                     break
             self.scheduler.remove(req)
             req.queued_ticks = max(0, self._tick - req._tick_submit - 1)
-            self._lat["queued_ticks"].append(req.queued_ticks)
+            self._lat["queued_ticks"].record(req.queued_ticks)
             self.admitting[slot] = part
+            if tr is not None:
+                tr.request_admitted(req.request_id, slot, part.credit,
+                                    len(part.schedule))
             self._progressed = True   # claiming + staging IS progress
             # reset this slot's cursor/recurrent state before any chunk
             # runs (device table row = shared + fresh + forks)
@@ -1055,6 +1134,8 @@ class Engine:
             spent += cost
             if fin is not None:
                 finished.append(fin)
+        if tr is not None:
+            tr.end("scheduler")
         return finished
 
     def cancel(self, request_id: int) -> bool:
@@ -1068,12 +1149,16 @@ class Engine:
             if req.request_id == request_id:
                 self.scheduler.remove(req)
                 req.truncated = True
+                if self.tel is not None:
+                    self.tel.request_cancel(request_id, "queued")
                 return True
         for slot, part in list(self.admitting.items()):
             if part.req.request_id == request_id:
                 del self.admitting[slot]
                 self._unwind_slot(slot)
                 part.req.truncated = True
+                if self.tel is not None:
+                    self.tel.request_cancel(request_id, "prefill")
                 return True
         for slot, req in list(self.active.items()):
             if req.request_id == request_id:
@@ -1085,6 +1170,11 @@ class Engine:
     def _finish(self, slot: int):
         req = self.active.pop(slot)
         self.counters["finished_requests"] += 1
+        if self.tel is not None:
+            self.tel.request_finish(
+                req.request_id,
+                "truncated" if req.truncated else "finish",
+                len(req.output))
         if self.prefix is not None:
             # cache the finished sequence: every written KV row is valid
             # (prompt + all-but-the-last generated token have rows), and
@@ -1115,6 +1205,11 @@ class Engine:
         self._tick += 1
         self._progressed = False
         now = time.perf_counter()
+        tr = self.tel
+        if tr is not None:
+            tr.begin("tick", n=self._tick, active=len(self.active),
+                     admitting=len(self.admitting),
+                     queued=len(self.scheduler))
         finished: List[Request] = []
         for slot in list(self.active):
             req = self.active[slot]
@@ -1125,8 +1220,14 @@ class Engine:
                 finished.append(self._finish(slot))
                 log.debug("request %d hard-stopped at max_len/page cap",
                           req.request_id)
+        if tr is not None:
+            tr.begin("prefill_pass")
         finished.extend(self._run_prefills(self._prefill_quota(), now))
+        if tr is not None:
+            tr.end("prefill_pass")
         if not self.active:
+            if tr is not None:
+                tr.end("tick")
             return finished
         last = np.zeros((self.cfg.max_batch, 1), np.int32)
         for slot, req in self.active.items():
@@ -1140,6 +1241,8 @@ class Engine:
         # the full pool-capacity table.  Power-of-two buckets bound the
         # decode retraces by log2(pages_per_slot); tables are restored
         # afterwards (the decode step never rewrites them).
+        if tr is not None:
+            tr.begin("decode_step", batch=len(self.active))
         self._flush_tables("decode")
         last_dev = jnp.asarray(last)  # sync: required — the tick's last-token batch upload
         states_in, full_tables = self.states, None
@@ -1152,6 +1255,12 @@ class Engine:
             if hw not in self._decode_table_buckets:
                 self._decode_table_buckets.add(hw)
                 self._tune_decode_bucket(last_dev, states_in, sub)
+                if tr is not None:
+                    # first tick at this table width: attach kernel/plan
+                    # provenance (which launch config won the autotune,
+                    # and why) to the timeline + trace metadata
+                    tr.instant("decode_bucket", cat="plan", table_width=hw,
+                               **self._kernel_provenance())
         nxt, new_states = self._jit_decode(self.params, last_dev,
                                            states_in, sub)
         if full_tables is not None:
@@ -1179,6 +1288,8 @@ class Engine:
                 kv=kv._replace(length=length))
         self._progressed = True
         nxt = np.asarray(nxt)  # sync: required — the tick's one d2h readback (next tokens drive host finish logic)
+        if tr is not None:
+            tr.end("decode_step")
         for slot in list(self.active):
             req = self.active[slot]
             self._append_token(req, nxt[slot], now)
@@ -1188,6 +1299,8 @@ class Engine:
                         and req.output[-1] == req.eos_id))
             if done:
                 finished.append(self._finish(slot))
+        if tr is not None:
+            tr.end("tick")
         return finished
 
     def _warmup_decode(self) -> None:
@@ -1265,6 +1378,29 @@ class Engine:
             return          # gather path / interpret mode: nothing to time
         self._decode_step(self.params, last, states_in, key)
 
+    def _kernel_provenance(self) -> Dict[str, Any]:
+        """JSON-safe kernel/plan provenance for trace attribution: the
+        planner's chosen backend + reason, the registry's interpret
+        decision, and which launch config won each autotuned shape.
+        Called only under ``tel is not None`` at bucket-tune rate, never
+        on the steady-state tick path."""
+        from repro.kernels.ops import registry as kernel_registry
+
+        out: Dict[str, Any] = {
+            "backend": (self.decode_plan.backend
+                        if self.decode_plan is not None else None),
+            "plan_reason": (self.decode_plan.reason
+                            if self.decode_plan is not None else None),
+            "interpret": kernel_registry.interpret_for("paged"),
+        }
+        if kernel_registry.decisions:
+            out["decisions"] = {
+                str(k): {"choice": str(v.get("choice")),
+                         "source": v.get("source"),
+                         "native": v.get("native")}
+                for k, v in kernel_registry.decisions.items()}
+        return out
+
     def _decode_table_width(self) -> int:
         """Bucketed high-water page count across active AND mid-prefill
         slots: the widest block table any row needs for this tick's read
@@ -1281,11 +1417,17 @@ class Engine:
         return decode_table_width(longest, page_size=self.cfg.page_size,
                                   pages_per_slot=self.alloc.pages_per_slot)
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
+    def run_to_completion(self, max_ticks: int = 10_000,
+                          on_tick=None) -> List[Request]:
+        """Drive ticks until the engine drains.  ``on_tick(engine,
+        finished)`` runs after every tick — the launcher's ``--log-json``
+        hook; it must not submit or cancel (reentrancy is untested)."""
         done: List[Request] = []
         for _ in range(max_ticks):
             out = self.step()
             done.extend(out)
+            if on_tick is not None:
+                on_tick(self, out)
             if (not self.active and not self.admitting
                     and not len(self.scheduler)):
                 break
@@ -1310,15 +1452,42 @@ class Engine:
                 head_desc = (f"id={head.request_id}, "
                              f"prompt_len={len(head.prompt)}"
                              if head is not None else "deferred")
-                raise RuntimeError(
+                raise RuntimeError(self._dump_on_error(
                     f"engine cannot make progress: {len(self.scheduler)} "
                     f"request(s) queued (head: {head_desc}), "
                     f"{len(self.admitting)} mid-prefill, no active "
                     f"slots, and admission backed off or stalled"
                     + (f" [pages_in_use={self.alloc.pages_in_use}/"
                        f"{self.alloc.num_pages - 1}]" if self.paged else
-                       ""))
+                       "")))
+        self._check_compile_soundness()
         return done
+
+    def _dump_on_error(self, msg: str) -> str:
+        """Flight-recorder hook for engine error paths: dump the last K
+        events and append the dump path to the error message (telemetry
+        off: the message passes through untouched)."""
+        if self.tel is None or self.tel.ring is None:
+            return msg
+        path = dump_flight(self.tel, msg)
+        log.error("flight recorder dumped to %s", path)
+        return f"{msg} [flight recorder: {path}]"
+
+    def _check_compile_soundness(self) -> None:
+        """Measured-vs-proven compile cross-check at drain (the live
+        counterpart of ``analysis.serve.cross_check_bench``): a measured
+        compile count above the proven retrace budget means the static
+        enumeration missed a reachable signature — raise loudly, with
+        the flight recorder dumped for forensics."""
+        b = self.retrace_budget()
+        pm, dm = self.prefill_compiles, self.decode_compiles
+        if pm <= b["prefill_proven"] and dm <= b["decode_proven"]:
+            return
+        raise RuntimeError(self._dump_on_error(
+            f"SOUNDNESS BUG: measured compiles exceed the proven retrace "
+            f"budget (prefill {pm}/{b['prefill_proven']}, decode "
+            f"{dm}/{b['decode_proven']}) — the static enumeration missed "
+            f"a reachable trace signature"))
 
 
 def _reset_slot(states, slot: int):
